@@ -1,0 +1,34 @@
+"""Paper Figure 12: average bandwidth of CN0 vs number of added NICs (M)
+for the four Gloo patterns (Gather, Broadcast, All-to-All, Ring-Reduce).
+Bandwidth saturates when the bottleneck shifts to the CN processing rate,
+exactly as in the paper."""
+from __future__ import annotations
+
+from benchmarks.paper_workloads import proto_topo
+from repro.core.cost_model import CostModel
+
+NBYTES = 64 * 2**20
+CN_PROC_RATE = 12e9  # CN packetizing/processing ceiling (B/s)
+
+
+def run():
+    rows = []
+    for m in (0, 1, 2, 4, 8):
+        lanes = 1.0 + m / 2.0  # M NICs added to a 2-NIC pool
+        topo = proto_topo(theta=8, lanes=lanes)
+        cm = CostModel(topo)
+        for pattern, t in (
+            ("gather", cm.gather(NBYTES / 4)),
+            ("broadcast", cm.broadcast(NBYTES)),
+            ("all_to_all", cm.all_to_all(NBYTES / 4)),
+            ("ring_reduce", cm.ring_reduce_bw(NBYTES)),
+        ):
+            bw = min(NBYTES / t, CN_PROC_RATE)
+            rows.append((f"fig12/{pattern}_M{m}", t * 1e6,
+                         f"bw={bw/1e9:.2f}GBps"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

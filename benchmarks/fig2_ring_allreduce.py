@@ -1,0 +1,42 @@
+"""Paper Figure 2: ring all-reduce completion time under different
+bottlenecks — baseline NIC counts, the 10-NIC strawman pool, the memory
+wall (C1) and the no-DRAM-cache degradation (C2), vs optimal."""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel
+from repro.core.topology import HardwareSpec, TwoTierTopology
+
+NBYTES = 100 * 2**20  # 100 MiB gradient
+
+
+def run():
+    hw = HardwareSpec(ici_bw=50e9).with_ratio(10.0)
+    topo = TwoTierTopology(num_pods=2, pod_shape=(10,), hw=hw)  # 10-host racks
+    cm = CostModel(topo)
+    rows = []
+
+    def add(name, sec, derived=""):
+        rows.append((f"fig2/{name}", sec * 1e6, derived))
+
+    base1 = cm.flat_ring(NBYTES, nics_per_host=1).total_s
+    add("baseline_1nic", base1, "1.00x")
+    add("baseline_2nic", cm.flat_ring(NBYTES, nics_per_host=2).total_s,
+        f"{base1 / cm.flat_ring(NBYTES, nics_per_host=2).total_s:.2f}x")
+    add("baseline_3nic", cm.flat_ring(NBYTES, nics_per_host=3).total_s,
+        f"{base1 / cm.flat_ring(NBYTES, nics_per_host=3).total_s:.2f}x")
+    pool = cm.hierarchical(NBYTES, striped=True).total_s
+    add("dfabric_10nic_pool", pool, f"{base1 / pool:.2f}x")
+    opt = cm.optimal(NBYTES).total_s
+    add("optimal_fabric_only", opt, f"pool/opt={pool / opt:.2f}")
+    membw = cm.hierarchical(NBYTES, striped=True,
+                            mem_bw_limit=topo.pool_dcn_bw * 0.4).total_s
+    add("dfabric_memory_wall", membw, f"{membw / pool:.2f}x_of_pool")
+    nocache = cm.hierarchical(NBYTES, striped=True, cached=False).total_s
+    add("dfabric_no_dram_cache", nocache,
+        f"{nocache / pool:.2f}x_of_pool(paper~2.1x)")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,25 @@
+"""Paper Figure 9 (+10): per-application communication-time reduction vs
+NIC bandwidth B = C/theta, compared against the paper's reported numbers."""
+from __future__ import annotations
+
+from benchmarks.paper_workloads import PAPER_CLAIMS, WORKLOADS, sweep
+
+
+def run():
+    rows = []
+    for name in WORKLOADS:
+        s = sweep(name)
+        avg, worst = s["avg_reduction_pct"], s["worst_case_reduction_pct"]
+        p_avg, p_worst = PAPER_CLAIMS[name]
+        derived = f"avg={avg:.1f}%_paper={p_avg}%"
+        if p_worst is not None:
+            derived += f"_worst={worst:.1f}%_paper_worst={p_worst}%"
+        # us_per_call column = worst-case dfabric time for the workload
+        tb, td = WORKLOADS[name](8)
+        rows.append((f"fig9/{name}", td * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

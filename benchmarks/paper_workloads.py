@@ -1,0 +1,138 @@
+"""Communication traces of the paper's §6.2 workloads, driven through the
+DFabric cost model at the paper's prototype scale (2 racks x 2 CNs,
+interconnect:network ratio 10:1 at B=C).
+
+Each workload returns (t_baseline, t_dfabric) in seconds for a given NIC
+bandwidth setting theta (B = C / theta), mirroring Figure 9's x-axis.
+
+Trace assumptions (documented per DESIGN.md §8):
+  * LiveJournal PageRank: 4.8M vertices, 8B updates, 12 supersteps; CNs
+    finish asynchronously so each uses the pool exclusively (paper §6.2);
+    1/3 of peers are intra-rack (4 CNs, 2 racks).
+  * ResNet18 DDP: 11M fp32 params, Gloo ring all-reduce.
+  * TinyStories LLM: 1M fp32 params, all-to-all gradient exchange.
+  * WordCount: 3 mappers -> 1 reducer, 256 MB shuffle, incast at reducer.
+  * Redis: open-loop M/D/1 queueing at the NIC; DFabric spreads load over
+    the pool and pays far-memory latency (the paper's B=C crossover).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from repro.core.cost_model import CostModel
+from repro.core.topology import HardwareSpec, TwoTierTopology
+
+C_LINK = 50e9  # "CXL" fast-tier link rate in the prototype
+
+
+def proto_topo(theta: float, lanes: float = 1.0) -> TwoTierTopology:
+    """Paper Fig.9 x-axis: B = C/theta (theta=1 means NIC == fabric rate;
+    theta=8 is the most network-bottlenecked point)."""
+    hw = HardwareSpec(ici_bw=C_LINK, dcn_bw=C_LINK / theta,
+                      ici_latency=1e-6, dcn_latency=32.5e-6)
+    return TwoTierTopology(num_pods=2, pod_shape=(2,), hw=hw, dcn_lanes=lanes)
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+
+def pagerank(theta: float) -> Tuple[float, float]:
+    topo = proto_topo(theta)
+    V = 4.8e6 * 8  # bytes of vertex updates per CN per superstep
+    supersteps = 12
+    inter_frac = 2 / 3  # 2 of 3 peers are cross-rack
+    dcn = topo.hw.dcn_bw
+    # baseline: every CN pushes all updates through its own NIC
+    t_base = supersteps * V / dcn
+    # dfabric: intra-rack via fabric (pass-by-reference), cross-rack uses
+    # the whole pool exclusively (async supersteps)
+    t_df = supersteps * (V * inter_frac / (topo.pool_dcn_bw)
+                         + V * (1 - inter_frac) / topo.hw.ici_bw)
+    return t_base, t_df
+
+
+def resnet18_ddp(theta: float) -> Tuple[float, float]:
+    nbytes = 11e6 * 4
+    topo = proto_topo(theta)
+    cm = CostModel(topo)
+    t_base = cm.flat_ring(nbytes).total_s
+    t_df = cm.hierarchical(nbytes, striped=True).total_s
+    return t_base, t_df
+
+
+def llm_a2a(theta: float) -> Tuple[float, float]:
+    nbytes = 1e6 * 4
+    topo = proto_topo(theta)
+    cm = CostModel(topo)
+    # all-to-all gradient exchange; 50 rounds per epoch trace
+    t_base = 50 * cm.all_to_all(nbytes, striped=False)
+    t_df = 50 * cm.all_to_all(nbytes, striped=True)
+    return t_base, t_df
+
+
+def wordcount(theta: float) -> Tuple[float, float]:
+    topo = proto_topo(theta)
+    shuffle = 256e6  # bytes per mapper
+    dcn = topo.hw.dcn_bw
+    # 3 mappers -> 1 reducer; baseline incast at the reducer's single NIC;
+    # one mapper is intra-rack with the reducer
+    t_base = 3 * shuffle / dcn
+    t_df = 2 * shuffle / topo.pool_dcn_bw + shuffle / topo.hw.ici_bw
+    return t_base, t_df
+
+
+def redis_p99(theta: float, load: float = 0.3) -> Tuple[float, float]:
+    """Open-loop M/D/1 p99 sojourn at the bottleneck NIC, plus the paper's
+    incast mechanism: at high utilization the ToR baseline drops packets
+    (shallow 256KB port buffers) and the p99 absorbs retransmission
+    timeouts; DFabric's memory pool absorbs bursts (zero loss in-rack), but
+    pays the far-memory hop — hence the paper's B=C crossover where
+    DFabric's p99 is *worse* than the baseline."""
+    topo = proto_topo(theta)
+    req = 4096.0  # bytes per request burst
+    rto = 200e-6  # min retransmission timeout
+
+    # baseline: single NIC, full load; loss above ~60% utilization
+    svc = req / topo.hw.dcn_bw
+    rho = min(load * theta, 0.95)
+    wait = svc * rho / (2 * (1 - rho))
+    p_loss = max(0.0, min((rho - 0.5) / 0.5, 0.5))
+    t_base = 32.5e-6 + svc + 3.0 * wait + p_loss * rto
+
+    # dfabric: pool halves effective load; memory pool -> no loss; +6.5us far hop
+    svc_pool = req / topo.pool_dcn_bw
+    rho_d = min(load * theta / 2, 0.95)
+    wait_d = svc_pool * rho_d / (2 * (1 - rho_d))
+    t_df = 6.5e-6 + 32.5e-6 + svc_pool + 3.0 * wait_d
+    return t_base, t_df
+
+
+WORKLOADS = {
+    "pagerank": pagerank,
+    "resnet18_ddp": resnet18_ddp,
+    "llm_a2a": llm_a2a,
+    "wordcount": wordcount,
+    "redis_p99": redis_p99,
+}
+
+PAPER_CLAIMS = {  # average / worst-case communication-time reduction (%)
+    "pagerank": (32.1, 59.5),
+    "resnet18_ddp": (27.1, 54.1),
+    "llm_a2a": (34.7, None),
+    "wordcount": (31.1, None),
+    "redis_p99": (40.5, None),
+}
+
+
+def sweep(workload: str, thetas=(1, 2, 4, 8)) -> Dict[str, float]:
+    f = WORKLOADS[workload]
+    reds = []
+    for th in thetas:
+        tb, td = f(th)
+        reds.append(100.0 * (1 - td / tb))
+    return {"avg_reduction_pct": sum(reds) / len(reds),
+            "worst_case_reduction_pct": reds[-1],
+            "per_theta": dict(zip(thetas, reds))}

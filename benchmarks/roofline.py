@@ -1,0 +1,66 @@
+"""Roofline aggregation (deliverable (g)): reads the dry-run JSON artifacts
+and emits the per-(arch x shape x mesh) roofline table used by
+EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+DEFAULT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                           "results", "dryrun_baseline")
+
+
+def load(dirpath: str = DEFAULT_DIR) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[Dict], mesh: Optional[bool] = False) -> str:
+    """Markdown roofline table (single-pod rows unless mesh=True)."""
+    hdr = ("| arch | shape | mode | compute_s | memory_s | ici_s | dcn_s | "
+           "dominant | roofline_frac | MODEL/HLO |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in recs:
+        if r.get("skipped") or r.get("multi_pod") != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('mode','?')} "
+            f"| {rf['compute_s']:.4f} | {rf['memory_s']:.4f} "
+            f"| {rf['ici_s']:.4f} | {rf['dcn_s']:.4f} "
+            f"| {rf['dominant'].replace('_s','')} "
+            f"| {rf['roofline_fraction']:.3f} | {rf['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load()
+    rows = []
+    ok = [r for r in recs if r.get("ok") and not r.get("skipped")]
+    skipped = [r for r in recs if r.get("skipped")]
+    failed = [r for r in recs if not r.get("ok")]
+    rows.append(("roofline/cells_ok", 0.0, f"{len(ok)}"))
+    rows.append(("roofline/cells_skipped_long500k", 0.0, f"{len(skipped)}"))
+    rows.append(("roofline/cells_failed", 0.0, f"{len(failed)}"))
+    for r in ok:
+        if r.get("multi_pod"):
+            continue
+        rf = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                     rf["step_lower_bound_s"] * 1e6,
+                     f"dom={rf['dominant'].replace('_s','')}"
+                     f"_frac={rf['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    recs = load()
+    print(table(recs, mesh=False))
+    print()
+    print(table(recs, mesh=True))

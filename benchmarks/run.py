@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
+                            fig12_nic_scaling, fig13_timesharing, roofline,
+                            table4_breakdown)
+    modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
+               fig12_nic_scaling, fig13_timesharing, table4_breakdown, roofline]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception:
+            failed += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 4: throughput breakdown — each key design disabled, as a
+fraction of the full system (paper: TCP small queue 0.50, sequential TxQ
+polling 0.75, no DRAM cache 0.17).
+
+Our analogues: sub-flow chunking disabled (one monolithic DCN transfer ==
+serialized send queue), NIC-pool striping disabled (single root carries all
+cross-rack traffic == sequential polling), far-memory cache disabled (the
+2.1x degradation the paper measures)."""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel
+from repro.core.topology import HardwareSpec, TwoTierTopology
+
+NBYTES = 100 * 2**20
+
+
+def run():
+    # ratio-10 operating point on a 10-host rack (the Fig.2 setup), where
+    # the ICI and pooled-DCN legs are comparable — the regime the paper's
+    # breakdown was measured in
+    hw = HardwareSpec(ici_bw=50e9).with_ratio(10.0)
+    topo = TwoTierTopology(num_pods=2, pod_shape=(10,), hw=hw)
+    cm = CostModel(topo)
+    full = cm.hierarchical(NBYTES, striped=True, chunks=4, overlap=True).total_s
+    rows = [("table4/full_dfabric", full * 1e6, "1.00")]
+    # "disable TCP small queue" analogue: no sub-flow chunking -> the DCN
+    # transfer is one monolithic send, no overlap with the ICI legs
+    no_chunk = cm.hierarchical(NBYTES, striped=True, chunks=1).total_s
+    rows.append(("table4/no_subflow_chunking", no_chunk * 1e6,
+                 f"{full / no_chunk:.2f}_paper~0.50"))
+    # "SN loads TxQs sequentially" analogue: per-chunk dispatch serialized
+    # across the rack's CNs at the SN's polling latency
+    n_cn = topo.chips_per_pod
+    seq_poll = full + (n_cn - 1) * 4 * 32.5e-6
+    rows.append(("table4/sequential_txq_polling", seq_poll * 1e6,
+                 f"{full / seq_poll:.2f}_paper~0.75"))
+    # no NIC pool at all (root carries everything) — the paper's baseline
+    no_stripe = cm.hierarchical(NBYTES, striped=False).total_s
+    rows.append(("table4/no_pool_striping", no_stripe * 1e6,
+                 f"{full / no_stripe:.2f}_(vs_ToR_baseline)"))
+    # no DRAM cache: all far-memory traffic degrades ~2.1x (paper's
+    # measured slowdown at a 10:1 latency ratio; commercial CXL would be
+    # milder — paper §6.4)
+    no_cache = cm.hierarchical(NBYTES, striped=True, chunks=4, overlap=True,
+                               cached=False,
+                               mem_bw_limit=topo.pool_hbm_bw / 2.1).total_s
+    rows.append(("table4/no_dram_cache", no_cache * 1e6,
+                 f"{full / no_cache:.2f}_paper~0.17..0.48"))
+    comp = cm.hierarchical(NBYTES, striped=True, chunks=4, overlap=True,
+                           compression_ratio=4.0).total_s
+    rows.append(("table4/beyond_paper_int8_dcn", comp * 1e6,
+                 f"{no_chunk / comp:.2f}x_vs_unchunked"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,57 @@
+"""End-to-end driver (deliverable (b)): train a ~100M-param LM for a few
+hundred steps with the full production stack — DFabric ZeRO-1 gradient
+sync, checkpointing every 50 steps, straggler watchdog, preemption handler.
+
+    PYTHONPATH=src python examples/ddp_train.py [--steps 300]
+
+The model is a 12-layer, d=512 dense transformer (~103M params with its
+32k vocab).  On this CPU container a step takes a few seconds; pass
+--steps 30 for a quick look.
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import ModelSettings, build_model, count_params
+from repro.runtime.train_loop import Trainer, TrainerConfig
+
+ARCH_100M = ArchConfig(
+    name="ddp-100m", family="dense", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=8, d_ff=2048, vocab=32768, head_dim=64, activation="silu",
+    glu=True, norm="rmsnorm", tie_embeddings=True,
+    source="examples/ddp_train.py")
+
+
+class Shape:
+    global_batch, seq_len = 8, 256
+    name, kind = "ddp100m", "train"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ddp_ckpt")
+    args = ap.parse_args()
+
+    model = build_model(ARCH_100M, ModelSettings(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        loss_chunk=64, max_seq=256))
+    print(f"params: {count_params(model)/1e6:.1f}M")
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    cfg = TrainerConfig(steps=args.steps, lr=3e-4, warmup=20, log_every=10,
+                        mode="dfabric", zero1=True,
+                        ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    trainer = Trainer(model, mesh, Shape(), cfg)
+    trainer.install_preemption_handler()
+    out = trainer.train()
+    print(f"\ndone at step {out['step']}: "
+          f"loss {out['metrics'][0]['loss']:.3f} -> "
+          f"{out['metrics'][-1]['loss']:.3f}; "
+          f"ckpt latest = step {trainer.ckpt.latest_step() if trainer.ckpt else None}; "
+          f"straggler events = {len(out['straggler_events'])}")
+
+
+if __name__ == "__main__":
+    main()

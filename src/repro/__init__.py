@@ -1,0 +1,3 @@
+"""repro — DFabric (CXL-Ethernet hybrid interconnects) reproduced on TPU pods in JAX."""
+
+__version__ = "0.1.0"

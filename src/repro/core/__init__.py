@@ -1,0 +1,15 @@
+"""DFabric core: two-tier topology, cost model, collectives, planner."""
+from repro.core.topology import HardwareSpec, TwoTierTopology, production_topology
+from repro.core.cost_model import CostModel, CollectiveEstimate
+from repro.core.collectives import (
+    SyncConfig, dfabric_all_reduce, dfabric_all_to_all, dfabric_reduce_scatter,
+    pod_psum, ring_all_reduce)
+from repro.core.planner import Planner, SyncPlan, Section
+
+__all__ = [
+    "HardwareSpec", "TwoTierTopology", "production_topology",
+    "CostModel", "CollectiveEstimate",
+    "SyncConfig", "dfabric_all_reduce", "dfabric_all_to_all",
+    "dfabric_reduce_scatter", "pod_psum", "ring_all_reduce",
+    "Planner", "SyncPlan", "Section",
+]

@@ -1,0 +1,268 @@
+"""DFabric collectives — the paper's NIC pool + memory pool as JAX ops.
+
+All functions here run *inside* a ``jax.shard_map`` whose manual axes are the
+DP domain: ``fast_axis`` ("data", the intra-pod ICI tier == the paper's CXL
+fabric) and ``slow_axis`` ("pod", the inter-pod DCN tier == the paper's
+Ethernet).  The TP axis ("model") stays an auto (GSPMD) axis.
+
+The paper-faithful hierarchical all-reduce is::
+
+    reduce-scatter over ICI          (rack-level CXL fabric, §3 tier 1)
+    all-reduce over the pod axis     (every chip carries only 1/N_ici of
+                                      the payload over DCN simultaneously
+                                      == the NIC pool striping, §4.2/§4.4)
+    all-gather over ICI              (memory pool absorbs each shard into
+                                      its own HBM, §4.1)
+
+Beyond-paper extensions: chunked DCN legs (async-overlap-friendly, the
+MPTCP-subflow analogue), int8/top-k compression of the DCN leg only, and a
+fused ZeRO-1 update between the DCN leg and the final all-gather (the
+all-gather then carries *updated parameters*, saving one full ICI pass).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compression as comp
+
+# ---------------------------------------------------------------------------
+# Strategy description
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    """How one gradient bucket ("Section") is synchronized."""
+
+    strategy: str = "hier_striped"  # flat | hier_root | hier_striped
+    chunks: int = 1  # DCN sub-flows per Section (MPTCP analogue)
+    codec: Optional[str] = None  # None | "int8" | "topk"
+    codec_block: int = 2048
+    codec_k_frac: float = 0.0625
+    error_feedback: bool = True
+
+    def make_codec(self):
+        if self.codec == "int8":
+            return comp.Int8Codec(block=self.codec_block)
+        if self.codec == "topk":
+            return comp.TopKCodec(k_frac=self.codec_k_frac)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Axis helpers
+# ---------------------------------------------------------------------------
+
+
+def axis_size(axis_name) -> int:
+    try:
+        return lax.axis_size(axis_name)
+    except NameError:
+        return 1
+
+
+def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
+    if chunks <= 1:
+        return [x]
+    n = x.shape[0]
+    assert n % chunks == 0, (n, chunks)
+    return list(x.reshape(chunks, n // chunks))
+
+
+# ---------------------------------------------------------------------------
+# The NIC-pool leg: all-reduce over the slow (pod/DCN) axis
+# ---------------------------------------------------------------------------
+
+
+def pod_psum(x: jax.Array, slow_axis: Optional[str], cfg: SyncConfig,
+             ef: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """All-reduce ``x`` (this chip's ICI-scattered shard) over the pod axis.
+
+    Because the caller already reduce-scattered over ICI, every chip calls
+    this with a distinct 1/N_ici shard — i.e. all "NICs" of the pod cross
+    DCN at once.  ``cfg.chunks`` splits the transfer into independent
+    collectives (sub-flows) that XLA can run as overlapping async pairs.
+    """
+    if slow_axis is None or axis_size(slow_axis) == 1:
+        return x, ef
+    codec = cfg.make_codec()
+    if codec is None:
+        parts = _split_chunks(x, cfg.chunks)
+        outs = [lax.psum(p, slow_axis) for p in parts]
+        return jnp.concatenate(outs) if len(outs) > 1 else outs[0], ef
+    if isinstance(codec, comp.Int8Codec):
+        parts = _split_chunks(x, cfg.chunks)
+        efs = _split_chunks(ef, cfg.chunks) if ef is not None else [None] * len(parts)
+        outs, nefs = [], []
+        for p, e in zip(parts, efs):
+            o, ne = comp.compressed_psum_int8(p, slow_axis, codec, e)
+            outs.append(o)
+            nefs.append(ne)
+        out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+        nef = (jnp.concatenate(nefs) if len(nefs) > 1 else nefs[0]) if ef is not None else None
+        return out, nef
+    if isinstance(codec, comp.TopKCodec):
+        out, nef = comp.compressed_psum_topk(x, slow_axis, codec, ef)
+        return out, nef
+    raise ValueError(codec)
+
+
+# ---------------------------------------------------------------------------
+# Full hierarchical all-reduce (paper §3 workflow)
+# ---------------------------------------------------------------------------
+
+
+def dfabric_all_reduce(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
+                       cfg: SyncConfig, scatter_dim: int = 0,
+                       ef: Optional[jax.Array] = None,
+                       ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """All-reduce ``x`` over (fast_axis x slow_axis) with the DFabric plan.
+
+    ``x`` may be any rank; ``scatter_dim`` is the dimension scattered over
+    the ICI tier (must be divisible by the fast axis size).
+    """
+    if cfg.strategy == "flat":
+        axes = (fast_axis,) if slow_axis is None else (fast_axis, slow_axis)
+        return lax.psum(x, axes), ef
+    if cfg.strategy == "hier_root":
+        # no NIC pool: reduce to rack root, root alone crosses DCN.
+        # (modelled for the ablation; implemented as psum over fast axis
+        # followed by an un-scattered pod psum — every chip technically
+        # sends, but the payload is the FULL gradient, which is what makes
+        # the baseline slow; the cost model charges it to one NIC.)
+        y = lax.psum(x, fast_axis)
+        ef_flat = ef.reshape(-1) if ef is not None else None
+        y, ef_flat = pod_psum(y.reshape(-1), slow_axis, cfg, ef_flat)
+        return y.reshape(x.shape), (ef_flat.reshape(ef.shape) if ef is not None else None)
+    assert cfg.strategy == "hier_striped", cfg.strategy
+    nf = axis_size(fast_axis)
+    if x.shape[scatter_dim] % nf != 0:
+        # indivisible tensor: fall back to flat psum (tiny leaves only)
+        axes = (fast_axis,) if slow_axis is None else (fast_axis, slow_axis)
+        return lax.psum(x, axes), ef
+    # 1) ICI reduce-scatter
+    s = lax.psum_scatter(x, fast_axis, scatter_dimension=scatter_dim, tiled=True)
+    # 2) DCN striped all-reduce (the NIC pool) — flatten shard for chunking
+    shp = s.shape
+    ef_flat = ef.reshape(-1) if ef is not None else None
+    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat)
+    s2 = s2.reshape(shp)
+    # 3) ICI all-gather (memory pool absorbs shards at aggregate HBM bw)
+    out = lax.all_gather(s2, fast_axis, axis=scatter_dim, tiled=True)
+    return out, (ef_flat.reshape(ef.shape) if ef is not None else None)
+
+
+def dfabric_reduce_scatter(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
+                           cfg: SyncConfig, scatter_dim: int = 0,
+                           ef: Optional[jax.Array] = None):
+    """Like :func:`dfabric_all_reduce` but stops before the final ICI
+    all-gather — the caller owns the 1/N_ici shard (ZeRO-1 entry point)."""
+    nf = axis_size(fast_axis)
+    assert x.shape[scatter_dim] % nf == 0
+    s = lax.psum_scatter(x, fast_axis, scatter_dimension=scatter_dim, tiled=True)
+    shp = s.shape
+    ef_flat = ef.reshape(-1) if ef is not None else None
+    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat)
+    return s2.reshape(shp), (ef_flat.reshape(ef.shape) if ef is not None else None)
+
+
+def dfabric_all_gather(x: jax.Array, fast_axis: str, gather_dim: int = 0) -> jax.Array:
+    return lax.all_gather(x, fast_axis, axis=gather_dim, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Two-stage hierarchical all-to-all (the NIC pool applied to MoE dispatch /
+# shuffle traffic, paper §6.2 WordCount + our §Perf cell C future work)
+# ---------------------------------------------------------------------------
+
+
+def dfabric_all_to_all(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
+                       ) -> jax.Array:
+    """All-to-all over the (fast x slow) DP domain in two tiers.
+
+    ``x``: (n_fast * n_slow, chunk, ...) — row (f, s) holds the payload for
+    member (f, s) of the domain.  A flat all-to-all would move every
+    cross-pod row point-to-point over DCN; the hierarchical form first
+    exchanges *pod-addressed super-rows* over the fast tier so that each
+    chip's DCN transfer is a single contiguous stripe (every NIC of the
+    pod carries exactly its 1/n_fast of the cross-pod traffic — the pool),
+    then delivers within the destination pod over ICI.
+
+      stage 1 (ICI): all_to_all over fast_axis, grouped by destination pod
+      stage 2 (DCN): all_to_all over slow_axis of the pod-local stripes
+      stage 3 (ICI): all_to_all over fast_axis to the final member
+
+    Equivalent to ``lax.all_to_all(x, (slow, fast), 0, 0)`` numerically.
+    """
+    nf = axis_size(fast_axis)
+    ns = axis_size(slow_axis) if slow_axis else 1
+    assert x.shape[0] == nf * ns, (x.shape, nf, ns)
+    if slow_axis is None or ns == 1:
+        return lax.all_to_all(x, fast_axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    rest = x.shape[1:]
+    # rows ordered slow-major: row (s', f') -> destination member (s', f')
+    xs = x.reshape((ns, nf) + rest)
+    # stage 1 (ICI): exchange the fast sub-index within the pod; afterwards
+    # member (s, f) holds, from every source f_src of its own pod, the rows
+    # destined to fast-rank f of every pod — a contiguous pod-addressed
+    # stripe (this is what lets every NIC of the pod carry 1/n_fast of the
+    # cross-pod traffic)
+    y = lax.all_to_all(xs, fast_axis, split_axis=1, concat_axis=1, tiled=True)
+    # stage 2 (DCN): exchange the pod sub-index — each chip's stripe crosses
+    # the slow tier exactly once
+    y = lax.all_to_all(y, slow_axis, split_axis=0, concat_axis=0, tiled=True)
+    return y.reshape((ns * nf,) + rest)
+
+
+# ---------------------------------------------------------------------------
+# Explicit ring all-reduce via ppermute (used for >2 pods and in tests;
+# also the reference implementation of the paper's ring-Allreduce figure)
+# ---------------------------------------------------------------------------
+
+
+def ring_all_reduce(x: jax.Array, axis_name: str, n: int) -> jax.Array:
+    """Bandwidth-optimal ring all-reduce implemented with ppermute.
+
+    ``n`` must be the static size of ``axis_name``; ``x.shape[0]`` must be
+    divisible by ``n``.  Matches ``lax.psum`` numerically (up to fp
+    reassociation).
+    """
+    if n == 1:
+        return x
+    assert x.shape[0] % n == 0, (x.shape, n)
+    chunks = x.reshape(n, -1)
+    idx = lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter phase: after n-1 steps, rank i owns fully-reduced
+    # chunk (i+1) % n.
+    def send_chunk(c, k):
+        # chunk index this rank sends at step k: (idx - k) mod n
+        j = jnp.mod(idx - k, n)
+        return jnp.take(c, j, axis=0), j
+
+    acc = chunks
+    buf, j = send_chunk(acc, 0)
+    for k in range(n - 1):
+        recv = lax.ppermute(buf, axis_name, perm)
+        jr = jnp.mod(idx - k - 1, n)
+        acc = acc.at[jr].add(recv)
+        if k < n - 2:
+            buf = jnp.take(acc, jr, axis=0)
+    # all-gather phase
+    own = jnp.mod(idx + 1, n)
+    buf = jnp.take(acc, own, axis=0)
+    out = acc
+    for k in range(n - 1):
+        recv = lax.ppermute(buf, axis_name, perm)
+        jr = jnp.mod(own - k - 1, n)
+        out = out.at[jr].set(recv)
+        buf = recv
+    return out.reshape(x.shape)

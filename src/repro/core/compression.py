@@ -1,0 +1,136 @@
+"""Gradient compression for the slow (DCN / "Ethernet") tier.
+
+Beyond-paper optimization with a paper-faithful motivation: DFabric's whole
+point is that the slow tier is the bottleneck; compressing *only* the
+DCN leg of the hierarchical all-reduce buys bandwidth exactly where the
+paper says it is scarce, while the ICI legs stay exact.
+
+Two codecs:
+  * ``Int8Codec`` — per-block symmetric int8 quantization with error
+    feedback (EF-SGD style); 4x byte reduction on the DCN leg.
+  * ``TopKCodec`` — magnitude top-k sparsification with error feedback.
+
+Both are linear-enough under error feedback for SGD convergence; tests
+assert the EF invariant: encode(x + ef) + new_ef == x + ef (exactly for
+top-k, to quantization rounding for int8).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class Int8Codec:
+    """Symmetric per-block int8 quantizer."""
+
+    block: int = 2048
+
+    def encode(self, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """x: (n,) float -> (q: (n,) int8, scales: (n/block,) f32)."""
+        n = x.shape[0]
+        assert n % self.block == 0, (n, self.block)
+        xb = x.reshape(n // self.block, self.block)
+        scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-30)
+        q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+        return q.reshape(n), scale[:, 0].astype(jnp.float32)
+
+    def decode(self, q: jax.Array, scales: jax.Array) -> jax.Array:
+        n = q.shape[0]
+        qb = q.reshape(n // self.block, self.block).astype(jnp.float32)
+        return (qb * scales[:, None]).reshape(n)
+
+    def wire_bytes(self, n: int) -> int:
+        return n * 1 + (n // self.block) * 4
+
+    @property
+    def name(self) -> str:
+        return f"int8(b{self.block})"
+
+
+@dataclass(frozen=True)
+class TopKCodec:
+    """Magnitude top-k sparsifier. k_frac is the kept fraction."""
+
+    k_frac: float = 0.0625  # 1/16
+
+    def k_of(self, n: int) -> int:
+        return max(1, int(n * self.k_frac))
+
+    def encode(self, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        n = x.shape[0]
+        k = self.k_of(n)
+        vals, idx = lax.top_k(jnp.abs(x), k)
+        del vals
+        return x[idx], idx.astype(jnp.int32)
+
+    def decode(self, values: jax.Array, idx: jax.Array, n: int) -> jax.Array:
+        return jnp.zeros((n,), values.dtype).at[idx].add(values)
+
+    def wire_bytes(self, n: int) -> int:
+        return self.k_of(n) * 8  # fp32 value + int32 index
+
+    @property
+    def name(self) -> str:
+        return f"topk({self.k_frac})"
+
+
+# ---------------------------------------------------------------------------
+# Compressed psum over the slow axis (used inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def compressed_psum_int8(x: jax.Array, axis_name: str, codec: Int8Codec,
+                         ef: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Sum ``x`` over ``axis_name`` transferring int8 on the wire.
+
+    Implementation: each member quantizes its local shard, all-gathers the
+    quantized payloads over the slow axis (the NIC pool carries int8), and
+    dequantize-sums locally (the memory pool absorbs the gathered shards).
+    Error feedback: residual of *this member's own* quantization is
+    returned as the next ef state.  Inputs are zero-padded to a multiple of
+    the codec block (padding quantizes to exact zeros).
+    """
+    n0 = x.shape[0]
+    if ef is not None:
+        x = x + ef.astype(x.dtype)
+    pad = (-n0) % codec.block
+    xp = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)]) if pad else x
+    q, s = codec.encode(xp)
+    new_ef = (xp - codec.decode(q, s))[:n0] if ef is not None else None
+    qg = lax.all_gather(q, axis_name, axis=0)  # (P, n) int8 on the wire
+    sg = lax.all_gather(s, axis_name, axis=0)  # (P, n/block) f32
+    dec = jax.vmap(lambda qq, ss: codec.decode(qq, ss))(qg, sg)
+    out = jnp.sum(dec, axis=0)[:n0].astype(x.dtype)
+    return out, new_ef
+
+
+def compressed_psum_topk(x: jax.Array, axis_name: str, codec: TopKCodec,
+                         ef: Optional[jax.Array] = None
+                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    if ef is not None:
+        x = x + ef
+    vals, idx = codec.encode(x)
+    n = x.shape[0]
+    new_ef = x - codec.decode(vals, idx, n) if ef is not None else None
+    vg = lax.all_gather(vals, axis_name, axis=0)  # (P, k)
+    ig = lax.all_gather(idx, axis_name, axis=0)  # (P, k)
+    out = jnp.zeros((n,), x.dtype).at[ig.reshape(-1)].add(vg.reshape(-1).astype(x.dtype))
+    return out, new_ef
+
+
+def make_codec(kind: Optional[str], **kw):
+    if kind in (None, "none"):
+        return None
+    if kind == "int8":
+        return Int8Codec(**{k: v for k, v in kw.items() if k in ("block",)})
+    if kind == "topk":
+        return TopKCodec(**{k: v for k, v in kw.items() if k in ("k_frac",)})
+    raise ValueError(f"unknown codec {kind!r}")

@@ -1,0 +1,213 @@
+"""Analytic communication cost model for the two-tier DFabric topology.
+
+This is the LPPU's "brain": closed-form completion-time estimates for each
+collective strategy, used (a) by the planner to pick a strategy per gradient
+bucket, (b) by the benchmarks to reproduce the paper's Figures 2, 9, 10 and
+12, and (c) in the roofline analysis to attribute collective bytes to tiers.
+
+All formulas are standard alpha-beta (latency-bandwidth) models:
+  ring all-reduce over n members:  t = 2 (n-1)/n * B / bw + 2 (n-1) * lat
+with DFabric's striping changing *which* bandwidth the cross-pod leg sees.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.core.topology import TwoTierTopology
+
+
+def ring_all_reduce_time(nbytes: float, n: int, bw: float, lat: float) -> float:
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * nbytes / bw + 2.0 * (n - 1) * lat
+
+
+def ring_reduce_scatter_time(nbytes: float, n: int, bw: float, lat: float) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * nbytes / bw + (n - 1) * lat
+
+
+def all_gather_time(nbytes: float, n: int, bw: float, lat: float) -> float:
+    # gathering n shards that total nbytes
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * nbytes / bw + (n - 1) * lat
+
+
+def all_to_all_time(nbytes: float, n: int, bw: float, lat: float) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * nbytes / bw + (n - 1) * lat
+
+
+@dataclass(frozen=True)
+class CollectiveEstimate:
+    strategy: str
+    total_s: float
+    ici_s: float
+    dcn_s: float
+    dcn_bytes_per_chip: float
+    ici_bytes_per_chip: float
+    notes: str = ""
+
+
+class CostModel:
+    """Completion-time estimates for an all-reduce of ``nbytes`` (global
+    gradient size) over the DP domain of a :class:`TwoTierTopology`."""
+
+    def __init__(self, topo: TwoTierTopology):
+        self.topo = topo
+
+    # ---- effective tier rates ----------------------------------------------
+    def _dcn_rate_per_chip(self, mem_bw_limit: Optional[float] = None, cached: bool = True) -> float:
+        """Per-chip cross-pod rate, including the paper's C1 (memory wall)
+        and C2 (no DRAM cache => synchronous far loads, ~2.1x degradation)."""
+        hw = self.topo.hw
+        rate = hw.dcn_bw * self.topo.dcn_lanes
+        if mem_bw_limit is not None:
+            # NIC pool DMA throttled by host memory channels (paper C1):
+            # the pool's aggregate rate cannot exceed the memory bw.
+            rate = min(rate, mem_bw_limit / self.topo.chips_per_pod)
+        if not cached:
+            # paper Table 4 / Fig 2: without the DRAM cache, synchronous
+            # CXL.mem loads degrade throughput to ~1/2.1 (measured 2.1x
+            # slowdown when data lives in far memory).
+            rate = rate / 2.1
+        return rate
+
+    # ---- strategies ---------------------------------------------------------
+    def flat_ring(self, nbytes: float, nics_per_host: float = 1.0,
+                  mem_bw_limit: Optional[float] = None, cached: bool = True) -> CollectiveEstimate:
+        """ToR baseline: one flat ring over all DP members; every cross-pod
+        hop carries the full ring traffic over a single host's NIC(s)."""
+        topo, hw = self.topo, self.topo.hw
+        n = topo.total_chips
+        if topo.num_pods == 1:
+            t = ring_all_reduce_time(nbytes, n, hw.ici_bw, hw.ici_latency)
+            return CollectiveEstimate("flat_ring", t, t, 0.0, 0.0, 2 * (n - 1) / n * nbytes)
+        # ring crosses DCN 2*num_pods times; slowest link dominates the ring:
+        # each member forwards 2(n-1)/n * nbytes; cross-pod members do it at
+        # NIC speed (not pooled: nics_per_host NICs for that one host).
+        dcn_link = self._dcn_rate_per_chip(mem_bw_limit, cached) * nics_per_host
+        per_member = 2.0 * (n - 1) / n * nbytes
+        t_dcn = per_member / dcn_link
+        t_lat = 2.0 * (n - 1) * hw.ici_latency + 2.0 * topo.num_pods * hw.dcn_latency
+        t_ici = per_member / hw.ici_bw
+        t = max(t_dcn, t_ici) + t_lat
+        return CollectiveEstimate("flat_ring", t, t_ici, t_dcn, per_member, per_member,
+                                  notes=f"nics_per_host={nics_per_host}")
+
+    def hierarchical(self, nbytes: float, striped: bool = True, chunks: int = 1,
+                     compression_ratio: float = 1.0,
+                     mem_bw_limit: Optional[float] = None, cached: bool = True,
+                     overlap: bool = False) -> CollectiveEstimate:
+        """DFabric: reduce-scatter on ICI -> all-reduce over pods (striped
+        across the whole NIC pool) -> all-gather on ICI.
+
+        striped=False models a single "root" chip carrying the whole
+        cross-pod payload (no NIC pool).  compression_ratio>1 models the
+        DCN-tier gradient compression (beyond-paper).  overlap=True models
+        chunk-pipelining of the DCN leg with the ICI legs.
+        """
+        topo, hw = self.topo, self.topo.hw
+        n_ici = topo.chips_per_pod
+        P = topo.num_pods
+        t_rs = ring_reduce_scatter_time(nbytes, n_ici, hw.ici_bw, hw.ici_latency)
+        t_ag = all_gather_time(nbytes, n_ici, hw.ici_bw, hw.ici_latency)
+        if P == 1:
+            total = t_rs + t_ag
+            return CollectiveEstimate("hierarchical", total, total, 0.0, 0.0,
+                                      2 * (n_ici - 1) / n_ici * nbytes / n_ici * n_ici)
+        dcn_rate = self._dcn_rate_per_chip(mem_bw_limit, cached)
+        shard = nbytes / (n_ici if striped else 1)
+        dcn_bytes_per_chip = 2.0 * (P - 1) / P * shard / compression_ratio
+        t_dcn = dcn_bytes_per_chip / dcn_rate + 2.0 * (P - 1) * (hw.dcn_latency + chunks * 0.0)
+        t_dcn += (chunks - 1) * hw.dcn_latency * 2  # per-chunk launch latency
+        if overlap and chunks > 1:
+            # pipeline: ICI legs hide all but one chunk of the DCN leg (or
+            # vice versa, whichever dominates)
+            per_chunk_dcn = t_dcn / chunks
+            per_chunk_ici = (t_rs + t_ag) / chunks
+            total = max(t_dcn, t_rs + t_ag) + min(per_chunk_dcn, per_chunk_ici)
+        else:
+            total = t_rs + t_dcn + t_ag
+        name = "hier_striped" if striped else "hier_root"
+        if compression_ratio > 1.0:
+            name += "_comp"
+        if overlap and chunks > 1:
+            name += "_ovl"
+        ici_bytes = 2.0 * (n_ici - 1) / n_ici * nbytes / n_ici * 1.0
+        return CollectiveEstimate(name, total, t_rs + t_ag, t_dcn,
+                                  dcn_bytes_per_chip, ici_bytes,
+                                  notes=f"chunks={chunks} comp={compression_ratio}")
+
+    def optimal(self, nbytes: float) -> CollectiveEstimate:
+        """Lower bound: as if the fast interconnect spanned both pods
+        (paper Fig.2 'optimal')."""
+        topo, hw = self.topo, self.topo.hw
+        n = topo.total_chips
+        t = ring_all_reduce_time(nbytes, n, hw.ici_bw, hw.ici_latency)
+        return CollectiveEstimate("optimal", t, t, 0.0, 0.0, 2 * (n - 1) / n * nbytes)
+
+    # ---- other patterns (paper Fig. 12) -------------------------------------
+    def gather(self, nbytes_per_cn: float, striped: bool = True) -> float:
+        """CN0 receives from all other CNs (cross-pod part via NIC pool)."""
+        topo, hw = self.topo, self.topo.hw
+        remote = (topo.num_pods - 1) * topo.chips_per_pod * nbytes_per_cn
+        pool_bw = topo.pool_dcn_bw if striped else hw.dcn_bw * topo.dcn_lanes
+        # receiving side is one pod's pool; memory pool must absorb it
+        rate = min(pool_bw, topo.pool_hbm_bw)
+        local = (topo.chips_per_pod - 1) * nbytes_per_cn / hw.ici_bw
+        return remote / rate + local + hw.dcn_latency
+
+    def broadcast(self, nbytes: float, striped: bool = True) -> float:
+        topo, hw = self.topo, self.topo.hw
+        pool_bw = topo.pool_dcn_bw if striped else hw.dcn_bw * topo.dcn_lanes
+        cross = (topo.num_pods - 1) * nbytes / min(pool_bw, topo.pool_hbm_bw)
+        local = nbytes * (topo.chips_per_pod - 1) / topo.chips_per_pod / hw.ici_bw
+        return cross + local + hw.dcn_latency
+
+    def all_to_all(self, nbytes_per_cn: float, striped: bool = True) -> float:
+        """Every CN exchanges with every other CN (MoE dispatch / paper's
+        LLM gradient sync pattern). Cross-pod volume saturates the pool in
+        both directions simultaneously."""
+        topo, hw = self.topo, self.topo.hw
+        n = topo.total_chips
+        cross_frac = (topo.num_pods - 1) / topo.num_pods
+        cross_bytes_per_chip = nbytes_per_cn * cross_frac
+        rate = self._dcn_rate_per_chip() if striped else hw.dcn_bw / topo.chips_per_pod
+        t_cross = cross_bytes_per_chip / rate
+        t_local = nbytes_per_cn * (1 - cross_frac) / hw.ici_bw
+        return max(t_cross, t_local) + hw.dcn_latency + (n - 1) * hw.ici_latency
+
+    def ring_reduce_bw(self, nbytes: float, striped: bool = True) -> float:
+        """Paper Fig.12 'Ring-Reduce': send+receive simultaneously."""
+        est = self.hierarchical(nbytes, striped=striped)
+        return est.total_s
+
+    # ---- convenience ---------------------------------------------------------
+    def best(self, nbytes: float, chunks: int = 4,
+             compression_ratio: float = 1.0) -> CollectiveEstimate:
+        cands = [
+            self.flat_ring(nbytes),
+            self.hierarchical(nbytes, striped=False),
+            self.hierarchical(nbytes, striped=True),
+            self.hierarchical(nbytes, striped=True, chunks=chunks, overlap=True),
+        ]
+        if compression_ratio > 1.0:
+            cands.append(self.hierarchical(nbytes, striped=True, chunks=chunks,
+                                           overlap=True, compression_ratio=compression_ratio))
+        return min(cands, key=lambda e: e.total_s)
+
+    def summary(self, nbytes: float) -> Dict[str, float]:
+        return {
+            "flat_ring": self.flat_ring(nbytes).total_s,
+            "hier_root": self.hierarchical(nbytes, striped=False).total_s,
+            "hier_striped": self.hierarchical(nbytes, striped=True).total_s,
+            "hier_striped_ovl4": self.hierarchical(nbytes, striped=True, chunks=4, overlap=True).total_s,
+            "hier_striped_comp4": self.hierarchical(nbytes, striped=True, compression_ratio=4.0).total_s,
+            "optimal": self.optimal(nbytes).total_s,
+        }

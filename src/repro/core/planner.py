@@ -1,0 +1,225 @@
+"""The LPPU analogue: a control plane that plans gradient synchronization.
+
+The paper's LPPU owns the NIC pool's control plane — it maps sub-flows to
+NICs by queue depth and allocates pool memory (Sections / Buffers).  XLA
+programs are static, so the *dynamic per-packet* scheduling does not
+transfer (recorded in DESIGN.md §2); what does transfer is cost-driven
+planning at trace time:
+
+  * gradients are bucketed into **Sections** (paper §4.1 terminology),
+  * for each Section the planner consults the :class:`CostModel` and picks
+    a strategy (flat / hier_root / hier_striped), a chunk count
+    (sub-flows), and optionally a DCN codec,
+  * the plan is a static artifact — inspectable, serializable, and testable
+    without running anything.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.collectives import SyncConfig
+from repro.core.cost_model import CostModel
+from repro.core.topology import TwoTierTopology
+
+
+@dataclass(frozen=True)
+class Section:
+    """One sync unit: either a single large tensor or a bucket of small
+    flattened leaves (the paper's Section; leaves are its Buffers).
+
+    ``scatter_dim`` indexes the (TP-)LOCAL block shape — the sync runs
+    inside a nested model-manual shard_map (§Perf iteration 6), so all
+    shapes it sees are per-model-shard.  ``model_sharded`` marks sections
+    whose gradient is split over the TP axis (their global sq-norm needs an
+    extra psum over 'model')."""
+
+    name: str
+    leaf_paths: Tuple[str, ...]
+    numel: int
+    dtype: str
+    scatter_dim: int  # dimension scattered over the ICI tier (-1 = flat 1d)
+    sync: SyncConfig = SyncConfig()
+    model_sharded: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        return self.numel * jax.dtypes.canonicalize_dtype(self.dtype).itemsize
+
+
+@dataclass
+class SyncPlan:
+    sections: List[Section]
+    est_total_s: float = 0.0
+    est_dcn_bytes_per_chip: float = 0.0
+
+    def describe(self) -> str:
+        lines = [f"SyncPlan: {len(self.sections)} sections, "
+                 f"est {self.est_total_s*1e3:.3f} ms, "
+                 f"DCN {self.est_dcn_bytes_per_chip/2**20:.2f} MiB/chip"]
+        for s in self.sections:
+            lines.append(
+                f"  {s.name:40s} {s.numel:>12d} x {s.dtype:8s} "
+                f"{s.sync.strategy:>13s} chunks={s.sync.chunks} codec={s.sync.codec}")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps([
+            dict(name=s.name, numel=s.numel, dtype=s.dtype,
+                 strategy=s.sync.strategy, chunks=s.sync.chunks,
+                 codec=s.sync.codec, leaves=list(s.leaf_paths))
+            for s in self.sections
+        ], indent=2)
+
+
+class Planner:
+    """Plans one :class:`SyncPlan` for a gradient pytree."""
+
+    def __init__(self, topo: TwoTierTopology, *,
+                 fast_axis_size: Optional[int] = None,
+                 codec: Optional[str] = None,
+                 max_chunks: int = 8,
+                 min_chunk_numel: int = 1 << 16,
+                 strategy: str = "auto"):
+        self.topo = topo
+        self.cost = CostModel(topo)
+        self.nf = fast_axis_size or topo.chips_per_pod
+        self.codec = codec
+        self.max_chunks = max_chunks
+        self.min_chunk_numel = min_chunk_numel
+        self.strategy = strategy
+
+    # -- per-section decisions -------------------------------------------------
+    def _pick_scatter_dim(self, shape: Tuple[int, ...],
+                          avoid: frozenset = frozenset()) -> int:
+        """Largest dim divisible by the fast-axis size; -1 if none.
+
+        ``avoid`` holds dims already sharded over an auto (TP/FSDP) axis —
+        scattering those would force GSPMD regrouping, so they are only
+        used as a last resort.
+        """
+        best, best_dim = -1, -1
+        for d, s in enumerate(shape):
+            if d in avoid:
+                continue
+            if s % self.nf == 0 and s > best:
+                best, best_dim = s, d
+        return best_dim
+
+    def _pick_chunks(self, numel: int) -> int:
+        c = self.max_chunks
+        while c > 1 and (numel // c < self.min_chunk_numel or numel % c != 0):
+            c -= 1
+        return max(c, 1)
+
+    def _pick_strategy(self, nbytes: int) -> Tuple[str, int, Optional[str]]:
+        if self.strategy != "auto":
+            chunks = self._pick_chunks(nbytes // 4)
+            return self.strategy, chunks, self.codec
+        comp_ratio = 4.0 if self.codec == "int8" else (1.0 / 0.125 if self.codec == "topk" else 1.0)
+        ests = {
+            "flat": self.cost.flat_ring(nbytes).total_s,
+            "hier_root": self.cost.hierarchical(nbytes, striped=False).total_s,
+            "hier_striped": self.cost.hierarchical(nbytes, striped=True).total_s,
+        }
+        best = min(ests, key=ests.get)
+        chunks = 1
+        if best == "hier_striped":
+            ovl = self.cost.hierarchical(nbytes, striped=True, chunks=4, overlap=True)
+            if ovl.total_s < ests[best]:
+                chunks = 4
+        return best, chunks, self.codec
+
+    # -- public API -------------------------------------------------------------
+    def plan(self, shapes: Dict[str, jax.ShapeDtypeStruct],
+             bucket_bytes: int = 4 << 20,
+             avoid_dims: Optional[Dict[str, frozenset]] = None,
+             local_shapes: Optional[Dict[str, Tuple[int, ...]]] = None) -> SyncPlan:
+        """``shapes``: flat {path: ShapeDtypeStruct} of the gradient tree.
+
+        Large tensors become their own Section; small leaves are packed
+        into flat buckets of ~``bucket_bytes`` (2 MiB "huge page" Sections
+        in the paper; we default to 4 MiB).  ``avoid_dims`` marks dims
+        already sharded over auto axes (TP) per path; ``local_shapes``
+        gives the per-TP-shard block shapes the sync actually operates on
+        (divisibility decisions use these).
+        """
+        avoid_dims = avoid_dims or {}
+        local_shapes = local_shapes or {}
+        sections: List[Section] = []
+        small: List[Tuple[str, jax.ShapeDtypeStruct]] = []
+        for path, sds in sorted(shapes.items()):
+            nbytes = int(np.prod(sds.shape)) * sds.dtype.itemsize
+            lshape = tuple(local_shapes.get(path, sds.shape))
+            model_sharded = lshape != tuple(sds.shape)
+            if nbytes >= bucket_bytes or model_sharded:
+                strat, chunks, codec = self._pick_strategy(nbytes)
+                sd = self._pick_scatter_dim(lshape,
+                                            avoid_dims.get(path, frozenset()))
+                if sd < 0:
+                    strat, chunks = "flat", 1
+                numel = int(np.prod(sds.shape))
+                chunks = self._adjust_chunks(lshape, sd, chunks)
+                sections.append(Section(
+                    # '.'-separated name: section names are dict keys in the
+                    # sync state and must not collide with tree-path '/'
+                    name=path.replace("/", "."), leaf_paths=(path,),
+                    numel=numel, dtype=str(sds.dtype), scatter_dim=sd,
+                    sync=SyncConfig(strategy=strat, chunks=chunks, codec=codec),
+                    model_sharded=model_sharded))
+            else:
+                small.append((path, sds))
+        # pack small leaves into flat bucket Sections
+        bucket: List[Tuple[str, jax.ShapeDtypeStruct]] = []
+        bucket_numel = 0
+
+        def flush():
+            nonlocal bucket, bucket_numel
+            if not bucket:
+                return
+            numel = bucket_numel
+            strat, chunks, codec = self._pick_strategy(numel * 4)
+            sections.append(Section(
+                name=f"bucket[{bucket[0][0].replace('/', '.')}...x{len(bucket)}]",
+                leaf_paths=tuple(p for p, _ in bucket), numel=numel,
+                dtype="float32", scatter_dim=-1,
+                sync=SyncConfig(strategy=strat, chunks=1, codec=codec)))
+            bucket, bucket_numel = [], 0
+
+        for path, sds in small:
+            bucket.append((path, sds))
+            bucket_numel += int(np.prod(sds.shape))
+            if bucket_numel * 4 >= bucket_bytes:
+                flush()
+        flush()
+
+        plan = SyncPlan(sections)
+        # aggregate estimates
+        tot, dcn = 0.0, 0.0
+        for s in plan.sections:
+            ratio = 4.0 if s.sync.codec == "int8" else 1.0
+            est = (self.cost.flat_ring(s.nbytes) if s.sync.strategy == "flat"
+                   else self.cost.hierarchical(
+                       s.nbytes, striped=s.sync.strategy == "hier_striped",
+                       chunks=s.sync.chunks, overlap=s.sync.chunks > 1,
+                       compression_ratio=ratio))
+            tot += est.total_s
+            dcn += est.dcn_bytes_per_chip
+        plan.est_total_s = tot
+        plan.est_dcn_bytes_per_chip = dcn
+        return plan
+
+    def _adjust_chunks(self, shape, scatter_dim, chunks) -> int:
+        """Chunking flattens the ICI-scattered shard; ensure divisibility."""
+        if scatter_dim < 0:
+            return 1
+        numel = int(np.prod(shape)) // self.nf
+        c = min(chunks, self.max_chunks)
+        while c > 1 and numel % c != 0:
+            c -= 1
+        return c

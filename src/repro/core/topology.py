@@ -1,0 +1,95 @@
+"""Two-tier interconnect topology — the DFabric hardware model.
+
+The paper's rack = a TPU pod (fast tier, ICI / "CXL fabric"); the paper's
+inter-rack Ethernet = DCN between pods (slow tier).  All hardware constants
+are per-chip TPU v5e numbers per the brief, overridable for paper-figure
+reproduction (where the paper uses an interconnect:network ratio of 10:1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip hardware constants (defaults: TPU v5e per the brief)."""
+
+    peak_flops_bf16: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9  # B/s
+    hbm_bytes: float = 16e9  # HBM capacity per chip
+    ici_bw: float = 50e9  # B/s per ICI link ("CXL fabric" tier)
+    ici_links: int = 4  # links per chip (2D torus)
+    ici_latency: float = 1e-6  # s per hop
+    dcn_bw: float = 6.25e9  # B/s per chip ("Ethernet" tier: 25GB/s / 4-chip host)
+    dcn_latency: float = 10e-6  # s
+    mem_channels_bw: Optional[float] = None  # host local memory bw (paper's C1)
+    vmem_bytes: float = 128 * 2**20  # VMEM per chip (v5e: 128 MiB)
+
+    def with_ratio(self, ratio: float) -> "HardwareSpec":
+        """Set DCN so that ici_bw : dcn_bw = ratio (paper Fig.2 uses 10:1)."""
+        return replace(self, dcn_bw=self.ici_bw / ratio)
+
+
+@dataclass(frozen=True)
+class TwoTierTopology:
+    """``num_pods`` pods ("racks"), each with ``pod_shape`` chips on ICI.
+
+    ``dcn_lanes`` is the NIC-pool multiplicity knob: how many DCN "NICs"
+    each chip contributes to the pod's pool (paper's N + M added NICs,
+    normalized per chip).  ``striped=False`` models the ToR baseline where
+    only a single chip's NIC carries a cross-pod flow.
+    """
+
+    num_pods: int = 2
+    pod_shape: Tuple[int, ...] = (16, 16)  # (data, model)
+    hw: HardwareSpec = HardwareSpec()
+    dcn_lanes: float = 1.0
+
+    @property
+    def chips_per_pod(self) -> int:
+        n = 1
+        for s in self.pod_shape:
+            n *= s
+        return n
+
+    @property
+    def total_chips(self) -> int:
+        return self.num_pods * self.chips_per_pod
+
+    # ---- aggregate tier bandwidths ----------------------------------------
+    @property
+    def pool_dcn_bw(self) -> float:
+        """Aggregate cross-pod bandwidth of the whole NIC pool (per pod)."""
+        return self.chips_per_pod * self.hw.dcn_bw * self.dcn_lanes
+
+    @property
+    def pool_hbm_bw(self) -> float:
+        """Aggregate memory-pool bandwidth (per pod) — absorbs NIC-pool DMA."""
+        return self.chips_per_pod * self.hw.hbm_bw
+
+    @property
+    def ici_bisection_bw(self) -> float:
+        """Bisection bandwidth of the pod's ICI torus (both directions)."""
+        # 2D torus bisection: 2 * min_dim wrap links * 2 dirs
+        d = min(self.pod_shape) if len(self.pod_shape) > 1 else 1
+        return 4.0 * d * self.hw.ici_bw
+
+    def mesh_axis_tier(self, axis: str) -> str:
+        """Which physical tier a mesh axis name maps to."""
+        return "dcn" if axis == "pod" else "ici"
+
+    def replace(self, **kw) -> "TwoTierTopology":
+        return replace(self, **kw)
+
+
+# canonical production topologies per the brief
+def production_topology(multi_pod: bool = True) -> TwoTierTopology:
+    return TwoTierTopology(num_pods=2 if multi_pod else 1, pod_shape=(16, 16))
+
+
+# the paper's FPGA prototype, for figure reproduction: 2 racks x 2 CNs,
+# interconnect:network = 10:1
+def paper_prototype_topology(ratio: float = 10.0, dcn_lanes: float = 1.0) -> TwoTierTopology:
+    hw = HardwareSpec(ici_bw=50e9).with_ratio(ratio)
+    return TwoTierTopology(num_pods=2, pod_shape=(2,), hw=hw, dcn_lanes=dcn_lanes)

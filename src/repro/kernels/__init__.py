@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §6).
+
+Each kernel package ships kernel.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ops.py (jit'd model-layout wrapper, interpret=True off-TPU)
+and ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels import flash_attention, mamba_scan, quantize, wkv6
+
+__all__ = ["flash_attention", "mamba_scan", "quantize", "wkv6"]

@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+__all__ = ["ops", "ref", "flash_attention_fwd"]

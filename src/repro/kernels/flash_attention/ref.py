@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KV, S, hd). fp32 softmax, exact."""
+    B, H, S, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.mamba_scan import ops, ref
+from repro.kernels.mamba_scan.kernel import mamba_scan_fwd
+
+__all__ = ["ops", "ref", "mamba_scan_fwd"]

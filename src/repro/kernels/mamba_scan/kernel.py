@@ -1,0 +1,98 @@
+"""Mamba selective scan — Pallas TPU kernel.
+
+Recurrence per channel d and state s (A diagonal):
+
+    h_t = exp(delta_t[d] * A[d,s]) * h_{t-1} + delta_t[d] * B_t[s] * u_t[d]
+    y_t[d] = sum_s C_t[s] * h_t[d,s] + D[d] * u_t[d]
+
+TPU adaptation (DESIGN.md §6): mamba1's per-(channel,state) *diagonal*
+recurrence has no matmul to feed the MXU — the natural TPU mapping is a
+VPU-wide sequential loop over time with (block_d x d_state) lanes updated
+per step, tiled so each program owns a (block_d, d_state) state slab in
+VMEM.  The grid is (batch, d_blocks, time_chunks): channels are an
+embarrassingly parallel grid dimension (this is where the 16384-wide
+d_inner of Jamba parallelizes), the time axis is sequential with the state
+carried in scratch.  Chunking time bounds the VMEM residency of the
+(chunk, block_d) input tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+DEFAULT_BLOCK_D = 256
+
+
+def _mamba_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, h0_ref,
+                  y_ref, hT_ref, h_scr, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)      # (T, bd)
+    dt = dt_ref[0].astype(jnp.float32)    # (T, bd)
+    A = A_ref[...].astype(jnp.float32)    # (bd, ds)
+    Bc = B_ref[0].astype(jnp.float32)     # (T, ds)
+    Cc = C_ref[0].astype(jnp.float32)     # (T, ds)
+    D = D_ref[...].astype(jnp.float32)    # (bd,)
+
+    dA = jnp.exp(dt[:, :, None] * A[None])            # (T, bd, ds)
+    dBu = (dt * u)[:, :, None] * Bc[:, None, :]       # (T, bd, ds)
+
+    def step(t, carry):
+        h, y = carry
+        h = dA[t] * h + dBu[t]
+        yt = jnp.sum(h * Cc[t][None, :], axis=-1)     # (bd,)
+        y = jax.lax.dynamic_update_index_in_dim(y, yt, t, 0)
+        return h, y
+
+    y0 = jnp.zeros((chunk, u.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_scr[...], y0))
+    y_ref[0, ...] = (y + u * D[None, :]).astype(y_ref.dtype)
+    h_scr[...] = h
+
+    @pl.when(ic == nc - 1)
+    def _write_state():
+        hT_ref[0, ...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def mamba_scan_fwd(u, dt, A, Bc, Cc, D, h0, *, chunk: int = DEFAULT_CHUNK,
+                   block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+    """u, dt: (B, S, di); A: (di, ds); Bc, Cc: (B, S, ds); D: (di,);
+    h0: (B, di, ds).  Returns (y (B,S,di) fp32, hT (B,di,ds) fp32)."""
+    B, S, di = u.shape
+    ds = A.shape[1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, di)
+    assert S % chunk == 0 and di % block_d == 0
+    nc, nd = S // chunk, di // block_d
+    grid = (B, nd, nc)
+
+    chan_spec = pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d))
+    st_spec = pl.BlockSpec((1, chunk, ds), lambda b, d, c: (b, c, 0))
+    A_spec = pl.BlockSpec((block_d, ds), lambda b, d, c: (d, 0))
+    D_spec = pl.BlockSpec((block_d,), lambda b, d, c: (d,))
+    h_spec = pl.BlockSpec((1, block_d, ds), lambda b, d, c: (b, d, 0))
+
+    y, hT = pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[chan_spec, chan_spec, A_spec, st_spec, st_spec, D_spec, h_spec],
+        out_specs=[chan_spec, h_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, S, di), jnp.float32),
+                   jax.ShapeDtypeStruct((B, di, ds), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(u, dt, A, Bc, Cc, D, h0)
+    return y, hT

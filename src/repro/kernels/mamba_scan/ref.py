@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the mamba selective scan (sequential, fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def mamba_scan_ref(u, dt, A, Bc, Cc, D, h0):
+    """u, dt: (B, S, di); A: (di, ds); Bc, Cc: (B, S, ds); D: (di,);
+    h0: (B, di, ds). Returns (y (B,S,di) fp32, hT (B,di,ds) fp32)."""
+    u, dt, Bc, Cc = (a.astype(jnp.float32) for a in (u, dt, Bc, Cc))
+    A = A.astype(jnp.float32)
+    D = D.astype(jnp.float32)
+
+    def step(h, inp):
+        ut, dtt, bt, ct = inp
+        dA = jnp.exp(dtt[..., None] * A[None])
+        dBu = dtt[..., None] * bt[:, None, :] * ut[..., None]
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, ct) + D * ut
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (u, dt, Bc, Cc))
+    hT, ys = lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), hT

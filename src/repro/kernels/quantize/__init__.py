@@ -1,0 +1,4 @@
+from repro.kernels.quantize import ops, ref
+from repro.kernels.quantize.kernel import quantize_ef_fwd
+
+__all__ = ["ops", "ref", "quantize_ef_fwd"]

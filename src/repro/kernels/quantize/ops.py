@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the fused quantize kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quantize.kernel import quantize_ef_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantize_ef(x: jax.Array, *, block: int = 2048):
+    return quantize_ef_fwd(x, block=block, interpret=not _on_tpu())

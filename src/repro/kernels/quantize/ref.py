@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused int8 quantization with error feedback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Int8Codec
+
+
+def quantize_ef_ref(x: jax.Array, *, block: int = 2048):
+    codec = Int8Codec(block=block)
+    q, s = codec.encode(x)
+    err = x.astype(jnp.float32) - codec.decode(q, s)
+    return q, s, err

@@ -1,0 +1,4 @@
+from repro.kernels.wkv6 import ops, ref
+from repro.kernels.wkv6.kernel import wkv6_fwd
+
+__all__ = ["ops", "ref", "wkv6_fwd"]

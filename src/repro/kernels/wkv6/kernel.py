@@ -1,0 +1,115 @@
+"""WKV6 (RWKV6 "Finch" recurrence) — Pallas TPU kernel, chunked form.
+
+The recurrence (per head, key-dim i, value-dim j):
+
+    y_t[j]  = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t     = diag(w_t) S_{t-1} + k_t v_t^T
+
+TPU adaptation: a sequential scan over length-``chunk`` tiles with the
+(hd x hd) state held in VMEM scratch across grid steps.  Within a chunk the
+data-dependent decays are折 into an intra-chunk "attention" tensor
+A[t,s,i] = r_t[i] k_s[i] exp(L_{t-1,i} - L_{s,i}) (L = cumulative log
+decay), materialized at (chunk, chunk, hd) in VMEM — for chunk=32, hd=64
+that is a 256 KB fp32 tile.  The inter-chunk contribution and the state
+update are plain (chunk x hd) @ (hd x hd) MXU matmuls.  Chunk size bounds
+the dynamic range of exp(L_t - L_s), keeping fp32 exact w.r.t. the
+sequential oracle.
+
+Grid: (B, H, n_chunks); the chunk axis is sequential ("arbitrary") so the
+state scratch carries across chunks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 32
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+                 s_scr, *, chunk: int):
+    ic = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)  # (T, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)  # (hd,)
+    S = s_scr[...]  # (hd, hd) state: rows = key dim, cols = value dim
+
+    # cumulative log decay L_t = sum_{s<=t} log w_s   (T, hd)
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    L = jnp.cumsum(logw, axis=0)
+    Lprev = L - logw  # L_{t-1} convention: decay applied up to t-1 *within chunk*
+
+    # inter-chunk: y_inter[t] = (r_t * exp(Lprev_t)) @ S
+    r_dec = r * jnp.exp(Lprev)
+    y = jax.lax.dot(r_dec, S, preferred_element_type=jnp.float32)  # (T, hd_v)
+
+    # intra-chunk: pairwise decay  A[t,s] = sum_i r_t[i] k_s[i] e^{Lprev_t - L_s}  (s < t)
+    #              diagonal bonus  A[t,t] = sum_i r_t[i] u[i] k_t[i]
+    # The mask is applied to the EXPONENT (upper-triangle exponents are
+    # positive and overflow to inf, and inf * 0 = NaN if masked after exp).
+    T = chunk
+    rk = r[:, None, :] * k[None, :, :]  # (T, S=T, hd)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+           > jax.lax.broadcasted_iota(jnp.int32, (T, T), 1))  # strict lower
+    diff = Lprev[:, None, :] - L[None, :, :]  # (T, T, hd)
+    diff = jnp.where(tri[:, :, None], diff, -jnp.inf)
+    A = jnp.sum(rk * jnp.exp(diff), axis=-1)
+    diag = jnp.sum(r * u[None, :] * k, axis=-1)  # (T,)
+    eye = (jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+           == jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)).astype(jnp.float32)
+    A = A + eye * diag[:, None]
+    y = y + jax.lax.dot(A, v, preferred_element_type=jnp.float32)
+    y_ref[0, 0, ...] = y.astype(y_ref.dtype)
+
+    # state update: S' = diag(e^{L_T}) S + sum_s (k_s e^{L_T - L_s}) v_s^T
+    LT = L[-1]  # (hd,)
+    k_dec = k * jnp.exp(LT[None, :] - L)  # (T, hd)
+    S_new = jnp.exp(LT)[:, None] * S + jax.lax.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+    s_scr[...] = S_new
+
+    @pl.when(ic == nc - 1)
+    def _write_state():
+        sT_ref[0, 0, ...] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_fwd(r, k, v, w, u, s0, *, chunk: int = DEFAULT_CHUNK,
+             interpret: bool = True):
+    """r,k,v,w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd).
+    Returns y (B, H, S, hd) fp32, final state (B, H, hd, hd) fp32."""
+    B, H, S, hd = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    grid = (B, H, nc)
+
+    seq_spec = pl.BlockSpec((1, 1, chunk, hd), lambda b, h, c: (b, h, c, 0))
+    u_spec = pl.BlockSpec((1, hd), lambda b, h, c: (h, 0))
+    s_spec = pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0))
+
+    y, sT = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec, u_spec, s_spec],
+        out_specs=[seq_spec, s_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, sT

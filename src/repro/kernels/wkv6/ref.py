@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for WKV6: sequential recurrence in fp32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r,k,v,w: (B, H, S, hd); u: (H, hd); s0: (B, H, hd, hd).
+    Returns (y (B,H,S,hd) fp32, final state (B,H,hd,hd) fp32)."""
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    s0 = s0.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw  # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, hd, hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (r, k, v, w))  # (S, B, H, hd)
+    sT, ys = lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 2), sT

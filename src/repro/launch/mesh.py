@@ -1,0 +1,37 @@
+"""Production mesh construction (DESIGN.md §4).
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The multi-pod mesh adds
+the leading "pod" axis — the DCN tier; ("data", "model") span one pod's ICI.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         devices: Optional[Sequence] = None):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    if devices is None:
+        devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            f"dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_test_mesh(shape: Sequence[int] = (2, 2, 2),
+                   axes: Sequence[str] = ("pod", "data", "model")):
+    """Small mesh for CPU tests (requires forced host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(shape))

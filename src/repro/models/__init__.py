@@ -1,0 +1,5 @@
+from repro.models.registry import Model, ModelSettings, build_model, count_active_params, count_params
+from repro.models.sharding import MeshInfo
+
+__all__ = ["Model", "ModelSettings", "build_model", "count_params",
+           "count_active_params", "MeshInfo"]

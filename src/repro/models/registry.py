@@ -1,0 +1,111 @@
+"""Public model API: build everything for an (arch, shape) cell."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.sharding import MeshInfo, batch_specs, cache_specs, param_specs
+from repro.models.transformer import ModelSettings
+
+__all__ = [
+    "ModelSettings", "build_model", "Model", "count_params", "count_active_params",
+]
+
+
+@dataclass
+class Model:
+    arch: ArchConfig
+    settings: ModelSettings
+
+    # --- parameters ----------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        return T.init_params(self.arch, key, self.settings)
+
+    def param_shapes(self) -> Dict[str, Any]:
+        return jax.eval_shape(lambda k: T.init_params(self.arch, k, self.settings),
+                              jax.random.key(0))
+
+    # --- steps -----------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        return T.train_loss(self.arch, params, batch, self.settings)
+
+    def prefill(self, params, tokens, frames=None):
+        return T.prefill(self.arch, params, tokens, self.settings, frames=frames)
+
+    def decode_step(self, params, cache, tokens, pos):
+        return T.decode_step(self.arch, params, cache, tokens, pos, self.settings)
+
+    def init_cache(self, batch: int, max_seq: int, n_frames: Optional[int] = None):
+        return T.init_cache(self.arch, batch, max_seq, self.settings,
+                            n_frames=n_frames)
+
+    def cache_shapes(self, batch: int, max_seq: int, n_frames: Optional[int] = None):
+        return jax.eval_shape(
+            lambda: T.init_cache(self.arch, batch, max_seq, self.settings,
+                                 n_frames=n_frames))
+
+    # --- sharding ----------------------------------------------------------------
+    def param_specs(self, mi: MeshInfo):
+        return param_specs(self.arch, self.param_shapes(), mi)
+
+    def batch_specs(self, mi: MeshInfo):
+        return batch_specs(self.arch, mi)
+
+    def cache_specs(self, mi: MeshInfo, batch: int, max_seq: int,
+                    n_frames: Optional[int] = None):
+        shapes = self.cache_shapes(batch, max_seq, n_frames=n_frames)
+        return cache_specs(self.arch, shapes, mi, batch)
+
+    # --- inputs -------------------------------------------------------------------
+    def synthetic_batch(self, key, shape: ShapeConfig) -> Dict[str, jax.Array]:
+        B, S = shape.global_batch, shape.seq_len
+        ks = jax.random.split(key, 2)
+        batch = {
+            "tokens": jax.random.randint(ks[0], (B, S), 0, self.arch.vocab, jnp.int32),
+            "labels": jax.random.randint(ks[1], (B, S), 0, self.arch.vocab, jnp.int32),
+        }
+        if self.arch.is_encdec:
+            batch["frames"] = jax.random.normal(
+                ks[0], (B, self.arch.encoder.n_frames, self.arch.d_model),
+                jnp.dtype(self.settings.compute_dtype))
+        return batch
+
+
+def build_model(arch: ArchConfig, settings: Optional[ModelSettings] = None,
+                **overrides) -> Model:
+    st = settings or ModelSettings()
+    if overrides:
+        import dataclasses
+        st = dataclasses.replace(st, **overrides)
+    return Model(arch=arch, settings=st)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (exact, from shapes) — used for MODEL_FLOPS = 6*N*D
+# ---------------------------------------------------------------------------
+
+
+def count_params(model: Model) -> int:
+    shapes = model.param_shapes()
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def count_active_params(model: Model) -> int:
+    """Active params per token (MoE: only top-k routed experts count)."""
+    arch = model.arch
+    shapes = model.param_shapes()
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", k)) for k in path)
+        n = int(np.prod(leaf.shape))
+        if arch.moe is not None and ("we_in" in p or "we_out" in p or "we_gate" in p):
+            n = int(n * arch.moe.top_k / arch.moe.num_experts)
+        total += n
+    return total

@@ -1,0 +1,239 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Design (DESIGN.md §4): the mesh is (pod, data, model).  TP ("model") shards
+heads / ffn / experts / vocab; FSDP (over "data") is enabled for archs whose
+optimizer state cannot be replicated within a pod (nemotron-340b,
+jamba-398b).  The DFabric explicit-DP mode treats pod+data as manual axes,
+so param specs only ever mention the auto axes (model [+ data for FSDP]).
+
+Rules are name+shape driven and *divisibility-guarded*: a dim is sharded
+only if divisible by the axis size (e.g. qwen2's 14 heads stay replicated
+over a 16-way model axis while its d_ff=4864 and vocab shard cleanly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def _div(n: int, size: Optional[int]) -> bool:
+    return size is not None and size > 0 and n % size == 0
+
+
+class MeshInfo:
+    """Axis names & sizes the rules need (decoupled from jax Mesh so the
+    planner/tests can use it without devices).
+
+    ``tp_scope``: "full" shards attention/mlp/experts over the TP axis;
+    "embed_only" keeps the embedding/lm_head vocab-sharded but replicates
+    the blocks (the context-parallel configuration for small archs, §Perf).
+    """
+
+    def __init__(self, axis_sizes: Dict[str, int], tp_axis: str = "model",
+                 fsdp_axis: Optional[str] = None, dp_axes: Tuple[str, ...] = ("data",),
+                 tp_scope: str = "full", embed_tp: bool = True):
+        self.axis_sizes = dict(axis_sizes)
+        self.tp = tp_axis
+        self.fsdp = fsdp_axis
+        self.dp_axes = tuple(a for a in dp_axes if a in self.axis_sizes)
+        self.tp_scope = tp_scope
+        # vocab-sharded embeddings force full-tensor regather in the
+        # explicit-DP grad sync (§Perf iteration 5) — replicable tables
+        # (<= ~1 GB bf16 for every assigned arch) are cheaper replicated
+        self.embed_tp = embed_tp
+
+    def size(self, axis: Optional[str]) -> int:
+        return self.axis_sizes.get(axis, 1) if axis else 1
+
+    @property
+    def dp_total(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.axis_sizes[a]
+        return n
+
+
+def _spec_for_leaf(arch: ArchConfig, path: str, shape: Tuple[int, ...],
+                   mi: MeshInfo) -> P:
+    tp, fsdp = mi.tp, mi.fsdp
+    ntp, nf = mi.size(tp), mi.size(fsdp)
+    name = path.split("/")[-1]
+
+    def guard(dim_size, axis, n):
+        return axis if _div(dim_size, n) else None
+
+    # ---- top-level tensors --------------------------------------------------
+    etp, netp = (tp, ntp) if mi.embed_tp else (None, 1)
+    if name == "embed":
+        return P(guard(shape[0], etp, netp), guard(shape[1], fsdp, nf))
+    if name == "lm_head":
+        return P(guard(shape[0], fsdp, nf), guard(shape[1], etp, netp))
+    if name == "pos_embed":
+        return P(None, guard(shape[1], etp, netp))
+
+    # context-parallel configuration: blocks replicated over the TP axis
+    if mi.tp_scope == "embed_only":
+        tp, ntp = None, 1
+
+    # strip the group-stack leading dim for block params
+    stacked = "blocks/" in path or "enc_blocks/" in path
+    core = shape[1:] if stacked else shape
+
+    def wrap(spec: P) -> P:
+        return P(None, *spec) if stacked else spec
+
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # ---- attention -----------------------------------------------------------
+    if parent in ("attn", "xattn"):
+        if name == "wq":
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp), None))
+        if name in ("wk", "wv"):
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp), None))
+        if name == "wo":
+            return wrap(P(guard(core[0], tp, ntp), None, guard(core[2], fsdp, nf)))
+        if name == "bq":
+            return wrap(P(guard(core[0], tp, ntp), None))
+        if name in ("bk", "bv"):
+            return wrap(P(guard(core[0], tp, ntp), None))
+        if name in ("q_norm", "k_norm"):
+            return wrap(P(None))
+
+    # ---- MoE -----------------------------------------------------------------
+    if parent == "moe" or name in ("we_in", "we_out", "we_gate", "router"):
+        if name == "router":
+            return wrap(P(guard(core[0], fsdp, nf), None))
+        if name in ("we_in", "we_gate"):
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf), None))
+        if name == "we_out":
+            return wrap(P(guard(core[0], tp, ntp), None, guard(core[2], fsdp, nf)))
+    if parent == "shared" or "/shared/" in path:
+        if name in ("wi", "wg"):
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp)))
+        if name == "wo":
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf)))
+
+    # ---- dense MLP -----------------------------------------------------------
+    if parent == "mlp":
+        if name in ("wi", "wg"):
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp)))
+        if name == "wo":
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf)))
+
+    # ---- mamba ---------------------------------------------------------------
+    if parent == "mamba":
+        if name == "w_in":
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp)))
+        if name == "conv_w":
+            return wrap(P(None, guard(core[1], tp, ntp)))
+        if name in ("conv_b", "dt_bias", "D"):
+            return wrap(P(guard(core[0], tp, ntp)))
+        if name == "w_x":
+            return wrap(P(guard(core[0], tp, ntp), None))
+        if name == "w_dt":
+            return wrap(P(None, guard(core[1], tp, ntp)))
+        if name == "A_log":
+            return wrap(P(guard(core[0], tp, ntp), None))
+        if name == "w_out":
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf)))
+
+    # ---- rwkv ----------------------------------------------------------------
+    if parent == "tmix":
+        if name in ("wr", "wk", "wv", "wg"):
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp)))
+        if name == "wo":
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf)))
+        if name == "u":
+            return wrap(P(guard(core[0], tp, ntp), None))
+        return wrap(P(*(None,) * len(core)))
+    if parent == "cmix":
+        if name == "wk":
+            return wrap(P(guard(core[0], fsdp, nf), guard(core[1], tp, ntp)))
+        if name == "wv":
+            return wrap(P(guard(core[0], tp, ntp), guard(core[1], fsdp, nf)))
+        if name == "wr":
+            return wrap(P(guard(core[0], fsdp, nf), None))
+
+    # ---- norms, biases, everything small --------------------------------------
+    return wrap(P(*(None,) * len(core)))
+
+
+def _tree_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            flat[prefix] = node
+    walk("", tree)
+    return flat
+
+
+def param_specs(arch: ArchConfig, params, mi: MeshInfo):
+    """Pytree of PartitionSpec matching ``params``."""
+    def spec_of(path_entries, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_entries)
+        shape = np.shape(leaf) if not hasattr(leaf, "shape") else tuple(leaf.shape)
+        return _spec_for_leaf(arch, path, tuple(shape), mi)
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def batch_specs(arch: ArchConfig, mi: MeshInfo) -> Dict[str, P]:
+    dp = mi.dp_axes if len(mi.dp_axes) > 1 else (mi.dp_axes[0] if mi.dp_axes else None)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if arch.is_encdec:
+        specs["frames"] = P(dp, None, None)
+    return specs
+
+
+def cache_specs(arch: ArchConfig, cache, mi: MeshInfo, batch: int):
+    """Shape-aware cache sharding: batch over DP if divisible, else the
+    sequence dim over 'data' (context-parallel long decode), heads over TP
+    when divisible."""
+    ntp = mi.size(mi.tp)
+    dp = mi.dp_axes if len(mi.dp_axes) > 1 else (mi.dp_axes[0] if mi.dp_axes else None)
+    dp_total = mi.dp_total
+    data_axis = mi.dp_axes[-1] if mi.dp_axes else None
+    ndata = mi.size(data_axis)
+
+    def spec_of(path_entries, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_entries)
+        shape = tuple(leaf.shape)
+        name = path.split("/")[-1]
+        # leading dim is the group stack
+        core = shape[1:]
+        if name in ("k", "v", "xk", "xv"):
+            b, s, kv, hd = core
+            bspec = dp if _div(b, dp_total) else None
+            sspec = data_axis if (bspec is None and _div(s, ndata)) else None
+            kvspec = mi.tp if _div(kv, ntp) else None
+            return P(None, bspec, sspec, kvspec, None)
+        if name == "ssm":
+            b, di, ds = core
+            bspec = dp if _div(b, dp_total) else None
+            dspec = mi.tp if _div(di, ntp) else None
+            return P(None, bspec, dspec, None)
+        if name == "conv":
+            b, k, di = core
+            bspec = dp if _div(b, dp_total) else None
+            dspec = mi.tp if _div(di, ntp) else None
+            return P(None, bspec, None, dspec)
+        if name == "wkv":
+            b, h, hk, hv = core
+            bspec = dp if _div(b, dp_total) else None
+            hspec = mi.tp if _div(h, ntp) else None
+            return P(None, bspec, hspec, None, None)
+        if name in ("tshift", "cshift"):
+            b, d = core
+            bspec = dp if _div(b, dp_total) else None
+            return P(None, bspec, None)
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)

@@ -1,0 +1,284 @@
+"""Attention-free sequence mixers: RWKV6 ("Finch") and Mamba (Jamba's SSM).
+
+Both expose:
+  * ``init_*``            parameter construction
+  * ``apply_*_train``     full-sequence form (lax.scan over time; the Pallas
+                          chunked kernels in ``repro.kernels`` are the TPU
+                          hot-path, these are the XLA fallbacks used by the
+                          dry-run)
+  * ``apply_*_decode``    single-step recurrent form with explicit state
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, _act
+
+Params = Dict[str, Any]
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def init_rwkv_time_mix(arch: ArchConfig, key, dtype) -> Params:
+    d = arch.d_model
+    r = arch.rwkv
+    H, hd = d // r.head_size, r.head_size
+    ks = jax.random.split(key, 12)
+    return {
+        "x_maa": jnp.zeros((d,), dtype),
+        "w_maa": jnp.zeros((d,), dtype),
+        "k_maa": jnp.zeros((d,), dtype),
+        "v_maa": jnp.zeros((d,), dtype),
+        "r_maa": jnp.zeros((d,), dtype),
+        "g_maa": jnp.zeros((d,), dtype),
+        "tm_w1": dense_init(ks[0], (d, 5 * r.mix_lora), d, dtype),
+        "tm_w2": dense_init(ks[1], (5, r.mix_lora, d), r.mix_lora, dtype),
+        "td_w1": dense_init(ks[2], (d, r.decay_lora), d, dtype),
+        "td_w2": dense_init(ks[3], (r.decay_lora, d), r.decay_lora, dtype),
+        "w0": jnp.full((d,), -6.0, dtype),  # decay base (very slow decay init)
+        "u": (jax.random.normal(ks[4], (H, hd), jnp.float32) * 0.1).astype(dtype),
+        "wr": dense_init(ks[5], (d, d), d, dtype),
+        "wk": dense_init(ks[6], (d, d), d, dtype),
+        "wv": dense_init(ks[7], (d, d), d, dtype),
+        "wg": dense_init(ks[8], (d, d), d, dtype),
+        "wo": dense_init(ks[9], (d, d), d, dtype),
+        "ln_scale": jnp.ones((d,), dtype),
+        "ln_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _rwkv_projections(arch: ArchConfig, p: Params, x: jax.Array,
+                      x_prev: jax.Array):
+    """Data-dependent token-shift mixing + projections.
+
+    x: (B, S, d); x_prev: x shifted right by one (B, S, d).
+    Returns r, k, v, g, w  — each (B, S, H, hd) except g (B, S, d).
+    """
+    d = arch.d_model
+    H, hd = d // arch.rwkv.head_size, arch.rwkv.head_size
+    dx = x_prev - x
+    xxx = x + dx * p["x_maa"]
+    # 5-way low-rank mixing coefficients
+    mix = jnp.tanh(xxx @ p["tm_w1"])  # (B, S, 5*lora)
+    B_, S_ = mix.shape[:2]
+    mix = mix.reshape(B_, S_, 5, -1)
+    mix = jnp.einsum("bstl,tld->bstd", mix, p["tm_w2"])  # (B,S,5,d)
+    mw, mk, mv, mr, mg = [mix[:, :, i] for i in range(5)]
+    xw = x + dx * (p["w_maa"] + mw)
+    xk = x + dx * (p["k_maa"] + mk)
+    xv = x + dx * (p["v_maa"] + mv)
+    xr = x + dx * (p["r_maa"] + mr)
+    xg = x + dx * (p["g_maa"] + mg)
+
+    r = (xr @ p["wr"]).reshape(B_, S_, H, hd)
+    k = (xk @ p["wk"]).reshape(B_, S_, H, hd)
+    v = (xv @ p["wv"]).reshape(B_, S_, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    ww = p["w0"] + jnp.tanh(xw @ p["td_w1"]) @ p["td_w2"]
+    w = jnp.exp(-jnp.exp(ww.astype(jnp.float32))).reshape(B_, S_, H, hd)
+    return r, k, v, g, w
+
+
+def _wkv_groupnorm(arch: ArchConfig, p: Params, y: jax.Array) -> jax.Array:
+    """Per-head groupnorm of the wkv output. y: (B, S, H, hd) -> (B, S, d)."""
+    B_, S_, H, hd = y.shape
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * lax.rsqrt(var + 64e-5)
+    yn = yn.reshape(B_, S_, H * hd)
+    return yn * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+
+
+def wkv6_scan_ref(r, k, v, w, u, state=None):
+    """Sequential WKV6 recurrence (the oracle; kernels/wkv6 is the TPU path).
+
+    r,k,v,w: (B, S, H, hd) fp32; u: (H, hd); state: (B, H, hd, hd) or None.
+    Returns y (B, S, H, hd), final state.
+
+      y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+      S_t[i,j] = w_t[i] S_{t-1}[i,j] + k_t[i] v_t[j]
+    """
+    B, S, H, hd = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw  # each (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state  # (B, S, H, hd)
+
+
+def apply_rwkv_time_mix(arch: ArchConfig, p: Params, x: jax.Array,
+                        shift_state: Optional[jax.Array] = None,
+                        wkv_state: Optional[jax.Array] = None,
+                        use_pallas: bool = False):
+    """Full time-mix block. Returns (out, (new_shift, new_wkv))."""
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    r, k, v, g, w = _rwkv_projections(arch, p, x, x_prev)
+    u = p["u"].astype(jnp.float32)
+    if use_pallas:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        y, new_state = wkv_ops.wkv6(r, k, v, w, u, state=wkv_state)
+    else:
+        y, new_state = wkv6_scan_ref(r.astype(jnp.float32), k.astype(jnp.float32),
+                                     v.astype(jnp.float32), w, u, state=wkv_state)
+    y = _wkv_groupnorm(arch, p, y.astype(x.dtype))
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    return out, (x[:, -1], new_state)
+
+
+def init_rwkv_channel_mix(arch: ArchConfig, key, dtype) -> Params:
+    d, f = arch.d_model, arch.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "k_maa": jnp.zeros((d,), dtype),
+        "r_maa": jnp.zeros((d,), dtype),
+        "wk": dense_init(ks[0], (d, f), d, dtype),
+        "wv": dense_init(ks[1], (f, d), f, dtype),
+        "wr": dense_init(ks[2], (d, d), d, dtype),
+    }
+
+
+def apply_rwkv_channel_mix(arch: ArchConfig, p: Params, x: jax.Array,
+                           shift_state: Optional[jax.Array] = None):
+    B, S, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["k_maa"]
+    xr = x + dx * p["r_maa"]
+    h = jax.nn.relu(xk @ p["wk"])
+    v = (h * h) @ p["wv"]
+    return jax.nn.sigmoid(xr @ p["wr"]) * v, x[:, -1]
+
+
+# ===========================================================================
+# Mamba (selective SSM, as used by Jamba)
+# ===========================================================================
+
+
+def init_mamba(arch: ArchConfig, key, dtype) -> Params:
+    m = arch.mamba
+    d = arch.d_model
+    di = m.expand * d
+    dtr = m.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, m.d_state + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": dense_init(ks[1], (m.d_conv, di), m.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x": dense_init(ks[2], (di, dtr + 2 * m.d_state), di, dtype),
+        "w_dt": dense_init(ks[3], (dtr, di), dtr, dtype),
+        "dt_bias": jnp.full((di,), math.log(math.e - 1) - 4.0, dtype),  # softplus^-1 around 0.018
+        "A_log": jnp.log(A),  # (di, d_state) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), di, dtype),
+    }
+
+
+def _mamba_conv_train(p: Params, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv over time. x: (B, S, di)."""
+    d_conv, di = p["conv_w"].shape
+    # (B, S, di) -> depthwise conv with left padding
+    out = lax.conv_general_dilated(
+        x, p["conv_w"][:, None, :].astype(x.dtype),  # (k, 1, di) kernel
+        window_strides=(1,), padding=[(d_conv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=di)
+    return out + p["conv_b"]
+
+
+def mamba_scan_ref(u, delta, A, Bc, Cc, D, state=None):
+    """Sequential selective-scan (oracle; kernels/mamba_scan is the TPU path).
+
+    u: (B, S, di); delta: (B, S, di); A: (di, ds); Bc, Cc: (B, S, ds);
+    D: (di,). Returns y (B, S, di), final state (B, di, ds).
+    """
+    B, S, di = u.shape
+    ds = A.shape[1]
+    if state is None:
+        state = jnp.zeros((B, di, ds), jnp.float32)
+
+    def step(h, inp):
+        ut, dt, bt, ct = inp  # (B,di) (B,di) (B,ds) (B,ds)
+        dA = jnp.exp(dt[..., None] * A[None])  # (B, di, ds)
+        dBu = dt[..., None] * bt[:, None, :] * ut[..., None]
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, ct) + D * ut
+        return h, y
+
+    xs = (jnp.moveaxis(u, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(delta, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bc, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cc, 1, 0).astype(jnp.float32))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def apply_mamba(arch: ArchConfig, p: Params, x: jax.Array,
+                conv_state: Optional[jax.Array] = None,
+                ssm_state: Optional[jax.Array] = None,
+                use_pallas: bool = False):
+    """Full Mamba block over a sequence. Returns (out, (conv_state, ssm_state))."""
+    m = arch.mamba
+    B, S, d = x.shape
+    di = m.expand * d
+    dtr = m.resolved_dt_rank(d)
+
+    xz = x @ p["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    if conv_state is not None:
+        xs_ext = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+        conv_full = _mamba_conv_train(p, xs_ext)
+        conv = conv_full[:, conv_state.shape[1]:]
+        new_conv_state = xs_ext[:, -(m.d_conv - 1):] if m.d_conv > 1 else None
+    else:
+        conv = _mamba_conv_train(p, xs)
+        new_conv_state = xs[:, -(m.d_conv - 1):] if m.d_conv > 1 else None
+    h = jax.nn.silu(conv)
+
+    xdbl = h @ p["w_x"]  # (B, S, dtr + 2*ds)
+    dt_r = xdbl[..., :dtr]
+    Bc = xdbl[..., dtr:dtr + m.d_state]
+    Cc = xdbl[..., dtr + m.d_state:]
+    delta = jax.nn.softplus(dt_r @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if use_pallas:
+        from repro.kernels.mamba_scan import ops as ms_ops
+        y, new_ssm = ms_ops.mamba_scan(h, delta, A, Bc, Cc, p["D"], state=ssm_state)
+    else:
+        y, new_ssm = mamba_scan_ref(h, delta, A, Bc, Cc, p["D"], state=ssm_state)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], (new_conv_state, new_ssm)
+
+
+def apply_mamba_decode(arch: ArchConfig, p: Params, x: jax.Array,
+                       conv_state: jax.Array, ssm_state: jax.Array):
+    """Single-token decode. x: (B, 1, d); conv_state: (B, d_conv-1, di);
+    ssm_state: (B, di, ds)."""
+    out, (ncs, nss) = apply_mamba(arch, p, x, conv_state=conv_state,
+                                  ssm_state=ssm_state)
+    return out, (ncs, nss)

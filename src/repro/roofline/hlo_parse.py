@@ -1,0 +1,249 @@
+"""Collective-bytes extraction from compiled (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` does not report collective traffic, and counts
+while-loop bodies exactly once (measured in this container: a scan of 8
+matmuls reports 1/8 of the FLOPs).  This parser therefore:
+
+  1. walks every computation in ``compiled.as_text()``,
+  2. finds all-reduce / all-gather / reduce-scatter / all-to-all /
+     collective-permute ops and their per-device payload bytes (HLO shapes
+     after SPMD partitioning are per-device),
+  3. multiplies ops inside while-loop bodies by the loop trip count
+     (recovered from the loop condition's ``compare(iv, constant)``),
+  4. classifies each op's replica groups as **ici** (intra-pod) or **dcn**
+     (crossing the pod boundary) from the device-id structure of the mesh,
+  5. converts payloads to wire bytes with ring-algorithm factors
+     (AR 2(n-1)/n, AG/RS/A2A (n-1)/n, permute 1).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"all-reduce-start|all-gather-start|collective-permute-start)\(",
+)
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=(\{\{[\d,{}\s]*\}\}|\[[^\]]*\]<=\[[^\]]*\](?:T\([\d,]+\))?)")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_replica_groups(txt: str) -> Optional[List[List[int]]]:
+    txt = txt.strip()
+    if txt.startswith("{{"):
+        groups = []
+        for grp in re.findall(r"\{([\d,\s]*)\}", txt[1:-1]):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(ids)
+        return groups or None
+    # iota format: [G,S]<=[d0,d1,...]T(p0,p1,...)
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", txt)
+    if not m:
+        return None
+    out_shape = [int(x) for x in m.group(1).split(",")]
+    iota_shape = [int(x) for x in m.group(2).split(",")]
+    perm = ([int(x) for x in m.group(3).split(",")]
+            if m.group(3) else list(range(len(iota_shape))))
+    arr = np.arange(int(np.prod(iota_shape))).reshape(iota_shape)
+    arr = arr.transpose(perm).reshape(out_shape)
+    return [list(map(int, row)) for row in arr]
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_payload: int  # per-device payload (local shape bytes)
+    group_size: int
+    tier: str  # "ici" | "dcn" | "both"
+    computation: str
+    multiplier: int = 1
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring wire bytes per device.  ``bytes_payload`` is the op's
+        *output* per-device bytes: all-reduce out==in, all-gather out is
+        the gathered buffer, reduce-scatter out is the 1/n shard."""
+        n = max(self.group_size, 1)
+        if self.kind.startswith("all-reduce"):
+            f = 2.0 * (n - 1) / n
+        elif self.kind.startswith("collective-permute"):
+            f = 1.0
+        elif self.kind.startswith("reduce-scatter"):
+            f = float(n - 1)  # (n-1)/n of the INPUT == (n-1) x the shard
+        else:  # all-gather / all-to-all
+            f = (n - 1) / n
+        return f * self.bytes_payload * self.multiplier
+
+
+@dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp] = field(default_factory=list)
+
+    def wire_bytes(self, tier: Optional[str] = None) -> float:
+        return sum(o.wire_bytes for o in self.ops
+                   if tier is None or o.tier == tier or o.tier == "both")
+
+    def payload_bytes(self, tier: Optional[str] = None) -> float:
+        return sum(o.bytes_payload * o.multiplier for o in self.ops
+                   if tier is None or o.tier == tier or o.tier == "both")
+
+    def count(self, tier: Optional[str] = None) -> int:
+        return sum(o.multiplier for o in self.ops
+                   if tier is None or o.tier == tier or o.tier == "both")
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = defaultdict(float)
+        for o in self.ops:
+            out[f"{o.kind}:{o.tier}"] += o.wire_bytes
+        return dict(out)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> body lines.  Header lines look like
+    ``%name (args...) -> type {`` or ``ENTRY %name (...) -> type {``;
+    argument lists may contain nested parentheses (tuples), so headers are
+    recognized structurally (top-level line ending in '{' containing '->')."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped and not line.startswith(" " * 2):
+            toks = stripped.split()
+            name = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = name.lstrip("%")
+            comps[cur] = []
+        elif stripped == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_trip_counts(comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """body computation name -> trip count.
+
+    Primary source: the while op's ``backend_config known_trip_count``
+    (always present for lax.scan-lowered loops).  Fallback: the largest
+    constant compared against in the condition computation."""
+    trips: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if "while(" not in line:
+                continue
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            tm = _TRIP_COUNT_RE.search(line)
+            if tm:
+                trips[body] = int(tm.group(1))
+                continue
+            consts = _CONST_CMP_RE.findall("\n".join(comps.get(cond, [])))
+            trips[body] = max((int(c) for c in consts), default=1)
+    return trips
+
+
+def _computation_multipliers(comps: Dict[str, List[str]],
+                             trips: Dict[str, int]) -> Dict[str, int]:
+    """Multiplier per computation = product of enclosing while trip counts."""
+    # parent map: body -> computation containing the while op
+    parent: Dict[str, str] = {}
+    for cname, lines in comps.items():
+        for line in lines:
+            if "while(" in line:
+                m = _WHILE_RE.search(line)
+                if m:
+                    parent[m.group(2)] = cname
+                    parent[m.group(1)] = cname
+
+    mult: Dict[str, int] = {}
+
+    def resolve(name: str, depth=0) -> int:
+        if depth > 16:
+            return 1
+        if name in mult:
+            return mult[name]
+        m = trips.get(name, 1)
+        if name in parent:
+            m *= resolve(parent[name], depth + 1)
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+    return mult
+
+
+def classify_groups(groups: List[List[int]], chips_per_pod: int) -> str:
+    crosses = any(len({d // chips_per_pod for d in g}) > 1 for g in groups)
+    within = any(len({d // chips_per_pod for d in g}) == 1 and len(g) > 1
+                 for g in groups)
+    if crosses and within:
+        return "both"
+    return "dcn" if crosses else "ici"
+
+
+def parse_collectives(hlo: str, chips_per_pod: int) -> CollectiveSummary:
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(comps)
+    mults = _computation_multipliers(comps, trips)
+    summary = CollectiveSummary()
+    seen_starts = set()
+    for cname, lines in comps.items():
+        mult = mults.get(cname, 1)
+        for line in lines:
+            m = _COLLECTIVE_RE.match(line)
+            if not m:
+                continue
+            type_str, kind = m.group(1), m.group(2)
+            if kind.endswith("-start"):
+                kind = kind[:-6]
+            # skip the paired -done ops (they repeat the shape)
+            if "-done(" in line:
+                continue
+            nbytes = _shape_bytes(type_str)
+            gm = _REPLICA_GROUPS_RE.search(line)
+            groups = _parse_replica_groups(gm.group(1)) if gm else None
+            if groups:
+                gsize = max(len(g) for g in groups)
+                tier = classify_groups(groups, chips_per_pod)
+            else:
+                gsize, tier = 1, "ici"
+            # all-gather output is the gathered (large) buffer; for wire
+            # bytes we want the gathered size; all-reduce in==out; for
+            # reduce-scatter the INPUT is the large buffer but HLO's output
+            # is small — use the larger of in/out by scanning operand types
+            summary.ops.append(CollectiveOp(
+                kind=kind, bytes_payload=nbytes, group_size=gsize, tier=tier,
+                computation=cname, multiplier=mult))
+    return summary

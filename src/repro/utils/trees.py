@@ -1,0 +1,38 @@
+"""Path-addressable pytree utilities (dict trees only, which is all we use)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+
+def tree_paths(tree) -> Dict[str, Any]:
+    """Flatten a nested-dict tree to {'a/b/c': leaf}."""
+    flat: Dict[str, Any] = {}
+
+    def walk(prefix: str, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}" if prefix else str(k), node[k])
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def tree_from_paths(flat: Dict[str, Any]) -> Dict[str, Any]:
+    """Rebuild a nested-dict tree from {'a/b/c': leaf}."""
+    root: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root
+
+
+def tree_update_paths(tree, updates: Dict[str, Any]):
+    """Return a copy of ``tree`` with leaves at ``updates`` paths replaced."""
+    flat = tree_paths(tree)
+    flat.update(updates)
+    return tree_from_paths(flat)

@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants: compression codecs,
+cost model, planner, bucketing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import Int8Codec, TopKCodec
+from repro.core.cost_model import CostModel
+from repro.core.planner import Planner
+from repro.core.topology import TwoTierTopology
+
+TOPO = TwoTierTopology()
+CM = CostModel(TOPO)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.floats(0.01, 100.0), st.integers(0, 2**31 - 1))
+def test_int8_roundtrip_bounded(nblocks, scale, seed):
+    """|x - decode(encode(x))| <= scale/127 per block (quantization bound)."""
+    block = 64
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(nblocks * block).astype(np.float32) * scale)
+    codec = Int8Codec(block=block)
+    q, s = codec.encode(x)
+    err = np.abs(np.asarray(x - codec.decode(q, s)))
+    bound = np.repeat(np.asarray(s), block) * 0.5 + 1e-9
+    assert (err <= bound + 1e-6).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_int8_error_feedback_invariant(nblocks, seed):
+    """x + ef == decode(q) + new_ef exactly (EF captures all error)."""
+    block = 64
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(nblocks * block).astype(np.float32))
+    ef = jnp.asarray(rng.standard_normal(nblocks * block).astype(np.float32) * 0.1)
+    codec = Int8Codec(block=block)
+    q, s = codec.encode(x + ef)
+    new_ef = (x + ef) - codec.decode(q, s)
+    np.testing.assert_allclose(np.asarray(x + ef),
+                               np.asarray(codec.decode(q, s) + new_ef),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(16, 512), st.floats(0.05, 1.0), st.integers(0, 2**31 - 1))
+def test_topk_keeps_largest(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    codec = TopKCodec(k_frac=frac)
+    vals, idx = codec.encode(x)
+    dec = codec.decode(vals, idx, n)
+    k = codec.k_of(n)
+    # the reconstruction keeps exactly the k largest-magnitude entries
+    kept = np.sort(np.abs(np.asarray(vals)))
+    thresh = np.sort(np.abs(np.asarray(x)))[-k]
+    assert kept[0] >= thresh - 1e-6
+    # everything kept matches x at those indices
+    xi = np.asarray(x)[np.asarray(idx)]
+    np.testing.assert_allclose(np.asarray(vals), xi, rtol=1e-6)
+    # wire bytes strictly less than dense for frac < 0.5
+    if frac < 0.5:
+        assert codec.wire_bytes(n) < n * 4
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e4, 1e10))
+def test_cost_model_ordering(nbytes):
+    """Striped NIC pool <= single-root <= flat ring crossing DCN, always."""
+    flat = CM.flat_ring(nbytes).total_s
+    root = CM.hierarchical(nbytes, striped=False).total_s
+    striped = CM.hierarchical(nbytes, striped=True).total_s
+    assert striped <= root * (1 + 1e-9)
+    assert root <= flat * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e5, 1e9), st.floats(1.5, 16.0))
+def test_compression_helps_dcn(nbytes, ratio):
+    base = CM.hierarchical(nbytes, striped=True)
+    comp = CM.hierarchical(nbytes, striped=True, compression_ratio=ratio)
+    assert comp.dcn_s <= base.dcn_s * (1 + 1e-9)
+    assert comp.total_s <= base.total_s * (1 + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(1e5, 1e9), st.integers(1, 8))
+def test_more_nics_never_slower(nbytes, lanes):
+    t1 = CostModel(TOPO.replace(dcn_lanes=1.0)).hierarchical(nbytes).total_s
+    t2 = CostModel(TOPO.replace(dcn_lanes=float(lanes))).hierarchical(nbytes).total_s
+    assert t2 <= t1 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 2048), st.integers(1, 64)),
+                min_size=1, max_size=12),
+       st.integers(0, 2**31 - 1))
+def test_planner_covers_all_leaves_once(dims, seed):
+    shapes = {f"p{i}": jax.ShapeDtypeStruct((a, b), jnp.float32)
+              for i, (a, b) in enumerate(dims)}
+    plan = Planner(TOPO, fast_axis_size=16).plan(shapes, bucket_bytes=1 << 14)
+    covered = [p for sec in plan.sections for p in sec.leaf_paths]
+    assert sorted(covered) == sorted(shapes)
+    for sec in plan.sections:
+        if sec.scatter_dim >= 0 and len(sec.leaf_paths) == 1:
+            shp = shapes[sec.leaf_paths[0]].shape
+            assert shp[sec.scatter_dim] % 16 == 0
+            # chunking must divide the ICI shard
+            numel = int(np.prod(shp)) // 16
+            assert numel % sec.sync.chunks == 0
+
+
+def test_planner_avoid_dims():
+    shapes = {"w": jax.ShapeDtypeStruct((64, 160), jnp.float32)}
+    pl = Planner(TOPO, fast_axis_size=16)
+    plan = pl.plan(shapes, bucket_bytes=1 << 10,
+                   avoid_dims={"w": frozenset({1})})
+    sec = plan.sections[0]
+    assert sec.scatter_dim == 0  # 160 avoided though divisible

@@ -1,0 +1,63 @@
+"""Beyond-paper figure: 2-tier vs 3-tier fabric plans.
+
+Compares the analytic completion time of a 512-chip gradient all-reduce
+when the pod's DP side is (a) one flat ICI domain (the paper's two-tier
+fabric) vs (b) split into CXL-connected hosts (the ROADMAP's three-tier
+hierarchy), across scatter depths and slow-tier bandwidths.  Shows where
+the extra CXL tier pays: the deeper reduce-scatter shrinks the payload the
+Ethernet leg carries per chip, so slower Ethernet amplifies the win.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel
+from repro.core.topology import (HardwareSpec, TwoTierTopology,
+                                 three_tier_fabric)
+
+NBYTES = 100 * 2**20  # 100 MiB gradient
+
+
+def run():
+    rows = []
+
+    def add(name, sec, derived=""):
+        rows.append((f"ntier/{name}", sec * 1e6, derived))
+
+    hw = HardwareSpec()
+    # two-tier: 2 pods x 256 chips on ICI
+    two = TwoTierTopology(num_pods=2, pod_shape=(16, 16), hw=hw)
+    cm2 = CostModel(two)
+    t2 = cm2.ntier_striped(NBYTES).total_s
+    add("two_tier_striped", t2, "baseline")
+
+    # three-tier: same 512 chips, each pod split into 4 hosts of 64 on the
+    # rack-level CXL fabric
+    three = three_tier_fabric(num_pods=2, hosts_per_pod=4, chips_per_host=64,
+                              hw=hw)
+    cm3 = CostModel(three)
+    for depth in range(3):
+        est = cm3.ntier_striped(NBYTES, scatter_depth=depth)
+        add(f"three_tier_depth{depth}", est.total_s,
+            f"{t2 / est.total_s:.2f}x_vs_2tier")
+    best = cm3.ntier_best(NBYTES)
+    add("three_tier_best", best.total_s,
+        f"depth={best.scatter_depth}")
+    per_tier = best.tier_seconds()
+    for tier, sec in per_tier.items():
+        add(f"three_tier_best/{tier}", sec,
+            f"{100 * sec / best.total_s:.1f}%_of_total")
+
+    # sensitivity: the 3-tier advantage vs Ethernet bandwidth
+    for dcn_gbps in (1.0, 6.25, 25.0):
+        hw_bw = HardwareSpec(dcn_bw=dcn_gbps * 1e9)
+        e2 = CostModel(TwoTierTopology(num_pods=2, pod_shape=(16, 16), hw=hw_bw))
+        e3 = CostModel(three_tier_fabric(num_pods=2, hosts_per_pod=4,
+                                         chips_per_host=64, hw=hw_bw))
+        s2 = e2.ntier_striped(NBYTES).total_s
+        s3 = e3.ntier_best(NBYTES).total_s
+        add(f"sweep_dcn{dcn_gbps:g}GBps", s3, f"{s2 / s3:.2f}x_vs_2tier")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

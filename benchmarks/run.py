@@ -11,10 +11,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                            fig12_nic_scaling, fig13_timesharing, roofline,
-                            table4_breakdown)
+                            fig12_nic_scaling, fig13_timesharing, fig_ntier,
+                            roofline, table4_breakdown)
     modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-               fig12_nic_scaling, fig13_timesharing, table4_breakdown, roofline]
+               fig12_nic_scaling, fig13_timesharing, fig_ntier,
+               table4_breakdown, roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

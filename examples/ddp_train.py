@@ -12,6 +12,8 @@ import argparse
 
 import jax
 
+from repro.utils.jax_compat import make_mesh
+
 from repro.configs.base import ArchConfig
 from repro.models import ModelSettings, build_model, count_params
 from repro.runtime.train_loop import Trainer, TrainerConfig
@@ -38,8 +40,7 @@ def main() -> None:
         param_dtype="float32", compute_dtype="float32", remat="none",
         loss_chunk=64, max_seq=256))
     print(f"params: {count_params(model)/1e6:.1f}M")
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     cfg = TrainerConfig(steps=args.steps, lr=3e-4, warmup=20, log_every=10,
                         mode="dfabric", zero1=True,
                         ckpt_dir=args.ckpt_dir, ckpt_every=50)

@@ -8,6 +8,8 @@ import shutil
 import tempfile
 
 import jax
+
+from repro.utils.jax_compat import make_mesh
 import numpy as np
 
 from repro.configs import get_smoke_arch
@@ -24,8 +26,7 @@ def main() -> None:
     model = build_model(get_smoke_arch("qwen3-1.7b"), ModelSettings(
         param_dtype="float32", compute_dtype="float32", remat="none",
         loss_chunk=16, max_seq=64))
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     tmp = tempfile.mkdtemp(prefix="repro_elastic_")
 
     def cfg(fail_at=None):
@@ -51,8 +52,7 @@ def main() -> None:
     assert d < 1e-3, "restart must reproduce the uninterrupted trajectory"
 
     print("elastic restore onto a new mesh object (rescale path)...")
-    mesh2 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh2 = make_mesh((1, 1, 1), ("pod", "data", "model"))
     t2 = Trainer(model, mesh2, Shape(), cfg())
     restored = t2.try_restore()
     assert restored is not None and restored[2] == 16

@@ -7,6 +7,8 @@ collectives degenerate gracefully), printing a decreasing loss.
 """
 import jax
 
+from repro.utils.jax_compat import make_mesh
+
 from repro.configs import get_smoke_arch
 from repro.models import ModelSettings, build_model
 from repro.runtime.train_loop import Trainer, TrainerConfig
@@ -22,8 +24,7 @@ def main() -> None:
     model = build_model(arch, ModelSettings(
         param_dtype="float32", compute_dtype="float32", remat="none",
         loss_chunk=32, max_seq=64))
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     cfg = TrainerConfig(steps=60, lr=5e-3, warmup=6, log_every=10,
                         mode="dfabric", zero1=True)
     out = Trainer(model, mesh, Shape(), cfg).train()

@@ -8,6 +8,8 @@ reports tokens/s.
 import argparse
 
 import jax
+
+from repro.utils.jax_compat import make_mesh
 import numpy as np
 
 from repro.configs import get_smoke_arch, list_archs
@@ -26,8 +28,7 @@ def main() -> None:
     model = build_model(arch, ModelSettings(
         param_dtype="float32", compute_dtype="float32", remat="none",
         max_seq=128))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     params = model.init(jax.random.key(0))
     server = DecodeServer(model, mesh, batch_slots=4, max_seq=128,
                           temperature=0.8)

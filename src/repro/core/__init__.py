@@ -1,15 +1,22 @@
-"""DFabric core: two-tier topology, cost model, collectives, planner."""
-from repro.core.topology import HardwareSpec, TwoTierTopology, production_topology
-from repro.core.cost_model import CostModel, CollectiveEstimate
+"""DFabric core: N-tier fabric topology, cost model, collectives, planner."""
+from repro.core.topology import (
+    FabricSpec, HardwareSpec, Tier, TwoTierTopology, as_fabric,
+    fabric_from_mesh_sizes, production_topology, three_tier_fabric,
+    topology_from_mesh_sizes)
+from repro.core.cost_model import (
+    CostModel, CollectiveEstimate, NTierEstimate, TierCharge)
 from repro.core.collectives import (
-    SyncConfig, dfabric_all_reduce, dfabric_all_to_all, dfabric_reduce_scatter,
-    pod_psum, ring_all_reduce)
+    SyncConfig, dfabric_all_gather, dfabric_all_reduce, dfabric_all_to_all,
+    dfabric_reduce_scatter, pod_psum, ring_all_reduce)
 from repro.core.planner import Planner, SyncPlan, Section
 
 __all__ = [
-    "HardwareSpec", "TwoTierTopology", "production_topology",
-    "CostModel", "CollectiveEstimate",
-    "SyncConfig", "dfabric_all_reduce", "dfabric_all_to_all",
-    "dfabric_reduce_scatter", "pod_psum", "ring_all_reduce",
+    "FabricSpec", "HardwareSpec", "Tier", "TwoTierTopology", "as_fabric",
+    "fabric_from_mesh_sizes", "production_topology", "three_tier_fabric",
+    "topology_from_mesh_sizes",
+    "CostModel", "CollectiveEstimate", "NTierEstimate", "TierCharge",
+    "SyncConfig", "dfabric_all_gather", "dfabric_all_reduce",
+    "dfabric_all_to_all", "dfabric_reduce_scatter", "pod_psum",
+    "ring_all_reduce",
     "Planner", "SyncPlan", "Section",
 ]

@@ -1,34 +1,49 @@
-"""DFabric collectives — the paper's NIC pool + memory pool as JAX ops.
+"""DFabric collectives — the paper's NIC pool + memory pool as JAX ops,
+generalized to an N-tier fabric.
 
-All functions here run *inside* a ``jax.shard_map`` whose manual axes are the
-DP domain: ``fast_axis`` ("data", the intra-pod ICI tier == the paper's CXL
-fabric) and ``slow_axis`` ("pod", the inter-pod DCN tier == the paper's
-Ethernet).  The TP axis ("model") stays an auto (GSPMD) axis.
+All functions here run *inside* a ``shard_map`` whose manual axes are the
+DP domain.  The fast side of the domain is an ORDERED tuple of axes,
+fastest first (e.g. ``("data", "host")`` for intra-host ICI then rack-level
+CXL); the slowest tier (``slow_axis``, the paper's Ethernet / "pod") is
+where the NIC pool stripes.  The TP axis ("model") stays an auto (GSPMD)
+axis.  Passing a single string for ``fast_axis`` keeps the original
+two-tier call signature working unchanged.
 
-The paper-faithful hierarchical all-reduce is::
+The paper-faithful hierarchical all-reduce, recursively per tier::
 
-    reduce-scatter over ICI          (rack-level CXL fabric, §3 tier 1)
-    all-reduce over the pod axis     (every chip carries only 1/N_ici of
-                                      the payload over DCN simultaneously
-                                      == the NIC pool striping, §4.2/§4.4)
-    all-gather over ICI              (memory pool absorbs each shard into
-                                      its own HBM, §4.1)
+    reduce-scatter over fast tier 0        (fastest: ICI)
+      reduce-scatter over fast tier 1      (e.g. rack-level CXL fabric)
+        ...
+          all-reduce over the slowest axis (every chip carries only
+                                            1/prod(fast sizes) of the
+                                            payload over DCN simultaneously
+                                            == the NIC pool striping)
+        ...
+      all-gather over fast tier 1
+    all-gather over fast tier 0            (memory pool absorbs each shard
+                                            into its own HBM)
 
-Beyond-paper extensions: chunked DCN legs (async-overlap-friendly, the
-MPTCP-subflow analogue), int8/top-k compression of the DCN leg only, and a
-fused ZeRO-1 update between the DCN leg and the final all-gather (the
-all-gather then carries *updated parameters*, saving one full ICI pass).
+Codec / chunking (``SyncConfig``) apply ONLY to the slowest leg — DFabric's
+point is that bandwidth is scarce exactly there; every fast leg stays
+exact.  ``SyncConfig.scatter_depth`` limits how many fast tiers are
+scattered (the planner's per-section tier plan); tiers beyond the depth
+are plain-psum'ed at their level, which keeps the result numerically
+equivalent to a flat ``lax.psum`` at every depth.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import compression as comp
+from repro.core import prims
+from repro.utils.jax_compat import axis_size
+
+Axes = Union[str, Sequence[str]]
 
 # ---------------------------------------------------------------------------
 # Strategy description
@@ -37,14 +52,22 @@ from repro.core import compression as comp
 
 @dataclass(frozen=True)
 class SyncConfig:
-    """How one gradient bucket ("Section") is synchronized."""
+    """How one gradient bucket ("Section") is synchronized.
+
+    ``scatter_depth``: number of fast tiers to reduce-scatter over before
+    the slowest leg (-1 = all of them).  Fast tiers beyond the depth are
+    summed in place (plain psum) instead of scattered — the planner picks
+    the depth per section from the cost model (e.g. a tensor divisible by
+    the ICI size but not by ICI*CXL scatters only one level deep).
+    """
 
     strategy: str = "hier_striped"  # flat | hier_root | hier_striped
-    chunks: int = 1  # DCN sub-flows per Section (MPTCP analogue)
+    chunks: int = 1  # slow-tier sub-flows per Section (MPTCP analogue)
     codec: Optional[str] = None  # None | "int8" | "topk"
     codec_block: int = 2048
     codec_k_frac: float = 0.0625
     error_feedback: bool = True
+    scatter_depth: int = -1  # fast tiers to scatter over (-1 = all)
 
     def make_codec(self):
         if self.codec == "int8":
@@ -59,11 +82,20 @@ class SyncConfig:
 # ---------------------------------------------------------------------------
 
 
-def axis_size(axis_name) -> int:
-    try:
-        return lax.axis_size(axis_name)
-    except NameError:
-        return 1
+def normalize_axes(fast_axis: Optional[Axes]) -> Tuple[str, ...]:
+    """A single axis name or an ordered sequence -> tuple, fastest first."""
+    if fast_axis is None:
+        return ()
+    if isinstance(fast_axis, str):
+        return (fast_axis,)
+    return tuple(fast_axis)
+
+
+def fast_axes_size(fast_axis: Optional[Axes]) -> int:
+    n = 1
+    for a in normalize_axes(fast_axis):
+        n *= axis_size(a)
+    return n
 
 
 def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
@@ -75,19 +107,22 @@ def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-# The NIC-pool leg: all-reduce over the slow (pod/DCN) axis
+# The NIC-pool leg: all-reduce over the slowest (pod/DCN) axis
 # ---------------------------------------------------------------------------
 
 
 def pod_psum(x: jax.Array, slow_axis: Optional[str], cfg: SyncConfig,
-             ef: Optional[jax.Array] = None
+             ef: Optional[jax.Array] = None,
+             ranks: prims.Ranks = None
              ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """All-reduce ``x`` (this chip's ICI-scattered shard) over the pod axis.
+    """All-reduce ``x`` (this chip's fast-tier-scattered shard) over the
+    slowest axis.
 
-    Because the caller already reduce-scattered over ICI, every chip calls
-    this with a distinct 1/N_ici shard — i.e. all "NICs" of the pod cross
-    DCN at once.  ``cfg.chunks`` splits the transfer into independent
-    collectives (sub-flows) that XLA can run as overlapping async pairs.
+    Because the caller already reduce-scattered over the fast tiers, every
+    chip calls this with a distinct 1/prod(fast sizes) shard — i.e. all
+    "NICs" of the group cross the slow tier at once.  ``cfg.chunks`` splits
+    the transfer into independent collectives (sub-flows) that XLA can run
+    as overlapping async pairs.  This is the ONLY leg where the codec runs.
     """
     if slow_axis is None or axis_size(slow_axis) == 1:
         return x, ef
@@ -101,124 +136,172 @@ def pod_psum(x: jax.Array, slow_axis: Optional[str], cfg: SyncConfig,
         efs = _split_chunks(ef, cfg.chunks) if ef is not None else [None] * len(parts)
         outs, nefs = [], []
         for p, e in zip(parts, efs):
-            o, ne = comp.compressed_psum_int8(p, slow_axis, codec, e)
+            o, ne = comp.compressed_psum_int8(p, slow_axis, codec, e, ranks=ranks)
             outs.append(o)
             nefs.append(ne)
         out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
         nef = (jnp.concatenate(nefs) if len(nefs) > 1 else nefs[0]) if ef is not None else None
         return out, nef
     if isinstance(codec, comp.TopKCodec):
-        out, nef = comp.compressed_psum_topk(x, slow_axis, codec, ef)
+        out, nef = comp.compressed_psum_topk(x, slow_axis, codec, ef, ranks=ranks)
         return out, nef
     raise ValueError(codec)
 
 
 # ---------------------------------------------------------------------------
-# Full hierarchical all-reduce (paper §3 workflow)
+# Full hierarchical all-reduce (paper §3 workflow, recursive over tiers)
 # ---------------------------------------------------------------------------
 
 
-def dfabric_all_reduce(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
+def _all_axes(fast: Tuple[str, ...], slow: Optional[str]) -> Tuple[str, ...]:
+    return fast if slow is None else fast + (slow,)
+
+
+def _striped_recursive(x: jax.Array, fast: Tuple[str, ...],
+                       slow_axis: Optional[str], cfg: SyncConfig,
+                       dim: int, ef: Optional[jax.Array], depth: int,
+                       ranks: prims.Ranks = None
+                       ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """reduce-scatter down the fast tiers / slow leg / all-gather back up.
+
+    ``depth`` counts how many more fast tiers may be scattered; a tier that
+    cannot (or may not) be scattered is plain-psum'ed at its level, keeping
+    the recursion numerically equal to a flat psum at every depth.
+    """
+    if not fast:
+        shp = x.shape
+        ef_flat = ef.reshape(-1) if ef is not None else None
+        out, ef_flat = pod_psum(x.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
+        return out.reshape(shp), (ef_flat.reshape(ef.shape) if ef is not None else None)
+    a, rest = fast[0], fast[1:]
+    n = axis_size(a)
+    if depth == 0 or n == 1 or x.shape[dim] % n != 0:
+        # do not scatter this tier: sum it here, continue down
+        y = lax.psum(x, a)
+        return _striped_recursive(y, rest, slow_axis, cfg, dim, ef,
+                                  0 if depth == 0 else depth - 1, ranks)
+    s = prims.reduce_scatter_tiled(x, a, dim)
+    s, ef = _striped_recursive(s, rest, slow_axis, cfg, dim, ef, depth - 1, ranks)
+    out = prims.all_gather_tiled(s, a, dim, ranks)
+    return out, ef
+
+
+def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
+                       slow_axis: Optional[str],
                        cfg: SyncConfig, scatter_dim: int = 0,
                        ef: Optional[jax.Array] = None,
+                       ranks: prims.Ranks = None,
                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """All-reduce ``x`` over (fast_axis x slow_axis) with the DFabric plan.
+    """All-reduce ``x`` over (fast tiers x slow tier) with the DFabric plan.
 
+    ``fast_axis``: one axis name or an ordered sequence (fastest first).
     ``x`` may be any rank; ``scatter_dim`` is the dimension scattered over
-    the ICI tier (must be divisible by the fast axis size).
+    the fast tiers (must be divisible by the product of the scattered tier
+    sizes — indivisible tensors fall back to a flat psum).
     """
-    if cfg.strategy == "flat":
-        axes = (fast_axis,) if slow_axis is None else (fast_axis, slow_axis)
+    fast = normalize_axes(fast_axis)
+    axes = _all_axes(fast, slow_axis)
+    if cfg.strategy == "flat" or not fast:
         return lax.psum(x, axes), ef
     if cfg.strategy == "hier_root":
-        # no NIC pool: reduce to rack root, root alone crosses DCN.
-        # (modelled for the ablation; implemented as psum over fast axis
-        # followed by an un-scattered pod psum — every chip technically
-        # sends, but the payload is the FULL gradient, which is what makes
-        # the baseline slow; the cost model charges it to one NIC.)
-        y = lax.psum(x, fast_axis)
+        # no NIC pool: reduce to rack root, root alone crosses the slow tier.
+        # (modelled for the ablation; implemented as psum over the fast
+        # tiers followed by an un-scattered slow psum — every chip
+        # technically sends, but the payload is the FULL gradient, which is
+        # what makes the baseline slow; the cost model charges it to one NIC.)
+        y = lax.psum(x, fast)
         ef_flat = ef.reshape(-1) if ef is not None else None
-        y, ef_flat = pod_psum(y.reshape(-1), slow_axis, cfg, ef_flat)
+        y, ef_flat = pod_psum(y.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
         return y.reshape(x.shape), (ef_flat.reshape(ef.shape) if ef is not None else None)
     assert cfg.strategy == "hier_striped", cfg.strategy
-    nf = axis_size(fast_axis)
+    depth = cfg.scatter_depth if cfg.scatter_depth >= 0 else len(fast)
+    nf = fast_axes_size(fast[:depth])
     if x.shape[scatter_dim] % nf != 0:
-        # indivisible tensor: fall back to flat psum (tiny leaves only)
-        axes = (fast_axis,) if slow_axis is None else (fast_axis, slow_axis)
+        # indivisible by even the planned scatter prefix: fall back to a
+        # flat psum (tiny leaves only — the planner emits a depth whose
+        # tier-size prefix product divides the tensor)
         return lax.psum(x, axes), ef
-    # 1) ICI reduce-scatter
-    s = lax.psum_scatter(x, fast_axis, scatter_dimension=scatter_dim, tiled=True)
-    # 2) DCN striped all-reduce (the NIC pool) — flatten shard for chunking
-    shp = s.shape
-    ef_flat = ef.reshape(-1) if ef is not None else None
-    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat)
-    s2 = s2.reshape(shp)
-    # 3) ICI all-gather (memory pool absorbs shards at aggregate HBM bw)
-    out = lax.all_gather(s2, fast_axis, axis=scatter_dim, tiled=True)
-    return out, (ef_flat.reshape(ef.shape) if ef is not None else None)
+    return _striped_recursive(x, fast, slow_axis, cfg, scatter_dim, ef, depth,
+                              ranks)
 
 
-def dfabric_reduce_scatter(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
+def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
+                           slow_axis: Optional[str],
                            cfg: SyncConfig, scatter_dim: int = 0,
-                           ef: Optional[jax.Array] = None):
-    """Like :func:`dfabric_all_reduce` but stops before the final ICI
-    all-gather — the caller owns the 1/N_ici shard (ZeRO-1 entry point)."""
-    nf = axis_size(fast_axis)
-    assert x.shape[scatter_dim] % nf == 0
-    s = lax.psum_scatter(x, fast_axis, scatter_dimension=scatter_dim, tiled=True)
+                           ef: Optional[jax.Array] = None,
+                           ranks: prims.Ranks = None):
+    """Like :func:`dfabric_all_reduce` but stops before the final fast-tier
+    all-gathers — the caller owns the 1/prod(fast sizes) shard, indexed
+    fastest-tier-major (ZeRO-1 entry point)."""
+    fast = normalize_axes(fast_axis)
+    nf = fast_axes_size(fast)
+    assert x.shape[scatter_dim] % nf == 0, (x.shape, scatter_dim, nf)
+    s = x
+    for a in fast:
+        if axis_size(a) > 1:
+            s = prims.reduce_scatter_tiled(s, a, scatter_dim)
     shp = s.shape
     ef_flat = ef.reshape(-1) if ef is not None else None
-    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat)
+    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
     return s2.reshape(shp), (ef_flat.reshape(ef.shape) if ef is not None else None)
 
 
-def dfabric_all_gather(x: jax.Array, fast_axis: str, gather_dim: int = 0) -> jax.Array:
-    return lax.all_gather(x, fast_axis, axis=gather_dim, tiled=True)
+def dfabric_all_gather(x: jax.Array, fast_axis: Axes,
+                       gather_dim: int = 0,
+                       ranks: prims.Ranks = None) -> jax.Array:
+    """All-gather over the fast tiers, undoing
+    :func:`dfabric_reduce_scatter`'s ownership order (gathers run in
+    reverse tier order so the fastest tier ends up major)."""
+    fast = normalize_axes(fast_axis)
+    for a in reversed(fast):
+        if axis_size(a) > 1:
+            x = prims.all_gather_tiled(x, a, gather_dim, ranks)
+    return x
 
 
 # ---------------------------------------------------------------------------
-# Two-stage hierarchical all-to-all (the NIC pool applied to MoE dispatch /
+# Multi-stage hierarchical all-to-all (the NIC pool applied to MoE dispatch /
 # shuffle traffic, paper §6.2 WordCount + our §Perf cell C future work)
 # ---------------------------------------------------------------------------
 
 
-def dfabric_all_to_all(x: jax.Array, fast_axis: str, slow_axis: Optional[str],
-                       ) -> jax.Array:
-    """All-to-all over the (fast x slow) DP domain in two tiers.
+def dfabric_all_to_all(x: jax.Array, fast_axis: Axes,
+                       slow_axis: Optional[str]) -> jax.Array:
+    """All-to-all over the (fast tiers x slow tier) DP domain, one stage
+    per tier.
 
-    ``x``: (n_fast * n_slow, chunk, ...) — row (f, s) holds the payload for
-    member (f, s) of the domain.  A flat all-to-all would move every
-    cross-pod row point-to-point over DCN; the hierarchical form first
-    exchanges *pod-addressed super-rows* over the fast tier so that each
-    chip's DCN transfer is a single contiguous stripe (every NIC of the
-    pod carries exactly its 1/n_fast of the cross-pod traffic — the pool),
-    then delivers within the destination pod over ICI.
-
-      stage 1 (ICI): all_to_all over fast_axis, grouped by destination pod
-      stage 2 (DCN): all_to_all over slow_axis of the pod-local stripes
-      stage 3 (ICI): all_to_all over fast_axis to the final member
-
-    Equivalent to ``lax.all_to_all(x, (slow, fast), 0, 0)`` numerically.
+    ``x``: (n_total, chunk, ...) — row r holds the payload for member r of
+    the domain, rows ordered slow-major (slowest tier's sub-index is the
+    most significant digit, the fastest tier's the least).  A flat
+    all-to-all would move every cross-group row point-to-point over the
+    slow tier; the hierarchical form exchanges each tier's OWN sub-index
+    starting from the fastest tier, so that by the time a stripe crosses a
+    slow tier it is a single contiguous block and every member of the
+    faster tiers below carries exactly its 1/members_below share of the
+    cross-tier traffic (the pool).  Numerically equivalent to
+    ``lax.all_to_all(x, (slowest, ..., fastest), 0, 0)`` at every depth.
     """
-    nf = axis_size(fast_axis)
-    ns = axis_size(slow_axis) if slow_axis else 1
-    assert x.shape[0] == nf * ns, (x.shape, nf, ns)
-    if slow_axis is None or ns == 1:
-        return lax.all_to_all(x, fast_axis, split_axis=0, concat_axis=0,
+    fast = normalize_axes(fast_axis)
+    axes = _all_axes(fast, slow_axis)  # fastest ... slowest
+    active = [(a, axis_size(a)) for a in axes if axis_size(a) > 1]
+    if not active:
+        return x
+    if len(active) == 1:
+        return lax.all_to_all(x, active[0][0], split_axis=0, concat_axis=0,
                               tiled=True)
+    sizes = [n for _, n in active]
+    n_total = 1
+    for n in sizes:
+        n_total *= n
+    assert x.shape[0] == n_total, (x.shape, sizes)
     rest = x.shape[1:]
-    # rows ordered slow-major: row (s', f') -> destination member (s', f')
-    xs = x.reshape((ns, nf) + rest)
-    # stage 1 (ICI): exchange the fast sub-index within the pod; afterwards
-    # member (s, f) holds, from every source f_src of its own pod, the rows
-    # destined to fast-rank f of every pod — a contiguous pod-addressed
-    # stripe (this is what lets every NIC of the pod carry 1/n_fast of the
-    # cross-pod traffic)
-    y = lax.all_to_all(xs, fast_axis, split_axis=1, concat_axis=1, tiled=True)
-    # stage 2 (DCN): exchange the pod sub-index — each chip's stripe crosses
-    # the slow tier exactly once
-    y = lax.all_to_all(y, slow_axis, split_axis=0, concat_axis=0, tiled=True)
-    return y.reshape((ns * nf,) + rest)
+    # leading dim viewed slow-major: dims ordered (slowest, ..., fastest)
+    y = x.reshape(tuple(reversed(sizes)) + rest)
+    k = len(active)
+    for i, (a, _) in enumerate(active):  # fastest tier first
+        d = k - 1 - i  # its sub-index dim in the slow-major view
+        y = lax.all_to_all(y, a, split_axis=d, concat_axis=d, tiled=True)
+    return y.reshape((n_total,) + rest)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import prims
+from repro.utils import jax_compat
+
 
 @dataclass(frozen=True)
 class Int8Codec:
@@ -66,7 +69,7 @@ class TopKCodec:
     def encode(self, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
         n = x.shape[0]
         k = self.k_of(n)
-        vals, idx = lax.top_k(jnp.abs(x), k)
+        vals, idx = jax_compat.top_k(jnp.abs(x), k)
         del vals
         return x[idx], idx.astype(jnp.int32)
 
@@ -87,7 +90,8 @@ class TopKCodec:
 
 
 def compressed_psum_int8(x: jax.Array, axis_name: str, codec: Int8Codec,
-                         ef: Optional[jax.Array] = None
+                         ef: Optional[jax.Array] = None,
+                         ranks: prims.Ranks = None
                          ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Sum ``x`` over ``axis_name`` transferring int8 on the wire.
 
@@ -105,23 +109,24 @@ def compressed_psum_int8(x: jax.Array, axis_name: str, codec: Int8Codec,
     xp = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)]) if pad else x
     q, s = codec.encode(xp)
     new_ef = (xp - codec.decode(q, s))[:n0] if ef is not None else None
-    qg = lax.all_gather(q, axis_name, axis=0)  # (P, n) int8 on the wire
-    sg = lax.all_gather(s, axis_name, axis=0)  # (P, n/block) f32
+    qg = prims.all_gather_stacked(q, axis_name, ranks)  # (P, n) int8 on the wire
+    sg = prims.all_gather_stacked(s, axis_name, ranks)  # (P, n/block) f32
     dec = jax.vmap(lambda qq, ss: codec.decode(qq, ss))(qg, sg)
     out = jnp.sum(dec, axis=0)[:n0].astype(x.dtype)
     return out, new_ef
 
 
 def compressed_psum_topk(x: jax.Array, axis_name: str, codec: TopKCodec,
-                         ef: Optional[jax.Array] = None
+                         ef: Optional[jax.Array] = None,
+                         ranks: prims.Ranks = None
                          ) -> Tuple[jax.Array, Optional[jax.Array]]:
     if ef is not None:
         x = x + ef
     vals, idx = codec.encode(x)
     n = x.shape[0]
     new_ef = x - codec.decode(vals, idx, n) if ef is not None else None
-    vg = lax.all_gather(vals, axis_name, axis=0)  # (P, k)
-    ig = lax.all_gather(idx, axis_name, axis=0)  # (P, k)
+    vg = prims.all_gather_stacked(vals, axis_name, ranks)  # (P, k)
+    ig = prims.all_gather_stacked(idx, axis_name, ranks)  # (P, k)
     out = jnp.zeros((n,), x.dtype).at[ig.reshape(-1)].add(vg.reshape(-1).astype(x.dtype))
     return out, new_ef
 

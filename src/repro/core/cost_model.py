@@ -1,4 +1,4 @@
-"""Analytic communication cost model for the two-tier DFabric topology.
+"""Analytic communication cost model for the DFabric fabric (N tiers).
 
 This is the LPPU's "brain": closed-form completion-time estimates for each
 collective strategy, used (a) by the planner to pick a strategy per gradient
@@ -8,14 +8,25 @@ bucket, (b) by the benchmarks to reproduce the paper's Figures 2, 9, 10 and
 All formulas are standard alpha-beta (latency-bandwidth) models:
   ring all-reduce over n members:  t = 2 (n-1)/n * B / bw + 2 (n-1) * lat
 with DFabric's striping changing *which* bandwidth the cross-pod leg sees.
+
+Two API levels:
+
+  * the original two-tier methods (``flat_ring`` / ``hierarchical`` /
+    ``optimal`` / ...), unchanged for existing call sites and paper-figure
+    reproduction;
+  * the general N-tier path (``ntier_striped`` / ``ntier_best``), which
+    charges EVERY tier of a :class:`FabricSpec` independently and returns a
+    per-tier breakdown.  A ``CostModel`` may be constructed from either a
+    ``TwoTierTopology`` or a ``FabricSpec`` — the legacy methods see the
+    collapsed two-tier view (``FabricSpec.as_two_tier``).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple, Union
 
-from repro.core.topology import TwoTierTopology
+from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
 
 
 def ring_all_reduce_time(nbytes: float, n: int, bw: float, lat: float) -> float:
@@ -54,12 +65,51 @@ class CollectiveEstimate:
     notes: str = ""
 
 
+@dataclass(frozen=True)
+class TierCharge:
+    """Time/bytes one tier contributes to an N-tier collective."""
+
+    tier: str  # Tier.name
+    axis: str
+    seconds: float
+    bytes_per_chip: float
+    scattered: bool  # was this (fast) tier reduce-scattered or psum'ed?
+
+
+@dataclass(frozen=True)
+class NTierEstimate:
+    strategy: str
+    total_s: float
+    charges: Tuple[TierCharge, ...]
+    scatter_depth: int
+    notes: str = ""
+
+    @property
+    def slow_s(self) -> float:
+        return self.charges[-1].seconds if self.charges else 0.0
+
+    @property
+    def fast_s(self) -> float:
+        return sum(c.seconds for c in self.charges[:-1])
+
+    @property
+    def slow_bytes_per_chip(self) -> float:
+        return self.charges[-1].bytes_per_chip if self.charges else 0.0
+
+    def tier_seconds(self) -> Dict[str, float]:
+        return {c.tier: c.seconds for c in self.charges}
+
+
 class CostModel:
     """Completion-time estimates for an all-reduce of ``nbytes`` (global
-    gradient size) over the DP domain of a :class:`TwoTierTopology`."""
+    gradient size) over the DP domain of a :class:`TwoTierTopology` or an
+    N-tier :class:`FabricSpec`."""
 
-    def __init__(self, topo: TwoTierTopology):
-        self.topo = topo
+    def __init__(self, topo: Union[TwoTierTopology, FabricSpec]):
+        self.fabric = as_fabric(topo)
+        # legacy two-tier methods operate on the collapsed view
+        self.topo = topo if isinstance(topo, TwoTierTopology) \
+            else self.fabric.as_two_tier()
 
     # ---- effective tier rates ----------------------------------------------
     def _dcn_rate_per_chip(self, mem_bw_limit: Optional[float] = None, cached: bool = True) -> float:
@@ -78,7 +128,80 @@ class CostModel:
             rate = rate / 2.1
         return rate
 
-    # ---- strategies ---------------------------------------------------------
+    # ---- N-tier strategies --------------------------------------------------
+    def ntier_striped(self, nbytes: float, scatter_depth: int = -1,
+                      chunks: int = 1, compression_ratio: float = 1.0,
+                      mem_bw_limit: Optional[float] = None,
+                      cached: bool = True) -> NTierEstimate:
+        """The general DFabric plan on an N-tier fabric: reduce-scatter down
+        the first ``scatter_depth`` fast tiers (-1 = all), striped
+        all-reduce on the slowest tier, all-gather back up.  Every tier is
+        charged independently; fast tiers beyond the scatter depth are
+        charged a full (unscattered) ring all-reduce at their level.
+        """
+        fab = self.fabric
+        fast = fab.fast_tiers
+        depth = len(fast) if scatter_depth < 0 else min(scatter_depth, len(fast))
+        charges: List[TierCharge] = []
+        payload = float(nbytes)
+        # down + up the fast tiers
+        for i, tier in enumerate(fast):
+            if i < depth and tier.size > 1:
+                t = (ring_reduce_scatter_time(payload, tier.size, tier.rate, tier.latency)
+                     + all_gather_time(payload, tier.size, tier.rate, tier.latency))
+                by = 2.0 * (tier.size - 1) / tier.size * payload
+                charges.append(TierCharge(tier.name, tier.axis, t, by, True))
+                payload /= tier.size
+            else:
+                # unscattered: this tier carries the whole current payload
+                t = ring_all_reduce_time(payload, tier.size, tier.rate, tier.latency)
+                by = 2.0 * (tier.size - 1) / tier.size * payload
+                charges.append(TierCharge(tier.name, tier.axis, t, by, False))
+        # the slowest leg (striped across everything scattered above it)
+        slow = fab.slowest
+        if fab.depth == 1:
+            # single-tier fabric: the only tier IS the slowest; a plain
+            # ring all-reduce on it is the whole collective
+            t = ring_all_reduce_time(payload, slow.size, slow.rate, slow.latency)
+            by = 2.0 * (slow.size - 1) / slow.size * payload
+            charges.append(TierCharge(slow.name, slow.axis, t, by, False))
+            return NTierEstimate("ntier_striped", t, tuple(charges), depth)
+        if slow.size <= 1:
+            # degenerate slow tier: charge it zero so charges[-1] (the
+            # slow_s/slow_bytes_per_chip accessors) stays the slow tier
+            charges.append(TierCharge(slow.name, slow.axis, 0.0, 0.0, False))
+            total = sum(c.seconds for c in charges)
+            return NTierEstimate("ntier_striped", total, tuple(charges), depth)
+        rate = slow.rate
+        if mem_bw_limit is not None:
+            rate = min(rate, mem_bw_limit / max(fab.n_fast, 1))
+        if not cached:
+            rate = rate / 2.1
+        slow_bytes = (2.0 * (slow.size - 1) / slow.size * payload
+                      / max(compression_ratio, 1.0))
+        t_slow = slow_bytes / rate + 2.0 * (slow.size - 1) * slow.latency
+        t_slow += (max(chunks, 1) - 1) * slow.latency * 2  # per-chunk launch
+        charges.append(TierCharge(slow.name, slow.axis, t_slow, slow_bytes, False))
+        total = sum(c.seconds for c in charges)
+        name = "ntier_striped"
+        if compression_ratio > 1.0:
+            name += "_comp"
+        return NTierEstimate(name, total, tuple(charges), depth,
+                             notes=f"chunks={chunks} comp={compression_ratio}")
+
+    def ntier_best(self, nbytes: float, max_chunks: int = 4,
+                   compression_ratio: float = 1.0) -> NTierEstimate:
+        """Search over scatter depths (and optionally compression) for the
+        cheapest N-tier plan."""
+        cands = [self.ntier_striped(nbytes, scatter_depth=d)
+                 for d in range(len(self.fabric.fast_tiers) + 1)]
+        if compression_ratio > 1.0:
+            cands.append(self.ntier_striped(
+                nbytes, scatter_depth=-1, chunks=max_chunks,
+                compression_ratio=compression_ratio))
+        return min(cands, key=lambda e: e.total_s)
+
+    # ---- two-tier strategies (legacy API, paper figures) --------------------
     def flat_ring(self, nbytes: float, nics_per_host: float = 1.0,
                   mem_bw_limit: Optional[float] = None, cached: bool = True) -> CollectiveEstimate:
         """ToR baseline: one flat ring over all DP members; every cross-pod
@@ -211,3 +334,11 @@ class CostModel:
             "hier_striped_comp4": self.hierarchical(nbytes, striped=True, compression_ratio=4.0).total_s,
             "optimal": self.optimal(nbytes).total_s,
         }
+
+    def ntier_summary(self, nbytes: float) -> Dict[str, float]:
+        """Per-depth N-tier summary (keys: scatter depth)."""
+        out = {}
+        for d in range(len(self.fabric.fast_tiers) + 1):
+            out[f"depth{d}"] = self.ntier_striped(nbytes, scatter_depth=d).total_s
+        out["comp4"] = self.ntier_striped(nbytes, compression_ratio=4.0).total_s
+        return out

@@ -8,24 +8,30 @@ planning at trace time:
 
   * gradients are bucketed into **Sections** (paper §4.1 terminology),
   * for each Section the planner consults the :class:`CostModel` and picks
-    a strategy (flat / hier_root / hier_striped), a chunk count
-    (sub-flows), and optionally a DCN codec,
+    a strategy (flat / hier_root / hier_striped), a TIER PLAN (how many
+    fast tiers of the fabric to reduce-scatter over — ``scatter_depth``),
+    a chunk count (sub-flows), and optionally a slow-tier codec,
   * the plan is a static artifact — inspectable, serializable, and testable
     without running anything.
+
+The planner accepts either the legacy :class:`TwoTierTopology` or an
+N-tier :class:`FabricSpec`; with more than two tiers the per-section search
+runs over scatter depths of the recursive hierarchical collective (see
+``repro.core.collectives``).
 """
 from __future__ import annotations
 
 import json
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
 from repro.core.collectives import SyncConfig
 from repro.core.cost_model import CostModel
-from repro.core.topology import TwoTierTopology
+from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
 
 
 @dataclass(frozen=True)
@@ -37,14 +43,15 @@ class Section:
     inside a nested model-manual shard_map (§Perf iteration 6), so all
     shapes it sees are per-model-shard.  ``model_sharded`` marks sections
     whose gradient is split over the TP axis (their global sq-norm needs an
-    extra psum over 'model')."""
+    extra psum over 'model').  The tier plan lives in ``sync``
+    (``SyncConfig.scatter_depth``)."""
 
     name: str
     leaf_paths: Tuple[str, ...]
     numel: int
     dtype: str
-    scatter_dim: int  # dimension scattered over the ICI tier (-1 = flat 1d)
-    sync: SyncConfig = SyncConfig()
+    scatter_dim: int  # dimension scattered over the fast tiers (-1 = flat 1d)
+    sync: SyncConfig = field(default_factory=SyncConfig)
     model_sharded: bool = False
 
     @property
@@ -65,51 +72,80 @@ class SyncPlan:
         for s in self.sections:
             lines.append(
                 f"  {s.name:40s} {s.numel:>12d} x {s.dtype:8s} "
-                f"{s.sync.strategy:>13s} chunks={s.sync.chunks} codec={s.sync.codec}")
+                f"{s.sync.strategy:>13s} depth={s.sync.scatter_depth} "
+                f"chunks={s.sync.chunks} codec={s.sync.codec}")
         return "\n".join(lines)
 
     def to_json(self) -> str:
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
-                 codec=s.sync.codec, leaves=list(s.leaf_paths))
+                 codec=s.sync.codec, scatter_depth=s.sync.scatter_depth,
+                 leaves=list(s.leaf_paths))
             for s in self.sections
         ], indent=2)
 
 
 class Planner:
-    """Plans one :class:`SyncPlan` for a gradient pytree."""
+    """Plans one :class:`SyncPlan` for a gradient pytree.
 
-    def __init__(self, topo: TwoTierTopology, *,
+    ``topo``: TwoTierTopology | FabricSpec.  ``fast_axis_sizes`` overrides
+    the per-tier fast-axis extents (ordered fastest first) when the mesh
+    truth differs from the fabric description; ``fast_axis_size`` is the
+    legacy single-tier override.
+    """
+
+    def __init__(self, topo: Union[TwoTierTopology, FabricSpec], *,
                  fast_axis_size: Optional[int] = None,
+                 fast_axis_sizes: Optional[Sequence[int]] = None,
                  codec: Optional[str] = None,
                  max_chunks: int = 8,
                  min_chunk_numel: int = 1 << 16,
                  strategy: str = "auto"):
         self.topo = topo
+        self.fabric = as_fabric(topo)
         self.cost = CostModel(topo)
-        self.nf = fast_axis_size or topo.chips_per_pod
+        if fast_axis_sizes is not None:
+            self.fast_sizes: Tuple[int, ...] = tuple(int(s) for s in fast_axis_sizes)
+        elif fast_axis_size is not None:
+            self.fast_sizes = (int(fast_axis_size),)
+        else:
+            self.fast_sizes = tuple(t.size for t in self.fabric.fast_tiers) or (1,)
+        self.nf = int(np.prod(self.fast_sizes))
         self.codec = codec
         self.max_chunks = max_chunks
         self.min_chunk_numel = min_chunk_numel
         self.strategy = strategy
 
+    @property
+    def n_fast_tiers(self) -> int:
+        return len(self.fast_sizes)
+
+    def _prefix_prod(self, depth: int) -> int:
+        return int(np.prod(self.fast_sizes[:depth])) if depth > 0 else 1
+
     # -- per-section decisions -------------------------------------------------
     def _pick_scatter_dim(self, shape: Tuple[int, ...],
-                          avoid: frozenset = frozenset()) -> int:
-        """Largest dim divisible by the fast-axis size; -1 if none.
+                          avoid: frozenset = frozenset()) -> Tuple[int, int]:
+        """(dim, depth): the largest dim divisible by the deepest possible
+        prefix of the fast-tier sizes; (-1, 0) if none divides even the
+        fastest tier.
 
         ``avoid`` holds dims already sharded over an auto (TP/FSDP) axis —
         scattering those would force GSPMD regrouping, so they are only
         used as a last resort.
         """
-        best, best_dim = -1, -1
-        for d, s in enumerate(shape):
-            if d in avoid:
-                continue
-            if s % self.nf == 0 and s > best:
-                best, best_dim = s, d
-        return best_dim
+        for depth in range(self.n_fast_tiers, 0, -1):
+            prod = self._prefix_prod(depth)
+            best, best_dim = -1, -1
+            for d, s in enumerate(shape):
+                if d in avoid:
+                    continue
+                if s % prod == 0 and s > best:
+                    best, best_dim = s, d
+            if best_dim >= 0:
+                return best_dim, depth
+        return -1, 0
 
     def _pick_chunks(self, numel: int) -> int:
         c = self.max_chunks
@@ -121,7 +157,8 @@ class Planner:
         if self.strategy != "auto":
             chunks = self._pick_chunks(nbytes // 4)
             return self.strategy, chunks, self.codec
-        comp_ratio = 4.0 if self.codec == "int8" else (1.0 / 0.125 if self.codec == "topk" else 1.0)
+        if self.fabric.depth > 2:
+            return self._pick_strategy_ntier(nbytes)
         ests = {
             "flat": self.cost.flat_ring(nbytes).total_s,
             "hier_root": self.cost.hierarchical(nbytes, striped=False).total_s,
@@ -134,6 +171,41 @@ class Planner:
             if ovl.total_s < ests[best]:
                 chunks = 4
         return best, chunks, self.codec
+
+    def _pick_strategy_ntier(self, nbytes: int) -> Tuple[str, int, Optional[str]]:
+        """N-tier search: flat ring vs root vs the striped recursion (the
+        scatter DEPTH is decided later, per section, from divisibility —
+        deeper is never slower in the alpha-beta model)."""
+        ests = {
+            "flat": self.cost.flat_ring(nbytes).total_s,
+            "hier_root": self.cost.ntier_striped(nbytes, scatter_depth=0).total_s,
+            "hier_striped": self.cost.ntier_striped(nbytes, scatter_depth=-1).total_s,
+        }
+        best = min(ests, key=ests.get)
+        chunks = 4 if (best == "hier_striped"
+                       and nbytes // 4 >= 4 * self.min_chunk_numel) else 1
+        return best, chunks, self.codec
+
+    def _section_estimate(self, sec: Section):
+        """Cost estimate of one section under its chosen config; returns
+        (seconds, slow_tier_bytes_per_chip)."""
+        ratio = 4.0 if sec.sync.codec == "int8" else 1.0
+        if sec.sync.strategy == "flat":
+            est = self.cost.flat_ring(sec.nbytes)
+            return est.total_s, est.dcn_bytes_per_chip
+        if self.fabric.depth > 2:
+            depth = sec.sync.scatter_depth
+            if sec.sync.strategy == "hier_root":
+                depth = 0
+            est = self.cost.ntier_striped(sec.nbytes, scatter_depth=depth,
+                                          chunks=sec.sync.chunks,
+                                          compression_ratio=ratio)
+            return est.total_s, est.slow_bytes_per_chip
+        est = self.cost.hierarchical(
+            sec.nbytes, striped=sec.sync.strategy == "hier_striped",
+            chunks=sec.sync.chunks, overlap=sec.sync.chunks > 1,
+            compression_ratio=ratio)
+        return est.total_s, est.dcn_bytes_per_chip
 
     # -- public API -------------------------------------------------------------
     def plan(self, shapes: Dict[str, jax.ShapeDtypeStruct],
@@ -159,18 +231,20 @@ class Planner:
             model_sharded = lshape != tuple(sds.shape)
             if nbytes >= bucket_bytes or model_sharded:
                 strat, chunks, codec = self._pick_strategy(nbytes)
-                sd = self._pick_scatter_dim(lshape,
-                                            avoid_dims.get(path, frozenset()))
-                if sd < 0:
+                sd, depth = self._pick_scatter_dim(
+                    lshape, avoid_dims.get(path, frozenset()))
+                if sd < 0 or depth == 0:
                     strat, chunks = "flat", 1
                 numel = int(np.prod(sds.shape))
-                chunks = self._adjust_chunks(lshape, sd, chunks)
+                chunks = self._adjust_chunks(lshape, sd, chunks, depth)
+                scatter_depth = -1 if depth >= self.n_fast_tiers else depth
                 sections.append(Section(
                     # '.'-separated name: section names are dict keys in the
                     # sync state and must not collide with tree-path '/'
                     name=path.replace("/", "."), leaf_paths=(path,),
                     numel=numel, dtype=str(sds.dtype), scatter_dim=sd,
-                    sync=SyncConfig(strategy=strat, chunks=chunks, codec=codec),
+                    sync=SyncConfig(strategy=strat, chunks=chunks, codec=codec,
+                                    scatter_depth=scatter_depth),
                     model_sharded=model_sharded))
             else:
                 small.append((path, sds))
@@ -202,23 +276,20 @@ class Planner:
         # aggregate estimates
         tot, dcn = 0.0, 0.0
         for s in plan.sections:
-            ratio = 4.0 if s.sync.codec == "int8" else 1.0
-            est = (self.cost.flat_ring(s.nbytes) if s.sync.strategy == "flat"
-                   else self.cost.hierarchical(
-                       s.nbytes, striped=s.sync.strategy == "hier_striped",
-                       chunks=s.sync.chunks, overlap=s.sync.chunks > 1,
-                       compression_ratio=ratio))
-            tot += est.total_s
-            dcn += est.dcn_bytes_per_chip
+            est_s, est_dcn = self._section_estimate(s)
+            tot += est_s
+            dcn += est_dcn
         plan.est_total_s = tot
         plan.est_dcn_bytes_per_chip = dcn
         return plan
 
-    def _adjust_chunks(self, shape, scatter_dim, chunks) -> int:
-        """Chunking flattens the ICI-scattered shard; ensure divisibility."""
+    def _adjust_chunks(self, shape, scatter_dim, chunks, depth=None) -> int:
+        """Chunking flattens the fast-tier-scattered shard; ensure
+        divisibility of the shard the slow leg actually sees."""
         if scatter_dim < 0:
             return 1
-        numel = int(np.prod(shape)) // self.nf
+        nf = self._prefix_prod(depth) if depth is not None else self.nf
+        numel = int(np.prod(shape)) // max(nf, 1)
         c = min(chunks, self.max_chunks)
         while c > 1 and numel % c != 0:
             c -= 1

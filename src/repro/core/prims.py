@@ -1,0 +1,73 @@
+"""Partial-manual-safe collective primitives.
+
+The 0.4.x XLA SPMD partitioner hard-aborts on ``all-gather`` (and cannot
+lower ``axis_index``, which needs partition-id) inside a ``shard_map``
+that leaves some mesh axes auto — "manual subgroups".  ``psum`` and
+``psum_scatter`` DO lower there.  The DFabric gradient sync runs exactly
+in that regime (manual DP axes, auto TP axis), so these wrappers emulate
+the missing ops from psum + dynamic-update-slice when running on the old
+stack; on the modern stack they call the native collectives.
+
+``ranks``: optional ``{axis_name: this_rank's_index_along_axis}`` mapping.
+Callers running under partial-manual old JAX MUST thread it in as DATA
+(e.g. an arange input sharded over the DP axes) because ``axis_index``
+cannot lower there; fully-manual callers may omit it and the rank falls
+back to ``lax.axis_index``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.utils.jax_compat import HAS_NEW_SHARD_MAP, axis_size
+
+# proxy: the modern jax/jaxlib stack partitions collectives with manual
+# subgroups correctly; the 0.4.x one aborts
+HAS_PARTIAL_MANUAL_COLLECTIVES = HAS_NEW_SHARD_MAP
+
+Ranks = Optional[Dict[str, jax.Array]]
+
+
+def axis_rank(axis_name: str, ranks: Ranks = None) -> jax.Array:
+    """This member's index along ``axis_name`` — from the threaded-in data
+    when provided, else ``lax.axis_index`` (fully-manual contexts only on
+    the old stack)."""
+    if ranks is not None and axis_name in ranks:
+        return ranks[axis_name]
+    return lax.axis_index(axis_name)
+
+
+def reduce_scatter_tiled(x: jax.Array, axis_name: str, dim: int) -> jax.Array:
+    """Tiled reduce-scatter (``lax.psum_scatter`` lowers on every stack)."""
+    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def all_gather_tiled(x: jax.Array, axis_name: str, dim: int,
+                     ranks: Ranks = None) -> jax.Array:
+    """Tiled all-gather; emulated as zero-pad + psum on the old stack
+    (numerically identical — each member contributes its block)."""
+    if HAS_PARTIAL_MANUAL_COLLECTIVES:
+        return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+    n = axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = axis_rank(axis_name, ranks)
+    shape = x.shape[:dim] + (n * x.shape[dim],) + x.shape[dim + 1:]
+    buf = jnp.zeros(shape, x.dtype)
+    buf = lax.dynamic_update_slice_in_dim(buf, x, idx * x.shape[dim], dim)
+    return lax.psum(buf, axis_name)
+
+
+def all_gather_stacked(x: jax.Array, axis_name: str,
+                       ranks: Ranks = None) -> jax.Array:
+    """Untiled all-gather (new leading member dim), same emulation."""
+    if HAS_PARTIAL_MANUAL_COLLECTIVES:
+        return lax.all_gather(x, axis_name, axis=0)
+    n = axis_size(axis_name)
+    idx = axis_rank(axis_name, ranks)
+    buf = jnp.zeros((n,) + x.shape, x.dtype)
+    buf = lax.dynamic_update_index_in_dim(buf, x, idx, 0)
+    return lax.psum(buf, axis_name)

@@ -1,14 +1,23 @@
-"""Two-tier interconnect topology — the DFabric hardware model.
+"""Interconnect topology — the DFabric hardware model, generalized to N tiers.
 
-The paper's rack = a TPU pod (fast tier, ICI / "CXL fabric"); the paper's
-inter-rack Ethernet = DCN between pods (slow tier).  All hardware constants
-are per-chip TPU v5e numbers per the brief, overridable for paper-figure
-reproduction (where the paper uses an interconnect:network ratio of 10:1).
+The paper studies exactly two tiers (rack-level CXL fabric + inter-rack
+Ethernet).  Real deployments have more: intra-host NVLink/ICI, a rack-level
+CXL fabric, and inter-rack Ethernet.  The general model here is a
+:class:`FabricSpec`: an ordered list of :class:`Tier` entries from fastest
+to slowest, each mapping to one mesh axis.  A hierarchical collective
+reduce-scatters down the fast tiers, runs the striped (NIC-pool) leg on the
+slowest tier, and all-gathers back up — see ``repro.core.collectives``.
+
+:class:`TwoTierTopology` is kept as a thin compatibility constructor: all
+existing call sites keep working, and ``.fabric`` exposes the equivalent
+two-tier :class:`FabricSpec`.  All hardware constants are per-chip TPU v5e
+numbers per the brief, overridable for paper-figure reproduction (where the
+paper uses an interconnect:network ratio of 10:1).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -23,6 +32,8 @@ class HardwareSpec:
     ici_latency: float = 1e-6  # s per hop
     dcn_bw: float = 6.25e9  # B/s per chip ("Ethernet" tier: 25GB/s / 4-chip host)
     dcn_latency: float = 10e-6  # s
+    cxl_bw: float = 25e9  # B/s per chip (rack-level CXL switch, the 3-tier mid tier)
+    cxl_latency: float = 2e-6  # s
     mem_channels_bw: Optional[float] = None  # host local memory bw (paper's C1)
     vmem_bytes: float = 128 * 2**20  # VMEM per chip (v5e: 128 MiB)
 
@@ -31,19 +42,195 @@ class HardwareSpec:
         return replace(self, dcn_bw=self.ici_bw / ratio)
 
 
+# ---------------------------------------------------------------------------
+# N-tier fabric
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Tier:
+    """One interconnect tier.
+
+    ``axis`` is the mesh axis the tier's collective runs over; ``size`` its
+    extent (members per group).  ``bw``/``latency`` are per-chip.  ``lanes``
+    is the NIC-pool multiplicity knob on the slowest tier (the paper's
+    N + M added NICs, normalized per chip).
+    """
+
+    name: str  # "ici" | "cxl" | "dcn" | ...
+    axis: str  # mesh axis ("data", "host", "pod", ...)
+    size: int
+    bw: float
+    latency: float
+    lanes: float = 1.0
+
+    @property
+    def rate(self) -> float:
+        return self.bw * self.lanes
+
+
+@dataclass(frozen=True)
+class FabricSpec:
+    """Ordered interconnect tiers, FASTEST FIRST (tiers[0] = intra-host,
+    tiers[-1] = the slowest / striped leg).
+
+    The hierarchical collective contract: reduce-scatter down
+    ``fast_tiers`` in order, run the (optionally compressed / chunked)
+    striped all-reduce on ``slowest``, all-gather back up in reverse.
+    """
+
+    tiers: Tuple[Tier, ...]
+    hw: HardwareSpec = field(default_factory=HardwareSpec)
+
+    def __post_init__(self):
+        if not self.tiers:
+            raise ValueError("FabricSpec needs at least one tier")
+        axes = [t.axis for t in self.tiers]
+        if len(set(axes)) != len(axes):
+            raise ValueError(f"duplicate tier axes: {axes}")
+        for t in self.tiers:
+            if t.size < 1:
+                raise ValueError(f"tier {t.name}: size must be >= 1")
+
+    # ---- structure ---------------------------------------------------------
+    @property
+    def depth(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def fast_tiers(self) -> Tuple[Tier, ...]:
+        return self.tiers[:-1]
+
+    @property
+    def slowest(self) -> Tier:
+        return self.tiers[-1]
+
+    @property
+    def fast_axes(self) -> Tuple[str, ...]:
+        """Axes of the fast tiers, fastest first."""
+        return tuple(t.axis for t in self.fast_tiers)
+
+    @property
+    def slow_axis(self) -> Optional[str]:
+        return self.slowest.axis if self.depth > 1 else None
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return tuple(t.axis for t in self.tiers)
+
+    @property
+    def n_fast(self) -> int:
+        n = 1
+        for t in self.fast_tiers:
+            n *= t.size
+        return n
+
+    @property
+    def total_chips(self) -> int:
+        n = 1
+        for t in self.tiers:
+            n *= t.size
+        return n
+
+    def members_below(self, i: int) -> int:
+        """Product of the sizes of tiers strictly faster than tier ``i`` —
+        the striping factor the tier-``i`` leg sees when every faster tier
+        was reduce-scattered."""
+        n = 1
+        for t in self.tiers[:i]:
+            n *= t.size
+        return n
+
+    # ---- aggregate rates ---------------------------------------------------
+    @property
+    def pool_rate(self) -> float:
+        """Aggregate slow-tier bandwidth of one group's NIC pool."""
+        return self.members_below(self.depth - 1) * self.slowest.rate
+
+    @property
+    def pool_hbm_bw(self) -> float:
+        """Aggregate memory-pool bandwidth per slow-tier group."""
+        return self.members_below(self.depth - 1) * self.hw.hbm_bw
+
+    def tier_of_axis(self, axis: str) -> Optional[Tier]:
+        for t in self.tiers:
+            if t.axis == axis:
+                return t
+        return None
+
+    # ---- conversions -------------------------------------------------------
+    def as_two_tier(self) -> "TwoTierTopology":
+        """Collapse to the legacy two-tier view: all fast tiers become one
+        pod (rate of the FASTEST tier, the conservative choice for the
+        legacy formulas), the slowest tier becomes the DCN leg."""
+        hw = replace(self.hw,
+                     ici_bw=self.tiers[0].bw,
+                     ici_latency=self.tiers[0].latency,
+                     dcn_bw=self.slowest.bw if self.depth > 1 else self.hw.dcn_bw,
+                     dcn_latency=self.slowest.latency if self.depth > 1 else self.hw.dcn_latency)
+        return TwoTierTopology(
+            num_pods=self.slowest.size if self.depth > 1 else 1,
+            pod_shape=(self.n_fast,) if self.depth > 1 else (self.tiers[0].size,),
+            hw=hw,
+            dcn_lanes=self.slowest.lanes if self.depth > 1 else 1.0)
+
+    def replace(self, **kw) -> "FabricSpec":
+        return replace(self, **kw)
+
+    def with_slowest_bw(self, bw: float) -> "FabricSpec":
+        """Fabric with the slowest tier's per-chip bandwidth overridden."""
+        tiers = self.tiers[:-1] + (replace(self.slowest, bw=bw),)
+        return replace(self, tiers=tiers)
+
+    def describe(self) -> str:
+        parts = [f"{t.name}[{t.axis}]x{t.size}@{t.bw/1e9:.1f}GB/s"
+                 for t in self.tiers]
+        return " -> ".join(parts)
+
+
+def fabric_from_mesh_sizes(sizes: Dict[str, int],
+                           hw: Optional[HardwareSpec] = None,
+                           dcn_lanes: float = 1.0) -> FabricSpec:
+    """Build a FabricSpec from mesh axis sizes using the canonical axis
+    naming: "data" (+"model", folded into the fastest tier — TP chips have
+    NICs and stripe cross-tier traffic too) = ICI, "host" = rack-level CXL
+    fabric, "pod" = inter-rack Ethernet.  Axes absent from ``sizes`` or of
+    size 1 are skipped, so the same code path yields 1-, 2- and 3-tier
+    fabrics."""
+    hw = hw or HardwareSpec()
+    tiers = []
+    n_ici = sizes.get("data", 1) * sizes.get("model", 1)
+    if n_ici > 1:
+        tiers.append(Tier("ici", "data", n_ici, hw.ici_bw, hw.ici_latency))
+    if sizes.get("host", 1) > 1:
+        tiers.append(Tier("cxl", "host", sizes["host"], hw.cxl_bw, hw.cxl_latency))
+    if sizes.get("pod", 1) > 1:
+        tiers.append(Tier("dcn", "pod", sizes["pod"], hw.dcn_bw, hw.dcn_latency,
+                          lanes=dcn_lanes))
+    if not tiers:
+        tiers = [Tier("ici", "data", 1, hw.ici_bw, hw.ici_latency)]
+    return FabricSpec(tiers=tuple(tiers), hw=hw)
+
+
+# ---------------------------------------------------------------------------
+# Two-tier compatibility constructor
+# ---------------------------------------------------------------------------
+
+
 @dataclass(frozen=True)
 class TwoTierTopology:
     """``num_pods`` pods ("racks"), each with ``pod_shape`` chips on ICI.
 
-    ``dcn_lanes`` is the NIC-pool multiplicity knob: how many DCN "NICs"
-    each chip contributes to the pod's pool (paper's N + M added NICs,
-    normalized per chip).  ``striped=False`` models the ToR baseline where
-    only a single chip's NIC carries a cross-pod flow.
+    Thin compatibility view over the general :class:`FabricSpec` (see
+    ``.fabric``).  ``dcn_lanes`` is the NIC-pool multiplicity knob: how many
+    DCN "NICs" each chip contributes to the pod's pool (paper's N + M added
+    NICs, normalized per chip).  ``striped=False`` models the ToR baseline
+    where only a single chip's NIC carries a cross-pod flow.
     """
 
     num_pods: int = 2
     pod_shape: Tuple[int, ...] = (16, 16)  # (data, model)
-    hw: HardwareSpec = HardwareSpec()
+    hw: HardwareSpec = field(default_factory=HardwareSpec)
     dcn_lanes: float = 1.0
 
     @property
@@ -56,6 +243,17 @@ class TwoTierTopology:
     @property
     def total_chips(self) -> int:
         return self.num_pods * self.chips_per_pod
+
+    @property
+    def fabric(self) -> FabricSpec:
+        """The equivalent general fabric: one ICI tier + one DCN tier."""
+        tiers = [Tier("ici", "data", self.chips_per_pod,
+                      self.hw.ici_bw, self.hw.ici_latency)]
+        if self.num_pods > 1:
+            tiers.append(Tier("dcn", "pod", self.num_pods,
+                              self.hw.dcn_bw, self.hw.dcn_latency,
+                              lanes=self.dcn_lanes))
+        return FabricSpec(tiers=tuple(tiers), hw=self.hw)
 
     # ---- aggregate tier bandwidths ----------------------------------------
     @property
@@ -83,9 +281,43 @@ class TwoTierTopology:
         return replace(self, **kw)
 
 
+def as_fabric(topo) -> FabricSpec:
+    """Normalize a TwoTierTopology | FabricSpec to a FabricSpec."""
+    if isinstance(topo, FabricSpec):
+        return topo
+    return topo.fabric
+
+
+def topology_from_mesh_sizes(sizes: Dict[str, int]):
+    """Default hardware description for a mesh: an N-tier FabricSpec when
+    a rack-level "host" axis is present, else the legacy TwoTierTopology
+    (pod_shape = all non-pod axes)."""
+    if sizes.get("host", 1) > 1:
+        return fabric_from_mesh_sizes(sizes)
+    return TwoTierTopology(
+        num_pods=sizes.get("pod", 1),
+        pod_shape=tuple(s for a, s in sizes.items()
+                        if a not in ("pod", "host")) or (1,))
+
+
 # canonical production topologies per the brief
 def production_topology(multi_pod: bool = True) -> TwoTierTopology:
     return TwoTierTopology(num_pods=2 if multi_pod else 1, pod_shape=(16, 16))
+
+
+def three_tier_fabric(num_pods: int = 2, hosts_per_pod: int = 4,
+                      chips_per_host: int = 64,
+                      hw: Optional[HardwareSpec] = None,
+                      dcn_lanes: float = 1.0) -> FabricSpec:
+    """The ROADMAP's target hierarchy: intra-host ICI ("data") -> rack-level
+    CXL fabric ("host") -> inter-rack Ethernet ("pod")."""
+    hw = hw or HardwareSpec()
+    return FabricSpec(tiers=(
+        Tier("ici", "data", chips_per_host, hw.ici_bw, hw.ici_latency),
+        Tier("cxl", "host", hosts_per_pod, hw.cxl_bw, hw.cxl_latency),
+        Tier("dcn", "pod", num_pods, hw.dcn_bw, hw.dcn_latency,
+             lanes=dcn_lanes),
+    ), hw=hw)
 
 
 # the paper's FPGA prototype, for figure reproduction: 2 racks x 2 CNs,

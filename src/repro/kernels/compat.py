@@ -1,0 +1,18 @@
+"""Pallas API-drift shims shared by all four kernels.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+pinned 0.4.x toolchain only has the old name while newer releases only
+have (or eventually only accept) the new one.  ``compiler_params()``
+resolves whichever class exists at import time.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build the TPU compiler-params object under its current name."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (re-exported types)
+from repro.kernels.compat import compiler_params
 
 DEFAULT_CHUNK = 64
 DEFAULT_BLOCK_D = 256
@@ -91,7 +92,7 @@ def mamba_scan_fwd(u, dt, A, Bc, Cc, D, h0, *, chunk: int = DEFAULT_CHUNK,
         out_shape=[jax.ShapeDtypeStruct((B, S, di), jnp.float32),
                    jax.ShapeDtypeStruct((B, di, ds), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, dt, A, Bc, Cc, D, h0)

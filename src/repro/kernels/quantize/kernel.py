@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (re-exported types)
+from repro.kernels.compat import compiler_params
 
 DEFAULT_ROWS = 8
 
@@ -57,7 +58,7 @@ def quantize_ef_fwd(x: jax.Array, *, block: int = 2048,
         out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
                    jax.ShapeDtypeStruct((nb,), jnp.float32),
                    jax.ShapeDtypeStruct((nb, block), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xb)

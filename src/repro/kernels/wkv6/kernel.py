@@ -25,7 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (re-exported types)
+from repro.kernels.compat import compiler_params
 
 DEFAULT_CHUNK = 32
 
@@ -108,7 +109,7 @@ def wkv6_fwd(r, k, v, w, u, s0, *, chunk: int = DEFAULT_CHUNK,
         out_shape=[jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
                    jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u, s0)

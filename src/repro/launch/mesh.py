@@ -2,20 +2,42 @@
 
 ``make_production_mesh`` is a FUNCTION (never a module-level constant) so
 importing this module touches no jax device state.  The multi-pod mesh adds
-the leading "pod" axis — the DCN tier; ("data", "model") span one pod's ICI.
+the leading "pod" axis — the slowest (DCN) tier; with ``tiers=3`` a "host"
+axis (the rack-level CXL fabric) sits between "pod" and the intra-host
+("data", "model") axes, matching the N-tier :class:`repro.core.FabricSpec`.
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
 import jax
-from jax.sharding import AxisType
+
+from repro.utils.jax_compat import make_mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False,
+def make_production_mesh(*, multi_pod: bool = False, tiers: int = 2,
                          devices: Optional[Sequence] = None):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    """The canonical 512-chip production meshes.
+
+    ``tiers=2``: (pod, data, model) = (2, 16, 16) — the paper's two-tier
+    fabric.  ``tiers=3``: (pod, host, data, model) = (2, 4, 4, 16) — same
+    chip count, with the pod's DP side split into 4 CXL-connected hosts of
+    4 data ranks each.  Single-pod (``multi_pod=False``) with ``tiers=3``
+    keeps the host axis: (host, data, model) = (4, 4, 16).
+    """
+    if multi_pod and tiers >= 3:
+        shape = (2, 4, 4, 16)
+        axes = ("pod", "host", "data", "model")
+    elif multi_pod:
+        shape = (2, 16, 16)
+        axes = ("pod", "data", "model")
+    elif tiers >= 3:
+        # single pod, rack-level CXL fabric still present
+        shape = (4, 4, 16)
+        axes = ("host", "data", "model")
+    else:
+        shape = (16, 16)
+        axes = ("data", "model")
     n = 1
     for s in shape:
         n *= s
@@ -26,12 +48,17 @@ def make_production_mesh(*, multi_pod: bool = False,
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             f"dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"before importing jax")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_test_mesh(shape: Sequence[int] = (2, 2, 2),
                    axes: Sequence[str] = ("pod", "data", "model")):
     """Small mesh for CPU tests (requires forced host devices)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(tuple(shape), tuple(axes))
+
+
+def make_ntier_test_mesh(shape: Sequence[int] = (2, 2, 2),
+                         axes: Sequence[str] = ("pod", "host", "data")):
+    """Small 3-tier DP mesh for CPU tests (8 forced host devices): slowest
+    tier first, matching the FabricSpec axis naming."""
+    return make_mesh(tuple(shape), tuple(axes))

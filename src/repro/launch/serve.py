@@ -16,6 +16,7 @@ from repro.configs.base import get_arch, get_smoke_arch
 from repro.models.registry import build_model
 from repro.models.transformer import ModelSettings
 from repro.runtime.serve_loop import DecodeServer, Request
+from repro.utils.jax_compat import make_mesh
 
 
 def main() -> None:
@@ -34,8 +35,7 @@ def main() -> None:
                        remat="none", max_seq=args.max_seq)
     model = build_model(arch, st)
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((ndev, 1), ("data", "model"))
 
     params = model.init(jax.random.key(0))
     server = DecodeServer(model, mesh, batch_slots=args.batch_slots,

@@ -22,6 +22,7 @@ from repro.core.topology import TwoTierTopology
 from repro.models.registry import build_model
 from repro.models.transformer import ModelSettings
 from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.utils.jax_compat import make_mesh
 
 
 def main() -> None:
@@ -55,12 +56,15 @@ def main() -> None:
     ndev = len(jax.devices())
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split(","))
-        axes = ("pod", "data", "model")[-len(dims):] if len(dims) < 3 else ("pod", "data", "model")
-        mesh = jax.make_mesh(dims, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+        if len(dims) == 4:  # 3-tier fabric: (pod, host, data, model)
+            axes = ("pod", "host", "data", "model")
+        elif len(dims) < 3:
+            axes = ("pod", "data", "model")[-len(dims):]
+        else:
+            axes = ("pod", "data", "model")
+        mesh = make_mesh(dims, axes)
     else:
-        mesh = jax.make_mesh((1, ndev, 1), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        mesh = make_mesh((1, ndev, 1), ("pod", "data", "model"))
 
     st = ModelSettings(param_dtype="float32", compute_dtype="float32",
                        remat="none", loss_chunk=min(128, shape.seq_len),

@@ -1,8 +1,12 @@
 """DFabric gradient synchronization — the paper's DDP port, plus ZeRO-1.
 
 This module executes a :class:`repro.core.planner.SyncPlan` inside a
-``shard_map`` whose manual axes are the DP domain (fast="data" == ICI /
-CXL-fabric tier, slow="pod" == DCN / Ethernet tier).
+``shard_map`` whose manual axes are the DP domain.  The fast side of the
+domain is an ORDERED tuple of tiers (``SyncSettings.fast_axes``, fastest
+first — e.g. ``("data", "host")`` for intra-host ICI then rack-level CXL);
+the slowest tier (``slow_axis`` == "pod", the DCN / Ethernet leg) is where
+the NIC pool stripes.  Single-fast-axis (two-tier) call sites keep working
+through the legacy ``fast_axis`` field.
 
 Two modes:
 
@@ -32,7 +36,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import dfabric_all_reduce, dfabric_reduce_scatter, pod_psum
+from repro.core import prims
+from repro.core.collectives import (dfabric_all_gather, dfabric_all_reduce,
+                                    dfabric_reduce_scatter, pod_psum)
+from repro.utils.jax_compat import axis_size
 from repro.core.planner import Section, SyncPlan
 from repro.optim.adamw import AdamWConfig, adamw_leaf
 from repro.utils.trees import tree_from_paths, tree_paths
@@ -75,6 +82,12 @@ def bucket_padded_numel(sec: Section, n_fast: int) -> int:
 
 @dataclass(frozen=True)
 class SyncSettings:
+    """DP-domain axis layout of one sync plan.
+
+    ``fast_axes`` is the ordered fast-tier axis list (fastest first); when
+    None, the legacy single ``fast_axis`` is used.  ``n_fast`` is the
+    PRODUCT of all fast-tier sizes (ZeRO-1 shards are 1/n_fast)."""
+
     mode: str = "zero1"  # "paper" | "zero1"
     fast_axis: str = "data"
     slow_axis: Optional[str] = "pod"
@@ -84,10 +97,40 @@ class SyncSettings:
     # shard_map (§Perf iteration 6): TP-sharded sections then psum their
     # sq-norms over this axis too
     model_axis: Optional[str] = None
+    fast_axes: Optional[Tuple[str, ...]] = None  # ordered, fastest first
+
+    @property
+    def fast(self) -> Tuple[str, ...]:
+        """All fast-tier axes, fastest first."""
+        return self.fast_axes if self.fast_axes else (self.fast_axis,)
+
+    @property
+    def fast_entry(self):
+        """PartitionSpec entry for a dim scattered over the fast tiers:
+        the bare axis name for one tier, the ordered tuple for several
+        (fastest-major, matching dfabric_reduce_scatter ownership)."""
+        f = self.fast
+        return f if len(f) > 1 else f[0]
 
     @property
     def dp_total(self) -> int:
         return self.n_fast * self.n_slow
+
+
+def flat_fast_index(ss: SyncSettings, ranks: prims.Ranks = None):
+    """This rank's flattened index over the fast tiers, fastest-tier-major
+    (matches the ownership order of ``dfabric_reduce_scatter``)."""
+    idx = None
+    for a in ss.fast:
+        i = prims.axis_rank(a, ranks)
+        idx = i if idx is None else idx * axis_size(a) + i
+    return idx if idx is not None else jnp.int32(0)
+
+
+def full_depth(sec: Section, ss: SyncSettings) -> bool:
+    """The ZeRO-1 fused path owns a 1/n_fast shard, which requires the
+    section's tier plan to scatter over EVERY fast tier."""
+    return sec.sync.scatter_depth < 0 or sec.sync.scatter_depth >= len(ss.fast)
 
 
 def section_kind(sec: Section, ss: SyncSettings) -> str:
@@ -97,7 +140,7 @@ def section_kind(sec: Section, ss: SyncSettings) -> str:
     if len(sec.leaf_paths) > 1:
         return "bucket"
     if ss.mode == "zero1" and sec.sync.strategy == "hier_striped" \
-            and sec.scatter_dim >= 0:
+            and sec.scatter_dim >= 0 and full_depth(sec, ss):
         return "shard"
     return "full_tensor"
 
@@ -134,30 +177,32 @@ def sync_state_specs(plan: SyncPlan, param_shapes: Dict[str, Any],
             if kind == "shard":
                 nd = len(flat[sec.leaf_paths[0]].shape)
                 sp = [None] * nd
-                sp[sec.scatter_dim] = ss.fast_axis
+                sp[sec.scatter_dim] = ss.fast_entry
                 return P(*sp)
             if kind == "bucket" and sec.sync.strategy == "hier_striped":
-                return P(ss.fast_axis)
+                return P(ss.fast_entry)
             return P()
 
         # moments are shard-resident on the fused ZeRO-1 paths (tensor shard
         # or scattered flat bucket)
         zero1_path = ss.mode == "zero1" and sec.sync.strategy == "hier_striped" \
-            and (kind == "bucket" or sec.scatter_dim >= 0)
+            and (kind == "bucket" or (sec.scatter_dim >= 0 and full_depth(sec, ss)))
         mv = shard_spec() if zero1_path else P()
         if kind == "bucket" and zero1_path:
-            mv = P(ss.fast_axis)
+            mv = P(ss.fast_entry)
         entry = {"m": mv, "v": mv}
         if init_entry_has_ef(sec):
-            # EF feeds the pod leg, which always operates on the ICI shard
+            # EF feeds the slow leg, which operates on the shard scattered
+            # over the section's fast-tier PREFIX (its scatter_depth)
+            scattered = _scattered_axes(sec, ss)
             if sec.sync.strategy != "hier_striped":
                 entry["ef"] = P()
             elif kind == "bucket":
-                entry["ef"] = P(ss.fast_axis)
-            elif sec.scatter_dim >= 0:
+                entry["ef"] = P(ss.fast_entry)
+            elif sec.scatter_dim >= 0 and scattered:
                 nd = len(flat[sec.leaf_paths[0]].shape)
                 sp = [None] * nd
-                sp[sec.scatter_dim] = ss.fast_axis
+                sp[sec.scatter_dim] = scattered if len(scattered) > 1 else scattered[0]
                 entry["ef"] = P(*sp)
             else:
                 entry["ef"] = P()
@@ -167,6 +212,15 @@ def sync_state_specs(plan: SyncPlan, param_shapes: Dict[str, Any],
 
 def init_entry_has_ef(sec: Section) -> bool:
     return sec.sync.codec is not None and sec.sync.error_feedback
+
+
+def _scattered_axes(sec: Section, ss: SyncSettings) -> Tuple[str, ...]:
+    """The fast-tier axes a hier_striped section actually scatters over —
+    the first ``scatter_depth`` entries of the ordered fast-axis list."""
+    if sec.sync.strategy != "hier_striped" or sec.scatter_dim < 0:
+        return ()
+    d = len(ss.fast) if sec.sync.scatter_depth < 0 else sec.sync.scatter_depth
+    return ss.fast[:d]
 
 
 def inner_state_specs(plan: SyncPlan, param_specs_flat: Dict[str, P],
@@ -232,13 +286,16 @@ def merged_state_specs(plan: SyncPlan, param_shapes: Dict[str, Any],
 
 def sync_and_update(params, grads, sync_state, plan: SyncPlan,
                     ss: SyncSettings, lr, opt_cfg: AdamWConfig,
-                    fast_idx=None
+                    fast_idx=None, ranks: prims.Ranks = None
                     ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
     """Execute the plan; returns (new_params, new_sync_state, metrics).
 
-    ``fast_idx``: this rank's index along the fast (ICI) axis.  Must be
+    ``fast_idx``: this rank's flattened index over the fast tiers.  Must be
     computed *outside* when running inside the nested model-manual
     shard_map (axis_index of a parent-manual axis is not allowed there).
+    ``ranks``: per-axis rank indices threaded in as data — REQUIRED on the
+    0.4.x stack when a TP axis stays auto, where ``lax.axis_index`` of a
+    manual axis cannot lower (see ``repro.core.prims``).
     """
     pflat = tree_paths(params)
     gflat = tree_paths(grads)
@@ -261,19 +318,21 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
             g = gflat[sec.leaf_paths[0]].astype(jnp.float32)
             k = max(sec.scatter_dim, 0)
         zero1_path = (ss.mode == "zero1" and sec.sync.strategy == "hier_striped"
-                      and (bucket or sec.scatter_dim >= 0))
+                      and (bucket or (sec.scatter_dim >= 0 and full_depth(sec, ss))))
         model_axes = ((ss.model_axis,) if (ss.model_axis and sec.model_sharded)
                       else ())
         if zero1_path:
             shard, new_ef = dfabric_reduce_scatter(
-                g, ss.fast_axis, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef)
+                g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
+                ranks=ranks)
             shard = shard * inv_dp
             synced[sec.name] = ("shard", shard, k)
             sqnorm = sqnorm + lax.psum(jnp.sum(jnp.square(shard)),
-                                       (ss.fast_axis,) + model_axes)
+                                       ss.fast + model_axes)
         else:
             full, new_ef = dfabric_all_reduce(
-                g, ss.fast_axis, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef)
+                g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
+                ranks=ranks)
             full = full * inv_dp
             synced[sec.name] = ("full", full, k)
             sq = jnp.sum(jnp.square(full))
@@ -295,8 +354,9 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
         entry = new_sections[sec.name]
         bucket = len(sec.leaf_paths) > 1
         if kind == "shard":
-            # parameter shard owned by this ICI rank
-            idx = fast_idx if fast_idx is not None else lax.axis_index(ss.fast_axis)
+            # parameter shard owned by this fast-tier rank (flattened
+            # fastest-tier-major over all fast axes)
+            idx = fast_idx if fast_idx is not None else flat_fast_index(ss, ranks)
             if bucket:
                 p_full = _bucket_pack(pflat, sec, n_fast)
                 blk = p_full.shape[0] // n_fast
@@ -308,9 +368,11 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
             new_p_sh, m, v = adamw_leaf(p_sh, g, entry["m"], entry["v"], step,
                                         lr, opt_cfg, clip)
             entry["m"], entry["v"] = m, v
-            # the all-gather now carries UPDATED PARAMETERS (fused ZeRO-1)
-            gathered = lax.all_gather(new_p_sh, ss.fast_axis,
-                                      axis=(0 if bucket else k), tiled=True)
+            # the all-gather now carries UPDATED PARAMETERS (fused ZeRO-1);
+            # gathers run up the fast tiers in reverse scatter order
+            gathered = dfabric_all_gather(new_p_sh, ss.fast,
+                                          gather_dim=(0 if bucket else k),
+                                          ranks=ranks)
             if bucket:
                 new_flat.update(_bucket_unpack(gathered, sec, pflat))
             else:

@@ -27,8 +27,10 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import prims
 from repro.core.planner import Planner, SyncPlan
-from repro.core.topology import TwoTierTopology
+from repro.core.topology import TwoTierTopology, topology_from_mesh_sizes
+from repro.utils import jax_compat
 from repro.models.registry import Model
 from repro.models.sharding import MeshInfo
 from repro.optim.adamw import AdamWConfig, adamw_update, init_moments
@@ -42,12 +44,39 @@ from repro.utils.trees import tree_paths
 # ---------------------------------------------------------------------------
 
 
-def mesh_info(mesh: Mesh, *, fsdp: bool = False, embed_tp: bool = True) -> MeshInfo:
+#: DP mesh axes, slowest tier first (the order batch dims are laid out in);
+#: "host" is the optional mid tier of a 3-tier fabric (rack-level CXL).
+DP_MESH_AXES = ("pod", "host", "data")
+
+#: hidden batch key carrying each DP member's flat rank as data (needed by
+#: the 0.4.x partitioner, where axis_index cannot lower under
+#: partial-manual shard_map — see repro.core.prims)
+DP_RANK_KEY = "__dp_rank__"
+
+
+def dp_axes_of(sizes) -> Tuple[str, ...]:
+    return tuple(a for a in DP_MESH_AXES if a in sizes)
+
+
+def fast_axes_of(sizes) -> Tuple[str, ...]:
+    """Fast-tier DP axes ordered FASTEST first (the reduce-scatter order);
+    the slowest tier ("pod") is excluded."""
+    return tuple(a for a in ("data", "host") if a in sizes)
+
+
+def mesh_info(mesh: Mesh, *, fsdp: bool = False,
+              embed_tp: Optional[bool] = None) -> MeshInfo:
+    if embed_tp is None:
+        # vocab-sharded tables turn the embedding lookup into a gather whose
+        # operand is sharded over the auto (TP) axis; the 0.4.x SPMD
+        # partitioner hard-aborts on such gathers inside a partial-manual
+        # shard_map, so dfabric mode replicates the tables on that stack.
+        # GSPMD (fsdp) mode has no manual region and keeps vocab TP.
+        embed_tp = fsdp or prims.HAS_PARTIAL_MANUAL_COLLECTIVES
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
     return MeshInfo(sizes, tp_axis="model" if "model" in sizes else None,
-                    fsdp_axis="data" if fsdp else None, dp_axes=dp_axes,
-                    embed_tp=embed_tp)
+                    fsdp_axis="data" if fsdp else None,
+                    dp_axes=dp_axes_of(sizes), embed_tp=embed_tp)
 
 
 def batch_sharding(mesh: Mesh, model: Model, mi: MeshInfo):
@@ -60,18 +89,21 @@ def batch_sharding(mesh: Mesh, model: Model, mi: MeshInfo):
 # ---------------------------------------------------------------------------
 
 
-def make_sync_plan(model: Model, mesh: Mesh, topo: TwoTierTopology, *,
+def make_sync_plan(model: Model, mesh: Mesh, topo, *,  # topo: TwoTierTopology | FabricSpec
                    codec: Optional[str] = None, strategy: str = "auto",
                    bucket_bytes: int = 4 << 20,
-                   embed_tp: bool = True) -> Tuple[SyncPlan, SyncSettings]:
+                   embed_tp: Optional[bool] = None) -> Tuple[SyncPlan, SyncSettings]:
     mi = mesh_info(mesh, embed_tp=embed_tp)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n_fast = sizes.get("data", 1)
+    fast_axes = fast_axes_of(sizes) or ("data",)
+    fast_sizes = tuple(sizes.get(a, 1) for a in fast_axes)
+    n_fast = int(np.prod(fast_sizes))
     n_slow = sizes.get("pod", 1)
-    ss = SyncSettings(mode="zero1", fast_axis="data",
+    ss = SyncSettings(mode="zero1", fast_axis=fast_axes[0],
                       slow_axis="pod" if "pod" in sizes else None,
                       n_fast=n_fast, n_slow=n_slow,
-                      model_axis="model" if "model" in sizes else None)
+                      model_axis="model" if "model" in sizes else None,
+                      fast_axes=fast_axes)
     shapes = tree_paths(model.param_shapes())
     specs = tree_paths(model.param_specs(mi))
     avoid = {p: frozenset(i for i, s in enumerate(sp) if s is not None)
@@ -88,7 +120,8 @@ def make_sync_plan(model: Model, mesh: Mesh, topo: TwoTierTopology, *,
         return tuple(sh)
 
     local = {p: local_shape(p) for p in shapes}
-    planner = Planner(topo, fast_axis_size=n_fast, codec=codec, strategy=strategy)
+    planner = Planner(topo, fast_axis_sizes=fast_sizes, codec=codec,
+                      strategy=strategy)
     plan = planner.plan(shapes, bucket_bytes=bucket_bytes, avoid_dims=avoid,
                         local_shapes=local)
     return plan, ss
@@ -98,27 +131,34 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
                             ss: SyncSettings, opt_cfg: AdamWConfig,
                             lr_fn: Callable, *, microbatches: int = 1,
                             zero1: bool = True, donate: bool = True,
-                            embed_tp: bool = True):
+                            embed_tp: Optional[bool] = None):
     """Returns (step_fn(params, sync_state, batch, step_idx) ->
     (params, sync_state, metrics), init_sync_state_fn, state_sharding).
 
-    The model fwd/bwd runs with manual (pod, data) axes and auto TP; the
-    gradient sync runs inside a NESTED shard_map that also manualizes the
-    TP axis — psum_scatter of TP-sharded gradients is then a purely local
-    reduce-scatter instead of a full replication gather (§Perf iter. 6).
+    The model fwd/bwd runs with manual DP axes (pod [, host], data) and
+    auto TP; the gradient sync runs inside a NESTED shard_map that also
+    manualizes the TP axis — psum_scatter of TP-sharded gradients is then
+    a purely local reduce-scatter instead of a full replication gather
+    (§Perf iter. 6).  A hidden ``__dp_rank__`` batch input (an arange
+    sharded over the DP axes) threads each member's rank in as DATA, which
+    the 0.4.x partitioner needs because ``axis_index`` cannot lower under
+    partial-manual shard_map (see ``repro.core.prims``).
     """
     if not zero1:
         ss = dataclasses.replace(ss, mode="paper")
     arch = model.arch
-    manual = {ss.fast_axis} | ({ss.slow_axis} if ss.slow_axis else set())
-    dp_axes = tuple(a for a in ("pod", "data") if a in manual)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    manual = set(ss.fast) | ({ss.slow_axis} if ss.slow_axis else set())
+    dp_axes = tuple(a for a in DP_MESH_AXES if a in manual)
     dp_spec = dp_axes if len(dp_axes) > 1 else dp_axes[0]
     pshapes = model.param_shapes()
     state_specs = grad_sync.sync_state_specs(plan, pshapes, ss)
 
     mi = mesh_info(mesh, embed_tp=embed_tp)
     pspecs_model = model.param_specs(mi)
-    use_nested = ss.model_axis is not None
+    # the nested model-manual shard_map only lowers on the modern
+    # partitioner; older JAX runs the sync with "model" as an auto axis
+    use_nested = ss.model_axis is not None and jax_compat.HAS_NESTED_SHARD_MAP
     if use_nested:
         in_state_specs = grad_sync.inner_state_specs(
             plan, tree_paths(pspecs_model), tree_paths(pshapes))
@@ -126,12 +166,12 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
     else:
         ss_inner = dataclasses.replace(ss, model_axis=None)
 
-    def run_sync(params, grads, sync_state, lr):
+    def run_sync(params, grads, sync_state, lr, ranks):
         if not use_nested:
             return sync_and_update(params, grads, sync_state, plan,
-                                   ss_inner, lr, opt_cfg)
-        fast_idx = lax.axis_index(ss.fast_axis)  # parent-manual axis
-        inner = jax.shard_map(
+                                   ss_inner, lr, opt_cfg, ranks=ranks)
+        fast_idx = grad_sync.flat_fast_index(ss, ranks)  # parent-manual axes
+        inner = jax_compat.shard_map(
             lambda p, g, s, lr_, fi: sync_and_update(p, g, s, plan, ss_inner,
                                                      lr_, opt_cfg, fast_idx=fi),
             in_specs=(pspecs_model, pspecs_model, in_state_specs, P(), P()),
@@ -140,6 +180,16 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
         return inner(params, grads, sync_state, lr, fast_idx)
 
     def step_body(params, sync_state, batch, step_idx):
+        batch = dict(batch)
+        # decompose this member's flat DP rank (slowest-axis-major, the
+        # layout order of P(dp_axes)) into per-axis indices
+        rem = batch.pop(DP_RANK_KEY).reshape(-1)[0]
+        ranks = {}
+        for a in reversed(dp_axes):
+            n = sizes[a]
+            ranks[a] = rem % n
+            rem = rem // n
+
         def loss_of(p, b):
             return model.loss(p, b)
 
@@ -152,7 +202,15 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
                                     + a.shape[1:]), batch)
             zero = (jnp.zeros(()),
                     jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params))
-            (loss, grads), _ = lax.scan(micro, zero, mbatch)
+            if jax_compat.HAS_PARTIAL_MANUAL_LOOPS:
+                (loss, grads), _ = lax.scan(micro, zero, mbatch)
+            else:
+                # unrolled: the scan carry holds auto-axis-sharded grads,
+                # which aborts the 0.4.x partitioner here (see jax_compat)
+                acc = zero
+                for i in range(microbatches):
+                    acc, _ = micro(acc, jax.tree.map(lambda a: a[i], mbatch))
+                loss, grads = acc
             loss = loss / microbatches
             grads = jax.tree.map(lambda g: g / microbatches, grads)
         else:
@@ -160,7 +218,8 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
 
         loss = lax.pmean(loss, dp_axes if len(dp_axes) > 1 else dp_axes[0])
         lr = lr_fn(step_idx)
-        new_params, new_state, metrics = run_sync(params, grads, sync_state, lr)
+        new_params, new_state, metrics = run_sync(params, grads, sync_state,
+                                                  lr, ranks)
         metrics = dict(metrics)
         metrics["loss"] = loss
         metrics["lr"] = lr * jnp.ones(())
@@ -169,14 +228,30 @@ def make_dfabric_train_step(model: Model, mesh: Mesh, plan: SyncPlan,
     batch_specs = {k: P(dp_spec, *([None] * 1)) for k in ("tokens", "labels")}
     if arch.is_encdec:
         batch_specs["frames"] = P(dp_spec, None, None)
+    batch_specs[DP_RANK_KEY] = P(dp_spec)
     metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
 
-    fn = jax.shard_map(step_body, mesh=mesh,
-                       in_specs=(P(), state_specs, batch_specs, P()),
-                       out_specs=(P(), state_specs, metric_specs),
-                       axis_names=manual, check_vma=False)
+    fn = jax_compat.shard_map(step_body, mesh=mesh,
+                              in_specs=(P(), state_specs, batch_specs, P()),
+                              out_specs=(P(), state_specs, metric_specs),
+                              axis_names=manual, check_vma=False)
     jit_kw = dict(donate_argnums=(0, 1)) if donate else {}
-    step_fn = jax.jit(fn, **jit_kw)
+    jit_fn = jax.jit(fn, **jit_kw)
+    # device-resident once: feeding a host array would re-transfer and
+    # reshard the rank vector on every step
+    rank_arr = jax.device_put(
+        np.arange(max(ss.dp_total, 1), dtype=np.int32),
+        NamedSharding(mesh, P(dp_spec)))
+
+    def step_fn(params, sync_state, batch, step_idx):
+        return jit_fn(params, sync_state, {**batch, DP_RANK_KEY: rank_arr},
+                      step_idx)
+
+    def _lower(params, sync_state, batch, step_idx):
+        return jit_fn.lower(params, sync_state,
+                            {**batch, DP_RANK_KEY: rank_arr}, step_idx)
+
+    step_fn.lower = _lower  # keep the .lower() contract of a jitted callable
 
     def init_state():
         return grad_sync.init_sync_state(plan, pshapes, ss)
@@ -335,16 +410,14 @@ class Trainer:
     """End-to-end training driver with checkpoint/restart + preemption."""
 
     def __init__(self, model: Model, mesh: Mesh, shape: ShapeConfig,
-                 cfg: TrainerConfig, topo: Optional[TwoTierTopology] = None,
+                 cfg: TrainerConfig, topo=None,  # TwoTierTopology | FabricSpec
                  data_pipeline=None):
         from repro.checkpoint.manager import CheckpointManager
         from repro.data.pipeline import DataConfig, TokenPipeline
 
         self.model, self.mesh, self.shape, self.cfg = model, mesh, shape, cfg
-        self.topo = topo or TwoTierTopology(
-            num_pods=dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1),
-            pod_shape=tuple(s for a, s in zip(mesh.axis_names, mesh.devices.shape)
-                            if a != "pod"))
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.topo = topo if topo is not None else topology_from_mesh_sizes(sizes)
         self.pipeline = data_pipeline or TokenPipeline(
             model.arch, shape, DataConfig(seed=cfg.seed))
         opt_cfg = AdamWConfig()

@@ -13,7 +13,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import SyncConfig, dfabric_all_reduce, ring_all_reduce
 from repro.core.planner import Planner
@@ -22,10 +22,10 @@ from repro.models.sharding import MeshInfo
 from repro.optim import grad_sync
 from repro.optim.adamw import AdamWConfig
 from repro.optim.grad_sync import SyncSettings, sync_and_update
+from repro.utils import jax_compat
 from repro.utils.trees import tree_paths
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = jax_compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 rng = np.random.default_rng(0)
 x = rng.standard_normal((4, 4096)).astype(np.float32)  # 4 = pod x data members
@@ -36,7 +36,7 @@ def run_ar(cfg):
     def f(xs):
         out, _ = dfabric_all_reduce(xs.reshape(-1), "data", "pod", cfg)
         return out
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
+    g = jax.jit(jax_compat.shard_map(f, mesh=mesh, in_specs=P(("pod", "data")),
                               out_specs=P(), check_vma=False))
     xx = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
     return np.asarray(g(xx))
@@ -58,7 +58,7 @@ for cfg, tol in [
 # ring == psum (over data axis within each pod)
 def fr(xs):
     return ring_all_reduce(xs.reshape(-1), "data", 2)
-g = jax.jit(jax.shard_map(fr, mesh=mesh, in_specs=P(("pod", "data")),
+g = jax.jit(jax_compat.shard_map(fr, mesh=mesh, in_specs=P(("pod", "data")),
                           out_specs=P("pod"), check_vma=False))
 xx = jax.device_put(x, NamedSharding(mesh, P(("pod", "data"))))
 out = np.asarray(g(xx)).reshape(2, 4096)
@@ -89,12 +89,15 @@ for mode in ("zero1", "paper"):
         g = jax.tree.map(lambda a: a[0], g)  # strip the member dim
         np_, ns, m = sync_and_update(p, g, s, plan, ss, 1e-2, opt_cfg)
         return np_
-    f = jax.jit(jax.shard_map(
+    # NOTE: all mesh axes manual ("model" is unused but manualizing it keeps
+    # the 0.4.x partitioner happy — partial-manual all_gather/axis_index
+    # don't lower there; the real train step threads ranks in as data)
+    f = jax.jit(jax_compat.shard_map(
         step, mesh=mesh,
         in_specs=(P(), specs,
                   {"w": P(("pod", "data"), None, None),
                    "b": P(("pod", "data"), None)}),
-        out_specs=P(), axis_names={"pod", "data"}, check_vma=False))
+        out_specs=P(), check_vma=False))
     state = jax.device_put(state, jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs))
     gput = {k: jax.device_put(v, NamedSharding(mesh, P(("pod", "data"))))
             for k, v in grads_global.items()}
@@ -122,7 +125,7 @@ def a2a_hier(xl):
 
 outs_a2a = {}
 for nm, fn in (("flat", a2a_flat), ("hier", a2a_hier)):
-    g = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P(("pod", "data"), None, None),
+    g = jax.jit(jax_compat.shard_map(fn, mesh=mesh, in_specs=P(("pod", "data"), None, None),
                               out_specs=P(("pod", "data"), None, None),
                               check_vma=False))
     xx = jax.device_put(xa, NamedSharding(mesh, P(("pod", "data"), None, None)))

@@ -7,15 +7,14 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType
 
 from repro.configs import get_smoke_arch
 from repro.core.topology import TwoTierTopology
 from repro.models import ModelSettings, build_model
 from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.utils.jax_compat import make_mesh
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 topo = TwoTierTopology(num_pods=2, pod_shape=(2, 2))
 
 
@@ -45,6 +44,24 @@ for name, kw in runs:
     assert all(np.isfinite(l) for l in losses), (name, kw, losses)
     assert losses[-1] < losses[0], (name, kw, losses[0], losses[-1])
     print(f"{name} {kw}: {losses[0]:.3f} -> {losses[-1]:.3f} OK")
+
+# 3-tier fabric end-to-end: (pod, host, data, model) mesh; the Trainer
+# derives an N-tier FabricSpec from the "host" axis and the planner's
+# per-tier scatter depths flow through grad_sync inside the step
+mesh3 = make_mesh((2, 2, 2, 1), ("pod", "host", "data", "model"))
+model = build_model(get_smoke_arch("qwen2-0.5b"), ST)
+cfg = TrainerConfig(steps=8, lr=8e-3, warmup=2, log_every=0, seed=3,
+                    mode="dfabric", zero1=True)
+tr = Trainer(model, mesh3, Shape(), cfg)
+from repro.core.topology import FabricSpec  # noqa: E402
+assert isinstance(tr.topo, FabricSpec) and tr.topo.depth == 3
+assert tr.ss.fast_axes == ("data", "host") and tr.ss.n_fast == 4
+assert any(s.sync.scatter_depth != 0 for s in tr.plan.sections)
+out = tr.train()
+losses = [m["loss"] for m in out["metrics"]]
+assert all(np.isfinite(l) for l in losses), losses
+assert losses[-1] < losses[0], (losses[0], losses[-1])
+print(f"qwen2-0.5b 3-tier (2x2x2x1): {losses[0]:.3f} -> {losses[-1]:.3f} OK")
 
 # microbatched gradient accumulation == single batch (same data)
 model = build_model(get_smoke_arch("qwen2-0.5b"), ST)

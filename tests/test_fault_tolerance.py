@@ -12,6 +12,7 @@ from repro.configs import get_smoke_arch
 from repro.models import ModelSettings, build_model
 from repro.runtime.train_loop import (SimulatedFailure, StragglerWatchdog,
                                       Trainer, TrainerConfig)
+from repro.utils.jax_compat import make_mesh
 
 ST = ModelSettings(param_dtype="float32", compute_dtype="float32",
                    remat="none", loss_chunk=8, max_seq=64)
@@ -25,8 +26,7 @@ class _Shape:
 
 
 def _mesh():
-    return jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((1, 1, 1), ("pod", "data", "model"))
 
 
 def test_checkpoint_roundtrip_and_keep(tmp_path):

@@ -1,0 +1,193 @@
+"""N-tier FabricSpec tentpole tests.
+
+Covers the PR's acceptance criteria:
+  * recursive ``dfabric_all_reduce`` / ``dfabric_all_to_all`` match flat
+    ``lax.psum`` / ``lax.all_to_all`` on 1-, 2- and 3-tier meshes (8 forced
+    CPU devices, 2x2x2),
+  * ``CostModel.ntier_striped`` charges every tier and is monotone in the
+    slowest tier's bandwidth,
+  * ``Planner.plan`` on a 3-tier fabric emits per-tier scatter depths that
+    ``grad_sync`` consumes end-to-end,
+  * ``TwoTierTopology`` compatibility surface is unchanged.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multi_device
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+# ---------------------------------------------------------------------------
+# pure-topology units (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def _fabric3(bw_slow=6.25e9):
+    from repro.core.topology import three_tier_fabric
+    fab = three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)
+    return fab.with_slowest_bw(bw_slow)
+
+
+def test_fabric_spec_structure():
+    from repro.core.topology import FabricSpec, Tier, TwoTierTopology
+    fab = _fabric3()
+    assert fab.depth == 3
+    assert fab.axes == ("data", "host", "pod")
+    assert fab.fast_axes == ("data", "host")
+    assert fab.slow_axis == "pod"
+    assert fab.n_fast == 4 and fab.total_chips == 8
+    assert fab.members_below(0) == 1
+    assert fab.members_below(2) == 4
+    # duplicate axes rejected
+    with pytest.raises(ValueError):
+        FabricSpec(tiers=(Tier("a", "x", 2, 1e9, 1e-6),
+                          Tier("b", "x", 2, 1e9, 1e-6)))
+    # two-tier view keeps the legacy surface
+    two = fab.as_two_tier()
+    assert isinstance(two, TwoTierTopology)
+    assert two.num_pods == 2 and two.chips_per_pod == 4
+
+
+def test_two_tier_topology_compat_unchanged():
+    """The legacy constructor and its derived quantities still work."""
+    from repro.core.topology import TwoTierTopology, as_fabric
+    topo = TwoTierTopology(num_pods=2, pod_shape=(16, 16), dcn_lanes=2.0)
+    assert topo.chips_per_pod == 256
+    assert topo.total_chips == 512
+    assert topo.pool_dcn_bw == 256 * topo.hw.dcn_bw * 2.0
+    fab = as_fabric(topo)
+    assert fab.depth == 2
+    assert fab.slowest.lanes == 2.0
+    assert fab.n_fast == 256
+
+
+def test_fabric_from_mesh_sizes_tiers():
+    from repro.core.topology import fabric_from_mesh_sizes
+    f1 = fabric_from_mesh_sizes({"data": 8})
+    f2 = fabric_from_mesh_sizes({"data": 4, "pod": 2})
+    f3 = fabric_from_mesh_sizes({"data": 2, "host": 2, "pod": 2})
+    assert (f1.depth, f2.depth, f3.depth) == (1, 2, 3)
+    assert f3.axes == ("data", "host", "pod")
+    # TP chips stripe too: "model" folds into the fastest tier's size
+    fm = fabric_from_mesh_sizes({"data": 4, "model": 16, "pod": 2})
+    assert fm.tiers[0].size == 64 and fm.depth == 2
+    # size-1 axes are skipped (a single-pod mesh has no DCN tier)
+    fs = fabric_from_mesh_sizes({"data": 4, "host": 2, "pod": 1})
+    assert fs.depth == 2 and fs.axes == ("data", "host")
+
+
+def test_ntier_cost_degenerate_fabrics():
+    """A 1-tier fabric charges its single tier a full ring all-reduce, and
+    a size-1 slow tier is charged zero (not a fast tier's bytes)."""
+    from repro.core.cost_model import CostModel
+    from repro.core.topology import fabric_from_mesh_sizes, three_tier_fabric
+    one = CostModel(fabric_from_mesh_sizes({"data": 8}))
+    est = one.ntier_striped(64 << 20)
+    assert est.total_s > 0 and len(est.charges) == 1
+    assert est.charges[0].tier == "ici" and not est.charges[0].scattered
+    deg = CostModel(three_tier_fabric(num_pods=1, hosts_per_pod=2,
+                                      chips_per_host=2))
+    est = deg.ntier_striped(64 << 20)
+    assert est.charges[-1].tier == "dcn"
+    assert est.slow_bytes_per_chip == 0.0 and est.slow_s == 0.0
+    assert est.fast_s > 0
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_ntier_cost_charges_every_tier():
+    from repro.core.cost_model import CostModel
+    cm = CostModel(_fabric3())
+    est = cm.ntier_striped(64 << 20, scatter_depth=-1)
+    assert len(est.charges) == 3
+    assert [c.tier for c in est.charges] == ["ici", "cxl", "dcn"]
+    assert all(c.seconds > 0 for c in est.charges)
+    # fast tiers scattered, slow leg not
+    assert est.charges[0].scattered and est.charges[1].scattered
+    assert not est.charges[2].scattered
+    # striping: the slow leg carries 1/n_fast of the payload per chip
+    shallow = cm.ntier_striped(64 << 20, scatter_depth=0)
+    assert est.slow_bytes_per_chip * 4 == pytest.approx(
+        shallow.slow_bytes_per_chip)
+
+
+@pytest.mark.parametrize("nbytes", [1 << 20, 64 << 20, 1 << 30])
+def test_ntier_cost_monotone_in_slow_bw(nbytes):
+    """A 3-tier plan's estimate must improve as the slowest tier speeds up."""
+    from repro.core.cost_model import CostModel
+    bws = [1e9, 5e9, 25e9, 100e9]
+    times = [CostModel(_fabric3(bw)).ntier_striped(nbytes).total_s
+             for bw in bws]
+    assert all(a > b for a, b in zip(times, times[1:])), times
+
+
+def test_ntier_best_prefers_deeper_scatter():
+    """In the alpha-beta model, scattering over more fast tiers never makes
+    the slow leg slower; the best plan uses full depth for large payloads."""
+    from repro.core.cost_model import CostModel
+    cm = CostModel(_fabric3())
+    best = cm.ntier_best(256 << 20)
+    assert best.scatter_depth == 2
+
+
+# ---------------------------------------------------------------------------
+# planner on a 3-tier fabric
+# ---------------------------------------------------------------------------
+
+
+def test_planner_emits_per_tier_depths():
+    from repro.core.planner import Planner
+    fab = _fabric3()
+    planner = Planner(fab, strategy="hier_striped")
+    shapes = {
+        # divisible by 2*2 -> full depth (-1)
+        "deep": jax.ShapeDtypeStruct((8, 1024), jnp.float32),
+        # every dim divisible by 2 but not 4 -> depth 1 (fastest tier only)
+        "shallow": jax.ShapeDtypeStruct((6, 1022), jnp.float32),
+        # indivisible -> flat
+        "odd": jax.ShapeDtypeStruct((5, 7), jnp.float32),
+    }
+    plan = planner.plan(shapes, bucket_bytes=1)
+    by_name = {s.name: s for s in plan.sections}
+    assert by_name["deep"].sync.scatter_depth == -1
+    assert by_name["shallow"].sync.scatter_depth == 1
+    assert by_name["odd"].sync.strategy == "flat"
+    assert plan.est_total_s > 0
+
+
+def test_planner_cost_monotone_in_slow_bw():
+    from repro.core.planner import Planner
+    shapes = {"w": jax.ShapeDtypeStruct((64, 4096), jnp.float32)}
+    costs = [Planner(_fabric3(bw), strategy="hier_striped").plan(shapes).est_total_s
+             for bw in (1e9, 10e9, 100e9)]
+    assert costs[0] > costs[1] > costs[2], costs
+
+
+def test_planner_two_tier_call_sites_unchanged():
+    """Legacy TwoTierTopology planner construction keeps working."""
+    from repro.core.planner import Planner
+    from repro.core.topology import TwoTierTopology
+    topo = TwoTierTopology(num_pods=2, pod_shape=(2, 2))
+    planner = Planner(topo, fast_axis_size=2, strategy="hier_striped")
+    plan = planner.plan({"w": jax.ShapeDtypeStruct((8, 16), jnp.float32)},
+                        bucket_bytes=1)
+    assert plan.sections[0].sync.scatter_depth == -1
+    assert planner.fast_sizes == (2,)
+
+
+# ---------------------------------------------------------------------------
+# multi-device equivalence battery (8 forced CPU devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_multi_device_ntier_battery():
+    out = run_multi_device(os.path.join(HERE, "batteries", "ntier_battery.py"))
+    assert "ALL OK" in out

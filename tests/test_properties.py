@@ -3,7 +3,11 @@ cost model, planner, bucketing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.compression import Int8Codec, TopKCodec
 from repro.core.cost_model import CostModel

@@ -161,7 +161,8 @@ def test_analytics_matches_xla_costs(name):
     params = m.init(jax.random.key(0))
     c = jax.jit(lambda p, t: m.prefill(p, t)[0]).lower(
         params, jnp.zeros((4, 64), jnp.int32)).compile()
-    hlo_flops = c.cost_analysis()["flops"]
+    from repro.utils.jax_compat import cost_analysis
+    hlo_flops = cost_analysis(c)["flops"]
     est = model_cost(m, shape, "prefill")["fwd_flops"]
     assert 0.85 < est / hlo_flops < 1.15, (est, hlo_flops)
 
@@ -203,8 +204,8 @@ def test_decode_server_continuous_batching():
     st = ModelSettings(param_dtype="float32", compute_dtype="float32",
                        remat="none", max_seq=64)
     model = build_model(get_smoke_arch("qwen2-0.5b"), st)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.utils.jax_compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     params = model.init(jax.random.key(0))
     server = DecodeServer(model, mesh, batch_slots=2, max_seq=64)
     for i in range(5):  # more requests than slots -> queueing + swap

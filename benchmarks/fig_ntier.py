@@ -14,10 +14,12 @@ from repro.core.topology import (HardwareSpec, TwoTierTopology,
                                  three_tier_fabric)
 
 NBYTES = 100 * 2**20  # 100 MiB gradient
+SMOKE_NBYTES = 1 * 2**20
 
 
-def run():
+def run(smoke: bool = False):
     rows = []
+    nbytes = SMOKE_NBYTES if smoke else NBYTES
 
     def add(name, sec, derived=""):
         rows.append((f"ntier/{name}", sec * 1e6, derived))
@@ -26,7 +28,7 @@ def run():
     # two-tier: 2 pods x 256 chips on ICI
     two = TwoTierTopology(num_pods=2, pod_shape=(16, 16), hw=hw)
     cm2 = CostModel(two)
-    t2 = cm2.ntier_striped(NBYTES).total_s
+    t2 = cm2.ntier_striped(nbytes).total_s
     add("two_tier_striped", t2, "baseline")
 
     # three-tier: same 512 chips, each pod split into 4 hosts of 64 on the
@@ -35,10 +37,10 @@ def run():
                               hw=hw)
     cm3 = CostModel(three)
     for depth in range(3):
-        est = cm3.ntier_striped(NBYTES, scatter_depth=depth)
+        est = cm3.ntier_striped(nbytes, scatter_depth=depth)
         add(f"three_tier_depth{depth}", est.total_s,
             f"{t2 / est.total_s:.2f}x_vs_2tier")
-    best = cm3.ntier_best(NBYTES)
+    best = cm3.ntier_best(nbytes)
     add("three_tier_best", best.total_s,
         f"depth={best.scatter_depth}")
     per_tier = best.tier_seconds()
@@ -52,8 +54,8 @@ def run():
         e2 = CostModel(TwoTierTopology(num_pods=2, pod_shape=(16, 16), hw=hw_bw))
         e3 = CostModel(three_tier_fabric(num_pods=2, hosts_per_pod=4,
                                          chips_per_host=64, hw=hw_bw))
-        s2 = e2.ntier_striped(NBYTES).total_s
-        s3 = e3.ntier_best(NBYTES).total_s
+        s2 = e2.ntier_striped(nbytes).total_s
+        s3 = e3.ntier_best(nbytes).total_s
         add(f"sweep_dcn{dcn_gbps:g}GBps", s3, f"{s2 / s3:.2f}x_vs_2tier")
     return rows
 

@@ -2,25 +2,41 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
     PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` runs the fast analytic figure subset (fig_ntier, fig_overlap)
+at tiny payload sizes — the CI sanity job.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast analytic subset at tiny sizes (CI)")
+    args = ap.parse_args()
+
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
                             fig12_nic_scaling, fig13_timesharing, fig_ntier,
-                            roofline, table4_breakdown)
-    modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-               fig12_nic_scaling, fig13_timesharing, fig_ntier,
-               table4_breakdown, roofline]
+                            fig_overlap, roofline, table4_breakdown)
+    if args.smoke:
+        modules = [fig_ntier, fig_overlap]
+    else:
+        modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
+                   fig12_nic_scaling, fig13_timesharing, fig_ntier,
+                   fig_overlap, table4_breakdown, roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:
         try:
-            for name, us, derived in mod.run():
+            kw = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kw["smoke"] = True
+            for name, us, derived in mod.run(**kw):
                 print(f"{name},{us:.3f},{derived}")
         except Exception:
             failed += 1

@@ -1,22 +1,31 @@
-"""DFabric core: N-tier fabric topology, cost model, collectives, planner."""
+"""DFabric core: N-tier fabric topology, CommSchedule IR, cost model,
+collectives (the schedule executor), planner."""
 from repro.core.topology import (
     FabricSpec, HardwareSpec, Tier, TwoTierTopology, as_fabric,
     fabric_from_mesh_sizes, production_topology, three_tier_fabric,
     topology_from_mesh_sizes)
+from repro.core.schedule import (
+    AllGather, CommSchedule, Psum, ReduceScatter, SlowChunk, SyncConfig,
+    build_schedule, schedule_from_axes)
 from repro.core.cost_model import (
-    CostModel, CollectiveEstimate, NTierEstimate, TierCharge)
+    CostModel, CollectiveEstimate, LegCharge, NTierEstimate,
+    ScheduleEstimate, TierCharge)
 from repro.core.collectives import (
-    SyncConfig, dfabric_all_gather, dfabric_all_reduce, dfabric_all_to_all,
-    dfabric_reduce_scatter, pod_psum, ring_all_reduce)
+    dfabric_all_gather, dfabric_all_reduce, dfabric_all_to_all,
+    dfabric_reduce_scatter, lower_all_reduce, lower_reduce_scatter,
+    pod_psum, ring_all_reduce)
 from repro.core.planner import Planner, SyncPlan, Section
 
 __all__ = [
     "FabricSpec", "HardwareSpec", "Tier", "TwoTierTopology", "as_fabric",
     "fabric_from_mesh_sizes", "production_topology", "three_tier_fabric",
     "topology_from_mesh_sizes",
-    "CostModel", "CollectiveEstimate", "NTierEstimate", "TierCharge",
-    "SyncConfig", "dfabric_all_gather", "dfabric_all_reduce",
-    "dfabric_all_to_all", "dfabric_reduce_scatter", "pod_psum",
-    "ring_all_reduce",
+    "AllGather", "CommSchedule", "Psum", "ReduceScatter", "SlowChunk",
+    "SyncConfig", "build_schedule", "schedule_from_axes",
+    "CostModel", "CollectiveEstimate", "LegCharge", "NTierEstimate",
+    "ScheduleEstimate", "TierCharge",
+    "dfabric_all_gather", "dfabric_all_reduce", "dfabric_all_to_all",
+    "dfabric_reduce_scatter", "lower_all_reduce", "lower_reduce_scatter",
+    "pod_psum", "ring_all_reduce",
     "Planner", "SyncPlan", "Section",
 ]

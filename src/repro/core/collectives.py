@@ -1,39 +1,38 @@
-"""DFabric collectives — the paper's NIC pool + memory pool as JAX ops,
-generalized to an N-tier fabric.
+"""DFabric collectives — the executor that lowers a :class:`CommSchedule`
+to JAX ops.
 
 All functions here run *inside* a ``shard_map`` whose manual axes are the
 DP domain.  The fast side of the domain is an ORDERED tuple of axes,
 fastest first (e.g. ``("data", "host")`` for intra-host ICI then rack-level
 CXL); the slowest tier (``slow_axis``, the paper's Ethernet / "pod") is
 where the NIC pool stripes.  The TP axis ("model") stays an auto (GSPMD)
-axis.  Passing a single string for ``fast_axis`` keeps the original
-two-tier call signature working unchanged.
+axis.
 
-The paper-faithful hierarchical all-reduce, recursively per tier::
+The tier walk itself is NOT encoded here anymore: ``repro.core.schedule``
+builds a typed leg list (``ReduceScatter`` / ``Psum`` / ``SlowChunk`` /
+``AllGather``) once, and this module only lowers legs:
 
-    reduce-scatter over fast tier 0        (fastest: ICI)
-      reduce-scatter over fast tier 1      (e.g. rack-level CXL fabric)
-        ...
-          all-reduce over the slowest axis (every chip carries only
-                                            1/prod(fast sizes) of the
-                                            payload over DCN simultaneously
-                                            == the NIC pool striping)
-        ...
-      all-gather over fast tier 1
-    all-gather over fast tier 0            (memory pool absorbs each shard
-                                            into its own HBM)
+  * sequential lowering walks the legs in order — reduce-scatter down,
+    slow chunks, all-gather up (numerically a flat ``lax.psum`` at every
+    depth, codec legs to tolerance);
+  * **pipelined** lowering (``CommSchedule.pipelined``) splits the tensor
+    into ``chunks`` along the scatter dim and software-pipelines the slow
+    leg: chunk *i*'s slow-tier psum is issued while chunk *i−1* runs its
+    fast-tier all-gathers (double-buffered — the paper's NIC pool keeping
+    the Ethernet leg busy while CXL/ICI do local work).  Same numerics:
+    ``psum(x) == concat(psum(chunk_i))`` exactly.
 
-Codec / chunking (``SyncConfig``) apply ONLY to the slowest leg — DFabric's
-point is that bandwidth is scarce exactly there; every fast leg stays
-exact.  ``SyncConfig.scatter_depth`` limits how many fast tiers are
-scattered (the planner's per-section tier plan); tiers beyond the depth
-are plain-psum'ed at their level, which keeps the result numerically
-equivalent to a flat ``lax.psum`` at every depth.
+Codec / chunking (``SyncConfig``) apply to the slowest leg — DFabric's
+point is that bandwidth is scarce exactly there; an optional ``mid_codec``
+compresses UNSCATTERED mid-tier psum legs in deep hierarchies.  The legacy
+entry points (``dfabric_all_reduce`` / ``dfabric_reduce_scatter``) survive
+as thin constructors: given no schedule they build one in-trace from
+``(axes, SyncConfig, shape)`` via the same builder the planner uses.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence, Tuple, Union
+from dataclasses import replace as _dc_replace
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,40 +40,19 @@ from jax import lax
 
 from repro.core import compression as comp
 from repro.core import prims
+from repro.core.schedule import (AllGather, CommSchedule, Psum, ReduceScatter,
+                                 SlowChunk, SyncConfig, build_schedule,
+                                 schedule_from_axes)
 from repro.utils.jax_compat import axis_size
 
+__all__ = [
+    "SyncConfig", "dfabric_all_reduce", "dfabric_reduce_scatter",
+    "dfabric_all_gather", "dfabric_all_to_all", "pod_psum",
+    "lower_all_reduce", "lower_reduce_scatter", "ring_all_reduce",
+    "normalize_axes", "fast_axes_size",
+]
+
 Axes = Union[str, Sequence[str]]
-
-# ---------------------------------------------------------------------------
-# Strategy description
-# ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class SyncConfig:
-    """How one gradient bucket ("Section") is synchronized.
-
-    ``scatter_depth``: number of fast tiers to reduce-scatter over before
-    the slowest leg (-1 = all of them).  Fast tiers beyond the depth are
-    summed in place (plain psum) instead of scattered — the planner picks
-    the depth per section from the cost model (e.g. a tensor divisible by
-    the ICI size but not by ICI*CXL scatters only one level deep).
-    """
-
-    strategy: str = "hier_striped"  # flat | hier_root | hier_striped
-    chunks: int = 1  # slow-tier sub-flows per Section (MPTCP analogue)
-    codec: Optional[str] = None  # None | "int8" | "topk"
-    codec_block: int = 2048
-    codec_k_frac: float = 0.0625
-    error_feedback: bool = True
-    scatter_depth: int = -1  # fast tiers to scatter over (-1 = all)
-
-    def make_codec(self):
-        if self.codec == "int8":
-            return comp.Int8Codec(block=self.codec_block)
-        if self.codec == "topk":
-            return comp.TopKCodec(k_frac=self.codec_k_frac)
-        return None
 
 
 # ---------------------------------------------------------------------------
@@ -106,8 +84,257 @@ def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
     return list(x.reshape(chunks, n // chunks))
 
 
+def _trace_schedule(fast: Tuple[str, ...], slow_axis: Optional[str],
+                    cfg: SyncConfig, shape: Tuple[int, ...],
+                    scatter_dim: int) -> CommSchedule:
+    """Build a schedule in-trace from live axis sizes (the legacy entry
+    points' constructor path)."""
+    sizes = {a: axis_size(a) for a in fast}
+    if slow_axis is not None:
+        sizes[slow_axis] = axis_size(slow_axis)
+    return schedule_from_axes(fast, slow_axis, cfg, shape, scatter_dim, sizes)
+
+
+def _schedule_usable(schedule: Optional[CommSchedule], x: jax.Array,
+                     fast: Tuple[str, ...], slow_axis: Optional[str]) -> bool:
+    """A planner-built schedule is trusted only when it describes exactly
+    this operand (shape) and these mesh axes; otherwise the executor
+    rebuilds in-trace (e.g. the non-nested TP path sees model-global
+    shapes the planner never planned for)."""
+    if schedule is None:
+        return False
+    if tuple(schedule.shape) != tuple(x.shape):
+        return False
+    avail = set(fast) | ({slow_axis} if slow_axis else set())
+    return set(schedule.axes) <= avail
+
+
 # ---------------------------------------------------------------------------
-# The NIC-pool leg: all-reduce over the slowest (pod/DCN) axis
+# Leg lowering
+# ---------------------------------------------------------------------------
+
+
+def _slow_chunk_psum(leg: SlowChunk, x_flat: jax.Array,
+                     ef_flat: Optional[jax.Array], cfg: SyncConfig,
+                     ranks: prims.Ranks
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Lower ONE slow-tier sub-flow (this is the only leg kind where the
+    Section codec runs)."""
+    if leg.codec is None:
+        return lax.psum(x_flat, leg.axis), ef_flat
+    assert leg.codec == cfg.codec, (leg.codec, cfg.codec)
+    codec = cfg.make_codec()
+    if isinstance(codec, comp.Int8Codec):
+        return comp.compressed_psum_int8(x_flat, leg.axis, codec, ef_flat,
+                                         ranks=ranks)
+    if isinstance(codec, comp.TopKCodec):
+        return comp.compressed_psum_topk(x_flat, leg.axis, codec, ef_flat,
+                                         ranks=ranks)
+    raise ValueError(leg.codec)
+
+
+def _psum_leg(leg: Psum, x: jax.Array, cfg: SyncConfig,
+              ranks: prims.Ranks) -> jax.Array:
+    """Lower one unscattered (mid-tier / flat) psum leg."""
+    if leg.codec is None:
+        return lax.psum(x, leg.axis)
+    # mid-tier codec: int8 without error feedback (EF state belongs to the
+    # slow leg; mid tiers trade exactness for bandwidth per the plan)
+    assert leg.codec == cfg.mid_codec, (leg.codec, cfg.mid_codec)
+    shp = x.shape
+    out, _ = comp.compressed_psum_int8(x.reshape(-1), leg.axis,
+                                       cfg.make_mid_codec(), None,
+                                       ranks=ranks)
+    return out.reshape(shp)
+
+
+def _slow_group(legs: Sequence[SlowChunk], x: jax.Array,
+                ef: Optional[jax.Array], cfg: SyncConfig, ranks: prims.Ranks
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Sequentially lower a contiguous run of slow chunks over the
+    flattened shard (the non-pipelined slow leg)."""
+    shp = x.shape
+    xf = x.reshape(-1)
+    ef_f = ef.reshape(-1) if ef is not None else None
+    C = len(legs)
+    parts = _split_chunks(xf, C)
+    ef_parts = _split_chunks(ef_f, C) if ef_f is not None else [None] * C
+    outs, nefs = [], []
+    for leg, p, e in zip(legs, parts, ef_parts):
+        o, ne = _slow_chunk_psum(leg, p, e, cfg, ranks)
+        outs.append(o)
+        nefs.append(ne)
+    out = jnp.concatenate(outs) if C > 1 else outs[0]
+    if ef is not None:
+        nef = (jnp.concatenate(nefs) if C > 1 else nefs[0]).reshape(ef.shape)
+    else:
+        nef = None
+    return out.reshape(shp), nef
+
+
+def _apply_down(legs: Sequence, x: jax.Array, dim: int, cfg: SyncConfig,
+                ranks: prims.Ranks, log: Optional[List]) -> jax.Array:
+    """Lower the down phase (ReduceScatter / Psum legs), coalescing runs of
+    codec-less psums into one ``lax.psum`` call."""
+    pend: List[Psum] = []
+
+    def flush():
+        nonlocal x
+        if pend:
+            x = lax.psum(x, tuple(l.axis for l in pend))
+            if log is not None:
+                log.extend(pend)
+            pend.clear()
+
+    for leg in legs:
+        if isinstance(leg, Psum) and leg.codec is None:
+            pend.append(leg)
+            continue
+        flush()
+        if isinstance(leg, ReduceScatter):
+            x = prims.reduce_scatter_tiled(x, leg.axis, dim)
+        elif isinstance(leg, Psum):
+            x = _psum_leg(leg, x, cfg, ranks)
+        else:
+            raise TypeError(leg)
+        if log is not None:
+            log.append(leg)
+    flush()
+    return x
+
+
+def _lower_sequential(schedule: CommSchedule, x: jax.Array,
+                      ef: Optional[jax.Array], ranks: prims.Ranks,
+                      log: Optional[List], *, gather_up: bool = True
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    dim = max(schedule.scatter_dim, 0)
+    cfg = schedule.cfg
+    x = _apply_down(schedule.down_legs, x, dim, cfg, ranks, log)
+    slow = schedule.slow_legs
+    if slow:
+        x, ef = _slow_group(slow, x, ef, cfg, ranks)
+        if log is not None:
+            log.extend(slow)
+    if gather_up:
+        for leg in schedule.up_legs:
+            x = prims.all_gather_tiled(x, leg.axis, dim, ranks)
+            if log is not None:
+                log.append(leg)
+    return x, ef
+
+
+def _lower_pipelined(schedule: CommSchedule, x: jax.Array,
+                     ef: Optional[jax.Array], ranks: prims.Ranks,
+                     log: Optional[List]
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """The overlapped slow-leg pipeline.
+
+    The tensor is split into ``chunks`` along the scatter dim BEFORE the
+    fast-tier reduce-scatters (``psum(x) == concat_i(psum(chunk_i))``
+    exactly, so numerics are unchanged at every depth / chunk count).  The
+    loop is software-pipelined and double-buffered: chunk *i*'s slow-tier
+    psum is issued first, THEN chunk *i−1* runs its fast-tier all-gathers,
+    so XLA's async scheduler can keep the slow leg busy while the fast
+    tiers gather — exactly the overlap ``CostModel.from_schedule`` credits
+    (``max(slow, fast) + min(per-chunk)``).
+
+    Error-feedback state pairs local EF slice *i* with chunk *i*; the
+    pairing is arbitrary but deterministic, which is all EF needs (each
+    member re-consumes the residual of what it compressed last step).
+    """
+    dim = schedule.scatter_dim
+    cfg = schedule.cfg
+    C = schedule.chunks
+    down, slow, up = schedule.down_legs, schedule.slow_legs, schedule.up_legs
+    assert len(slow) == C, (len(slow), C)
+    blk = x.shape[dim] // C
+    parts = [lax.slice_in_dim(x, i * blk, (i + 1) * blk, axis=dim)
+             for i in range(C)]
+    if ef is not None:
+        ef_f = ef.reshape(-1)
+        m = ef_f.shape[0] // C
+        ef_parts = [ef_f[i * m:(i + 1) * m] for i in range(C)]
+    else:
+        ef_parts = [None] * C
+
+    down_log: List = [] if log is not None else None
+    slow_log: List = [] if log is not None else None
+    up_log: List = [] if log is not None else None
+
+    shards = [_apply_down(down, p, dim, cfg, ranks,
+                          down_log if i == 0 else None)
+              for i, p in enumerate(parts)]
+    shard_shape = shards[0].shape
+
+    def issue_slow(i: int):
+        o, ne = _slow_chunk_psum(slow[i], shards[i].reshape(-1), ef_parts[i],
+                                 cfg, ranks)
+        if slow_log is not None:
+            slow_log.append(slow[i])
+        return o, ne
+
+    def gather(buf: jax.Array, lg) -> jax.Array:
+        y = buf.reshape(shard_shape)
+        for leg in up:
+            y = prims.all_gather_tiled(y, leg.axis, dim, ranks)
+            if lg is not None:
+                lg.append(leg)
+        return y
+
+    outs: List[Optional[jax.Array]] = [None] * C
+    nefs: List[Optional[jax.Array]] = [None] * C
+    inflight, inflight_ef = issue_slow(0)
+    for i in range(1, C):
+        nxt, nxt_ef = issue_slow(i)  # chunk i crosses the slow tier ...
+        outs[i - 1] = gather(inflight, up_log if i == 1 else None)
+        nefs[i - 1] = inflight_ef    # ... while chunk i-1 gathers
+        inflight, inflight_ef = nxt, nxt_ef
+    outs[C - 1] = gather(inflight, up_log if C == 1 else None)
+    nefs[C - 1] = inflight_ef
+
+    if log is not None:
+        log.extend(down_log + slow_log + up_log)
+    out = jnp.concatenate(outs, axis=dim)
+    nef = None
+    if ef is not None:
+        nef = jnp.concatenate([e for e in nefs]).reshape(ef.shape)
+    return out, nef
+
+
+def lower_all_reduce(schedule: CommSchedule, x: jax.Array,
+                     ef: Optional[jax.Array] = None,
+                     ranks: prims.Ranks = None,
+                     leg_log: Optional[List] = None
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Lower a full all-reduce schedule to JAX ops.
+
+    ``leg_log``, when given, receives the legs actually lowered, in
+    schedule order — the acceptance contract is that it equals the leg
+    list ``CostModel.from_schedule`` prices."""
+    if not schedule.legs:
+        return x, ef
+    if schedule.pipelined and schedule.chunks > 1:
+        return _lower_pipelined(schedule, x, ef, ranks, leg_log)
+    return _lower_sequential(schedule, x, ef, ranks, leg_log)
+
+
+def lower_reduce_scatter(schedule: CommSchedule, x: jax.Array,
+                         ef: Optional[jax.Array] = None,
+                         ranks: prims.Ranks = None,
+                         leg_log: Optional[List] = None
+                         ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Lower only the down half of a schedule (fast-tier reduce-scatters +
+    slow leg), leaving the caller owning its 1/prod(fast sizes) shard —
+    the ZeRO-1 entry point (the up legs later carry updated parameters)."""
+    assert schedule.strategy == "hier_striped", schedule.strategy
+    assert not any(isinstance(l, Psum) for l in schedule.down_legs), \
+        "ZeRO-1 sections must scatter every fast tier"
+    return _lower_sequential(schedule, x, ef, ranks, leg_log,
+                             gather_up=False)
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry points — thin constructors over the IR
 # ---------------------------------------------------------------------------
 
 
@@ -116,74 +343,19 @@ def pod_psum(x: jax.Array, slow_axis: Optional[str], cfg: SyncConfig,
              ranks: prims.Ranks = None
              ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """All-reduce ``x`` (this chip's fast-tier-scattered shard) over the
-    slowest axis.
+    slowest axis — the bare NIC-pool leg, kept for direct callers.
 
-    Because the caller already reduce-scattered over the fast tiers, every
-    chip calls this with a distinct 1/prod(fast sizes) shard — i.e. all
-    "NICs" of the group cross the slow tier at once.  ``cfg.chunks`` splits
-    the transfer into independent collectives (sub-flows) that XLA can run
-    as overlapping async pairs.  This is the ONLY leg where the codec runs.
-    """
+    ``cfg.chunks`` splits the transfer into independent sub-flows; the
+    codec (if any) runs here and only here."""
     if slow_axis is None or axis_size(slow_axis) == 1:
         return x, ef
-    codec = cfg.make_codec()
-    if codec is None:
-        parts = _split_chunks(x, cfg.chunks)
-        outs = [lax.psum(p, slow_axis) for p in parts]
-        return jnp.concatenate(outs) if len(outs) > 1 else outs[0], ef
-    if isinstance(codec, comp.Int8Codec):
-        parts = _split_chunks(x, cfg.chunks)
-        efs = _split_chunks(ef, cfg.chunks) if ef is not None else [None] * len(parts)
-        outs, nefs = [], []
-        for p, e in zip(parts, efs):
-            o, ne = comp.compressed_psum_int8(p, slow_axis, codec, e, ranks=ranks)
-            outs.append(o)
-            nefs.append(ne)
-        out = jnp.concatenate(outs) if len(outs) > 1 else outs[0]
-        nef = (jnp.concatenate(nefs) if len(nefs) > 1 else nefs[0]) if ef is not None else None
-        return out, nef
-    if isinstance(codec, comp.TopKCodec):
-        out, nef = comp.compressed_psum_topk(x, slow_axis, codec, ef, ranks=ranks)
-        return out, nef
-    raise ValueError(codec)
-
-
-# ---------------------------------------------------------------------------
-# Full hierarchical all-reduce (paper §3 workflow, recursive over tiers)
-# ---------------------------------------------------------------------------
-
-
-def _all_axes(fast: Tuple[str, ...], slow: Optional[str]) -> Tuple[str, ...]:
-    return fast if slow is None else fast + (slow,)
-
-
-def _striped_recursive(x: jax.Array, fast: Tuple[str, ...],
-                       slow_axis: Optional[str], cfg: SyncConfig,
-                       dim: int, ef: Optional[jax.Array], depth: int,
-                       ranks: prims.Ranks = None
-                       ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """reduce-scatter down the fast tiers / slow leg / all-gather back up.
-
-    ``depth`` counts how many more fast tiers may be scattered; a tier that
-    cannot (or may not) be scattered is plain-psum'ed at its level, keeping
-    the recursion numerically equal to a flat psum at every depth.
-    """
-    if not fast:
-        shp = x.shape
-        ef_flat = ef.reshape(-1) if ef is not None else None
-        out, ef_flat = pod_psum(x.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
-        return out.reshape(shp), (ef_flat.reshape(ef.shape) if ef is not None else None)
-    a, rest = fast[0], fast[1:]
-    n = axis_size(a)
-    if depth == 0 or n == 1 or x.shape[dim] % n != 0:
-        # do not scatter this tier: sum it here, continue down
-        y = lax.psum(x, a)
-        return _striped_recursive(y, rest, slow_axis, cfg, dim, ef,
-                                  0 if depth == 0 else depth - 1, ranks)
-    s = prims.reduce_scatter_tiled(x, a, dim)
-    s, ef = _striped_recursive(s, rest, slow_axis, cfg, dim, ef, depth - 1, ranks)
-    out = prims.all_gather_tiled(s, a, dim, ranks)
-    return out, ef
+    n = axis_size(slow_axis)
+    chunks = max(cfg.chunks, 1) if cfg.codec != "topk" else 1
+    while chunks > 1 and x.shape[0] % chunks != 0:
+        chunks -= 1
+    legs = [SlowChunk(i, chunks, cfg.codec, slow_axis, slow_axis, n)
+            for i in range(chunks)]
+    return _slow_group(legs, x, ef, cfg, ranks)
 
 
 def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
@@ -191,59 +363,45 @@ def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
                        cfg: SyncConfig, scatter_dim: int = 0,
                        ef: Optional[jax.Array] = None,
                        ranks: prims.Ranks = None,
+                       schedule: Optional[CommSchedule] = None,
+                       leg_log: Optional[List] = None,
                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """All-reduce ``x`` over (fast tiers x slow tier) with the DFabric plan.
 
     ``fast_axis``: one axis name or an ordered sequence (fastest first).
     ``x`` may be any rank; ``scatter_dim`` is the dimension scattered over
     the fast tiers (must be divisible by the product of the scattered tier
-    sizes — indivisible tensors fall back to a flat psum).
+    sizes — indivisible tensors fall back to a flat psum).  When the
+    planner already built a :class:`CommSchedule` for this Section, pass
+    it via ``schedule``; otherwise one is built in-trace from ``cfg``.
     """
     fast = normalize_axes(fast_axis)
-    axes = _all_axes(fast, slow_axis)
-    if cfg.strategy == "flat" or not fast:
-        return lax.psum(x, axes), ef
-    if cfg.strategy == "hier_root":
-        # no NIC pool: reduce to rack root, root alone crosses the slow tier.
-        # (modelled for the ablation; implemented as psum over the fast
-        # tiers followed by an un-scattered slow psum — every chip
-        # technically sends, but the payload is the FULL gradient, which is
-        # what makes the baseline slow; the cost model charges it to one NIC.)
-        y = lax.psum(x, fast)
-        ef_flat = ef.reshape(-1) if ef is not None else None
-        y, ef_flat = pod_psum(y.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
-        return y.reshape(x.shape), (ef_flat.reshape(ef.shape) if ef is not None else None)
-    assert cfg.strategy == "hier_striped", cfg.strategy
-    depth = cfg.scatter_depth if cfg.scatter_depth >= 0 else len(fast)
-    nf = fast_axes_size(fast[:depth])
-    if x.shape[scatter_dim] % nf != 0:
-        # indivisible by even the planned scatter prefix: fall back to a
-        # flat psum (tiny leaves only — the planner emits a depth whose
-        # tier-size prefix product divides the tensor)
-        return lax.psum(x, axes), ef
-    return _striped_recursive(x, fast, slow_axis, cfg, scatter_dim, ef, depth,
-                              ranks)
+    if not _schedule_usable(schedule, x, fast, slow_axis):
+        schedule = _trace_schedule(fast, slow_axis, cfg, x.shape, scatter_dim)
+    return lower_all_reduce(schedule, x, ef=ef, ranks=ranks, leg_log=leg_log)
 
 
 def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
                            slow_axis: Optional[str],
                            cfg: SyncConfig, scatter_dim: int = 0,
                            ef: Optional[jax.Array] = None,
-                           ranks: prims.Ranks = None):
+                           ranks: prims.Ranks = None,
+                           schedule: Optional[CommSchedule] = None,
+                           leg_log: Optional[List] = None):
     """Like :func:`dfabric_all_reduce` but stops before the final fast-tier
     all-gathers — the caller owns the 1/prod(fast sizes) shard, indexed
     fastest-tier-major (ZeRO-1 entry point)."""
     fast = normalize_axes(fast_axis)
     nf = fast_axes_size(fast)
     assert x.shape[scatter_dim] % nf == 0, (x.shape, scatter_dim, nf)
-    s = x
-    for a in fast:
-        if axis_size(a) > 1:
-            s = prims.reduce_scatter_tiled(s, a, scatter_dim)
-    shp = s.shape
-    ef_flat = ef.reshape(-1) if ef is not None else None
-    s2, ef_flat = pod_psum(s.reshape(-1), slow_axis, cfg, ef_flat, ranks=ranks)
-    return s2.reshape(shp), (ef_flat.reshape(ef.shape) if ef is not None else None)
+    if not _schedule_usable(schedule, x, fast, slow_axis) \
+            or schedule.strategy != "hier_striped" \
+            or any(isinstance(l, Psum) for l in schedule.down_legs):
+        full = _dc_replace(cfg, scatter_depth=-1)
+        schedule = _trace_schedule(fast, slow_axis, full, x.shape,
+                                   scatter_dim)
+    return lower_reduce_scatter(schedule, x, ef=ef, ranks=ranks,
+                                leg_log=leg_log)
 
 
 def dfabric_all_gather(x: jax.Array, fast_axis: Axes,
@@ -282,7 +440,7 @@ def dfabric_all_to_all(x: jax.Array, fast_axis: Axes,
     ``lax.all_to_all(x, (slowest, ..., fastest), 0, 0)`` at every depth.
     """
     fast = normalize_axes(fast_axis)
-    axes = _all_axes(fast, slow_axis)  # fastest ... slowest
+    axes = fast if slow_axis is None else fast + (slow_axis,)
     active = [(a, axis_size(a)) for a in axes if axis_size(a) > 1]
     if not active:
         return x

@@ -26,7 +26,32 @@ import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
-from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
+import numpy as np
+
+from repro.core import schedule as sched
+from repro.core.topology import FabricSpec, Tier, TwoTierTopology, as_fabric
+
+# dtypes numpy cannot parse (jax extension types)
+_ITEMSIZE = {"bfloat16": 2, "float8_e4m3fn": 1, "float8_e5m2": 1,
+             "float8_e4m3": 1, "float8_e5m2fnuz": 1, "float8_e4m3fnuz": 1}
+
+
+def dtype_itemsize(dtype: str) -> int:
+    try:
+        return np.dtype(str(dtype)).itemsize
+    except TypeError:
+        return _ITEMSIZE.get(str(dtype), 4)
+
+
+def codec_ratio(codec: Optional[str], cfg: "sched.SyncConfig") -> float:
+    """Approximate wire-byte compression ratio of a codec (fp32 payload):
+    int8 = 1 byte/elem (+block scales) ~ 4x; top-k sends (value, index)
+    pairs for the kept fraction ~ 0.5/k_frac."""
+    if codec == "int8":
+        return 4.0
+    if codec == "topk":
+        return max(0.5 / max(cfg.codec_k_frac, 1e-9), 1.0)
+    return 1.0
 
 
 def ring_all_reduce_time(nbytes: float, n: int, bw: float, lat: float) -> float:
@@ -100,6 +125,47 @@ class NTierEstimate:
         return {c.tier: c.seconds for c in self.charges}
 
 
+@dataclass(frozen=True)
+class LegCharge:
+    """Time/bytes one schedule leg contributes — the pricing twin of the
+    executor's lowering of that same leg."""
+
+    leg: object  # the CommSchedule leg priced (ReduceScatter/Psum/...)
+    seconds: float
+    bytes_per_chip: float
+
+
+@dataclass(frozen=True)
+class ScheduleEstimate:
+    """Price of one :class:`~repro.core.schedule.CommSchedule`: per-leg
+    charges (``leg_charges[i].leg is schedule.legs[i]``), per-tier
+    aggregates, and the pipelined-overlap total."""
+
+    strategy: str
+    total_s: float
+    charges: Tuple[TierCharge, ...]
+    leg_charges: Tuple[LegCharge, ...]
+    scatter_depth: int
+    chunks: int = 1
+    pipelined: bool = False
+    notes: str = ""
+
+    @property
+    def slow_s(self) -> float:
+        return self.charges[-1].seconds if self.charges else 0.0
+
+    @property
+    def fast_s(self) -> float:
+        return sum(c.seconds for c in self.charges[:-1])
+
+    @property
+    def slow_bytes_per_chip(self) -> float:
+        return self.charges[-1].bytes_per_chip if self.charges else 0.0
+
+    def tier_seconds(self) -> Dict[str, float]:
+        return {c.tier: c.seconds for c in self.charges}
+
+
 class CostModel:
     """Completion-time estimates for an all-reduce of ``nbytes`` (global
     gradient size) over the DP domain of a :class:`TwoTierTopology` or an
@@ -127,6 +193,116 @@ class CostModel:
             # slowdown when data lives in far memory).
             rate = rate / 2.1
         return rate
+
+    # ---- schedule pricing ---------------------------------------------------
+    def from_schedule(self, schedule: "sched.CommSchedule", *,
+                      mem_bw_limit: Optional[float] = None,
+                      cached: bool = True) -> ScheduleEstimate:
+        """Price EXACTLY the legs the executor will lower — walk the same
+        :class:`~repro.core.schedule.CommSchedule` leg list, charging each
+        leg its alpha-beta time on its tier (this retires the drift
+        between ``ntier_striped`` and the executed recursion: divisibility
+        skips, chunk clamping and per-tier codecs are already resolved in
+        the schedule).
+
+        Pipelined schedules get the overlap credit
+        ``max(slow, fast) + min(per-chunk slow, per-chunk fast)``.
+
+        Note: a flat-strategy schedule is priced as per-tier sequential
+        rings (an optimistic flat); the planner keeps using ``flat_ring``
+        (the bottleneck-link model) when COMPARING flat against
+        hierarchical candidates."""
+        fab = self.fabric
+        cfg = schedule.cfg
+        payload = float(schedule.numel * dtype_itemsize(schedule.dtype))
+
+        def tier_for(leg) -> Tier:
+            for t in fab.tiers:
+                if t.axis == leg.axis or t.name == leg.tier:
+                    return t
+            # mesh axis unknown to the fabric description: price it like
+            # the fastest tier (conservative for a fast leg)
+            t0 = fab.tiers[0]
+            return Tier(leg.tier, leg.axis, leg.size, t0.bw, t0.latency)
+
+        n_chunks = max(len(schedule.slow_legs), 1)
+        leg_charges: List[LegCharge] = []
+        fast_s = slow_s = 0.0
+        for leg in schedule.legs:
+            t = tier_for(leg)
+            n = leg.size
+            if isinstance(leg, sched.ReduceScatter):
+                secs = ring_reduce_scatter_time(payload, n, t.rate, t.latency)
+                by = (n - 1) / n * payload if n > 1 else 0.0
+                payload /= max(n, 1)
+                fast_s += secs
+            elif isinstance(leg, sched.Psum):
+                ratio = codec_ratio(leg.codec, cfg)
+                if n <= 1:
+                    secs = by = 0.0
+                else:
+                    by = 2.0 * (n - 1) / n * payload / ratio
+                    secs = by / t.rate + 2.0 * (n - 1) * t.latency
+                fast_s += secs
+            elif isinstance(leg, sched.SlowChunk):
+                rate = t.rate
+                if mem_bw_limit is not None:
+                    rate = min(rate, mem_bw_limit / max(fab.n_fast, 1))
+                if not cached:
+                    rate = rate / 2.1
+                ratio = codec_ratio(leg.codec, cfg)
+                if n <= 1:
+                    secs = by = 0.0
+                else:
+                    by = 2.0 * (n - 1) / n * (payload / n_chunks) / ratio
+                    # ring latency once, then a launch overhead per extra
+                    # sub-flow (matches the retired ntier_striped total)
+                    lat = 2.0 * (n - 1) * t.latency if leg.index == 0 \
+                        else 2.0 * t.latency
+                    secs = by / rate + lat
+                slow_s += secs
+            else:  # AllGather — mirrors its ReduceScatter's payload level
+                payload *= n
+                secs = all_gather_time(payload, n, t.rate, t.latency)
+                by = (n - 1) / n * payload if n > 1 else 0.0
+                fast_s += secs
+            leg_charges.append(LegCharge(leg, secs, by))
+
+        if schedule.pipelined and schedule.chunks > 1:
+            total = max(slow_s, fast_s) \
+                + min(slow_s / schedule.chunks, fast_s / schedule.chunks)
+        else:
+            total = fast_s + slow_s
+
+        # per-tier aggregates (slow tier LAST, for the slow_s accessors)
+        agg: Dict[str, List] = {}
+        order: List[str] = []
+        for lc in leg_charges:
+            leg = lc.leg
+            if leg.tier not in agg:
+                agg[leg.tier] = [leg.axis, 0.0, 0.0, False]
+                order.append(leg.tier)
+            agg[leg.tier][1] += lc.seconds
+            agg[leg.tier][2] += lc.bytes_per_chip
+            if isinstance(leg, sched.ReduceScatter):
+                agg[leg.tier][3] = True
+        slow_tier = fab.slowest.name if fab.depth > 1 else None
+        if slow_tier is not None and slow_tier not in agg:
+            agg[slow_tier] = [fab.slowest.axis, 0.0, 0.0, False]
+            order.append(slow_tier)
+        if slow_tier in order:
+            order.remove(slow_tier)
+            order.append(slow_tier)
+        charges = tuple(TierCharge(nm, agg[nm][0], agg[nm][1], agg[nm][2],
+                                   agg[nm][3]) for nm in order)
+        name = f"schedule_{schedule.strategy}"
+        if schedule.pipelined:
+            name += "_ovl"
+        return ScheduleEstimate(
+            name, total, charges, tuple(leg_charges),
+            scatter_depth=len(schedule.scattered_axes),
+            chunks=schedule.chunks, pipelined=schedule.pipelined,
+            notes=schedule.describe())
 
     # ---- N-tier strategies --------------------------------------------------
     def ntier_striped(self, nbytes: float, scatter_depth: int = -1,
@@ -247,7 +423,7 @@ class CostModel:
         dcn_rate = self._dcn_rate_per_chip(mem_bw_limit, cached)
         shard = nbytes / (n_ici if striped else 1)
         dcn_bytes_per_chip = 2.0 * (P - 1) / P * shard / compression_ratio
-        t_dcn = dcn_bytes_per_chip / dcn_rate + 2.0 * (P - 1) * (hw.dcn_latency + chunks * 0.0)
+        t_dcn = dcn_bytes_per_chip / dcn_rate + 2.0 * (P - 1) * hw.dcn_latency
         t_dcn += (chunks - 1) * hw.dcn_latency * 2  # per-chunk launch latency
         if overlap and chunks > 1:
             # pipeline: ICI legs hide all but one chunk of the DCN leg (or

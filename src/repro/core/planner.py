@@ -7,30 +7,34 @@ transfer (recorded in DESIGN.md §2); what does transfer is cost-driven
 planning at trace time:
 
   * gradients are bucketed into **Sections** (paper §4.1 terminology),
-  * for each Section the planner consults the :class:`CostModel` and picks
-    a strategy (flat / hier_root / hier_striped), a TIER PLAN (how many
-    fast tiers of the fabric to reduce-scatter over — ``scatter_depth``),
-    a chunk count (sub-flows), and optionally a slow-tier codec,
+  * for each Section the planner SEARCHES over candidate
+    :class:`~repro.core.schedule.CommSchedule` objects — scatter depth x
+    slow-leg chunk count (overlapped pipeline) x per-tier codec — pricing
+    each with :meth:`CostModel.from_schedule`, i.e. the planner prices the
+    exact leg list the executor will lower,
+  * the winning schedule is stored ON the Section (``Section.schedule``),
+    so ``grad_sync`` / ``train_loop`` thread a schedule instead of
+    re-deriving one from ``SyncConfig``,
   * the plan is a static artifact — inspectable, serializable, and testable
     without running anything.
 
 The planner accepts either the legacy :class:`TwoTierTopology` or an
 N-tier :class:`FabricSpec`; with more than two tiers the per-section search
-runs over scatter depths of the recursive hierarchical collective (see
-``repro.core.collectives``).
+runs over scatter depths of the hierarchical collective (see
+``repro.core.schedule``).
 """
 from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
-from repro.core.collectives import SyncConfig
-from repro.core.cost_model import CostModel
+from repro.core.cost_model import CostModel, dtype_itemsize
+from repro.core.schedule import CommSchedule, SyncConfig, build_schedule
 from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
 
 
@@ -43,8 +47,11 @@ class Section:
     inside a nested model-manual shard_map (§Perf iteration 6), so all
     shapes it sees are per-model-shard.  ``model_sharded`` marks sections
     whose gradient is split over the TP axis (their global sq-norm needs an
-    extra psum over 'model').  The tier plan lives in ``sync``
-    (``SyncConfig.scatter_depth``)."""
+    extra psum over 'model').  The tier plan lives in ``schedule`` (the
+    planner-built :class:`CommSchedule` the executor lowers); ``sync``
+    keeps the equivalent :class:`SyncConfig` knobs for legacy consumers
+    and for rebuilding the schedule in-trace when shapes differ (the
+    non-nested TP path)."""
 
     name: str
     leaf_paths: Tuple[str, ...]
@@ -53,6 +60,7 @@ class Section:
     scatter_dim: int  # dimension scattered over the fast tiers (-1 = flat 1d)
     sync: SyncConfig = field(default_factory=SyncConfig)
     model_sharded: bool = False
+    schedule: Optional[CommSchedule] = None
 
     @property
     def nbytes(self) -> int:
@@ -74,14 +82,42 @@ class SyncPlan:
                 f"  {s.name:40s} {s.numel:>12d} x {s.dtype:8s} "
                 f"{s.sync.strategy:>13s} depth={s.sync.scatter_depth} "
                 f"chunks={s.sync.chunks} codec={s.sync.codec}")
+            if s.schedule is not None:
+                lines.append(f"    {s.schedule.describe()}")
         return "\n".join(lines)
 
     def to_json(self) -> str:
+        """Serialize the plan, one object per section.
+
+        Schedule JSON format (``"schedule"`` key, when the planner built
+        one)::
+
+            {"legs": [{"kind": "reduce_scatter" | "psum" | "slow_chunk"
+                               | "all_gather",
+                       "tier": "<tier name>", "axis": "<mesh axis>",
+                       "size": <int>,
+                       // slow_chunk only:
+                       "index": <int>, "chunks": <int>,
+                       // psum / slow_chunk, only when compressed:
+                       "codec": "int8" | "topk"},
+                      ...],
+             "shape": [<local block shape>], "dtype": "<dtype>",
+             "scatter_dim": <int>, "chunks": <int>,
+             "pipelined": <bool>, "strategy": "<strategy>",
+             "cfg": {<SyncConfig fields>}}
+
+        Legs appear in lowering order: reduce-scatters down the fast
+        tiers, unscattered psums, the slow-tier sub-flows, then
+        all-gathers back up.  ``CommSchedule.from_json`` round-trips this
+        exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
                  codec=s.sync.codec, scatter_depth=s.sync.scatter_depth,
-                 leaves=list(s.leaf_paths))
+                 pipeline=s.sync.pipeline,
+                 leaves=list(s.leaf_paths),
+                 schedule=(s.schedule.to_dict()
+                           if s.schedule is not None else None))
             for s in self.sections
         ], indent=2)
 
@@ -92,8 +128,9 @@ class Planner:
     ``topo``: TwoTierTopology | FabricSpec.  ``fast_axis_sizes`` overrides
     the per-tier fast-axis extents (ordered fastest first) when the mesh
     truth differs from the fabric description; ``fast_axis_size`` is the
-    legacy single-tier override.
-    """
+    legacy single-tier override.  ``pipeline`` enables the overlapped
+    slow-leg pipeline for chunked sections; ``mid_codec`` adds candidates
+    that int8-compress UNSCATTERED mid-tier psum legs (deep hierarchies)."""
 
     def __init__(self, topo: Union[TwoTierTopology, FabricSpec], *,
                  fast_axis_size: Optional[int] = None,
@@ -101,7 +138,9 @@ class Planner:
                  codec: Optional[str] = None,
                  max_chunks: int = 8,
                  min_chunk_numel: int = 1 << 16,
-                 strategy: str = "auto"):
+                 strategy: str = "auto",
+                 pipeline: bool = True,
+                 mid_codec: Optional[str] = None):
         self.topo = topo
         self.fabric = as_fabric(topo)
         self.cost = CostModel(topo)
@@ -116,6 +155,8 @@ class Planner:
         self.max_chunks = max_chunks
         self.min_chunk_numel = min_chunk_numel
         self.strategy = strategy
+        self.pipeline = pipeline
+        self.mid_codec = mid_codec
 
     @property
     def n_fast_tiers(self) -> int:
@@ -147,65 +188,103 @@ class Planner:
                 return best_dim, depth
         return -1, 0
 
-    def _pick_chunks(self, numel: int) -> int:
-        c = self.max_chunks
-        while c > 1 and (numel // c < self.min_chunk_numel or numel % c != 0):
-            c -= 1
-        return max(c, 1)
+    def _candidate_chunks(self, shard_numel: int) -> List[int]:
+        """Slow-leg sub-flow counts worth pricing: 1 plus powers of two up
+        to ``max_chunks`` that divide the shard and keep each sub-flow
+        above ``min_chunk_numel``."""
+        cands = [1]
+        c = 2
+        while c <= self.max_chunks:
+            if shard_numel % c == 0 and shard_numel // c >= self.min_chunk_numel:
+                cands.append(c)
+            c *= 2
+        return cands
 
-    def _pick_strategy(self, nbytes: int) -> Tuple[str, int, Optional[str]]:
-        if self.strategy != "auto":
-            chunks = self._pick_chunks(nbytes // 4)
-            return self.strategy, chunks, self.codec
-        if self.fabric.depth > 2:
-            return self._pick_strategy_ntier(nbytes)
-        ests = {
-            "flat": self.cost.flat_ring(nbytes).total_s,
-            "hier_root": self.cost.hierarchical(nbytes, striped=False).total_s,
-            "hier_striped": self.cost.hierarchical(nbytes, striped=True).total_s,
-        }
-        best = min(ests, key=ests.get)
-        chunks = 1
-        if best == "hier_striped":
-            ovl = self.cost.hierarchical(nbytes, striped=True, chunks=4, overlap=True)
-            if ovl.total_s < ests[best]:
-                chunks = 4
-        return best, chunks, self.codec
+    def _build(self, cfg: SyncConfig, shape: Tuple[int, ...], sd: int,
+               dtype: str) -> CommSchedule:
+        return build_schedule(self.fabric, cfg, shape, max(sd, 0),
+                              dtype=dtype, fast_sizes=self.fast_sizes)
 
-    def _pick_strategy_ntier(self, nbytes: int) -> Tuple[str, int, Optional[str]]:
-        """N-tier search: flat ring vs root vs the striped recursion (the
-        scatter DEPTH is decided later, per section, from divisibility —
-        deeper is never slower in the alpha-beta model)."""
-        ests = {
-            "flat": self.cost.flat_ring(nbytes).total_s,
-            "hier_root": self.cost.ntier_striped(nbytes, scatter_depth=0).total_s,
-            "hier_striped": self.cost.ntier_striped(nbytes, scatter_depth=-1).total_s,
-        }
-        best = min(ests, key=ests.get)
-        chunks = 4 if (best == "hier_striped"
-                       and nbytes // 4 >= 4 * self.min_chunk_numel) else 1
-        return best, chunks, self.codec
+    def _search_section(self, lshape: Tuple[int, ...],
+                        avoid: frozenset = frozenset()
+                        ) -> Tuple[SyncConfig, int, Optional[CommSchedule]]:
+        """Search candidate schedules (depth x chunks x per-tier codec),
+        pricing each with ``CostModel.from_schedule``; returns the winner's
+        (SyncConfig, scatter_dim, CommSchedule).
+
+        Schedules are priced at the fp32 WIRE dtype (grad_sync upcasts
+        every gradient before the collectives run); feasibility (scatter
+        dims, chunk counts) is element-count-driven from the true local
+        shape.
+
+        Candidate order encodes tie-breaks: within the striped family
+        deeper scatters come first (never slower in the alpha-beta model),
+        and a flat plan only wins when strictly cheaper than every
+        hierarchical one (matching the legacy selection)."""
+        dtype = "float32"  # the wire dtype
+        numel = int(np.prod(lshape))
+        nbytes = numel * dtype_itemsize(dtype)
+        sd, dmax = self._pick_scatter_dim(lshape, avoid)
+        strat = self.strategy
+
+        flat_cfg = SyncConfig(strategy="flat", chunks=1, codec=self.codec,
+                              pipeline=self.pipeline)
+        if strat == "flat" or (sd < 0 or dmax == 0) and strat != "hier_root":
+            # forced flat, or nothing divides even the fastest tier
+            return flat_cfg, sd, self._build(flat_cfg, lshape, sd, dtype)
+
+        cands: List[Tuple[float, SyncConfig, CommSchedule]] = []
+        if strat in ("auto", "hier_striped"):
+            for d in range(dmax, 0, -1):  # deepest first
+                depth_val = -1 if d >= self.n_fast_tiers else d
+                shard_numel = numel // self._prefix_prod(d)
+                mids: List[Optional[str]] = [None]
+                if self.mid_codec and d < self.n_fast_tiers:
+                    mids.append(self.mid_codec)
+                for c in self._candidate_chunks(shard_numel):
+                    for mid in mids:
+                        cfg = SyncConfig(strategy="hier_striped", chunks=c,
+                                         codec=self.codec,
+                                         scatter_depth=depth_val,
+                                         pipeline=self.pipeline,
+                                         mid_codec=mid)
+                        s = self._build(cfg, lshape, sd, dtype)
+                        cands.append((self.cost.from_schedule(s).total_s,
+                                      cfg, s))
+        if strat in ("auto", "hier_root"):
+            cfg = SyncConfig(strategy="hier_root", chunks=1, codec=self.codec,
+                             pipeline=self.pipeline)
+            s = self._build(cfg, lshape, sd, dtype)
+            cands.append((self.cost.from_schedule(s).total_s, cfg, s))
+        if strat == "auto":
+            # flat priced by the bottleneck-link model (a flat ring's
+            # cross-pod hop is NOT pooled), not by per-tier rings
+            s = self._build(flat_cfg, lshape, sd, dtype)
+            cands.append((self.cost.flat_ring(nbytes).total_s, flat_cfg, s))
+
+        # strict ordering: the FIRST candidate at the minimum wins, so the
+        # list order above is the tie-break
+        best = min(cands, key=lambda t: t[0])
+        _, cfg, s = best
+        # record the chunk count the builder actually kept
+        if cfg.chunks != s.chunks:
+            cfg = replace(cfg, chunks=s.chunks)
+        if s.strategy == "flat" and cfg.strategy != "flat":
+            cfg = replace(cfg, strategy="flat", chunks=1)
+        return cfg, sd, s
 
     def _section_estimate(self, sec: Section):
-        """Cost estimate of one section under its chosen config; returns
+        """Cost estimate of one section under its chosen schedule; returns
         (seconds, slow_tier_bytes_per_chip)."""
-        ratio = 4.0 if sec.sync.codec == "int8" else 1.0
-        if sec.sync.strategy == "flat":
+        if sec.sync.strategy == "flat" or sec.schedule is None \
+                or sec.schedule.strategy == "flat":
             est = self.cost.flat_ring(sec.nbytes)
             return est.total_s, est.dcn_bytes_per_chip
-        if self.fabric.depth > 2:
-            depth = sec.sync.scatter_depth
-            if sec.sync.strategy == "hier_root":
-                depth = 0
-            est = self.cost.ntier_striped(sec.nbytes, scatter_depth=depth,
-                                          chunks=sec.sync.chunks,
-                                          compression_ratio=ratio)
-            return est.total_s, est.slow_bytes_per_chip
-        est = self.cost.hierarchical(
-            sec.nbytes, striped=sec.sync.strategy == "hier_striped",
-            chunks=sec.sync.chunks, overlap=sec.sync.chunks > 1,
-            compression_ratio=ratio)
-        return est.total_s, est.dcn_bytes_per_chip
+        est = self.cost.from_schedule(sec.schedule)
+        # on a 1-tier fabric the single tier doubles as "slowest" in the
+        # estimate accessors, but there is no DCN leg to report
+        slow_by = est.slow_bytes_per_chip if self.fabric.depth > 1 else 0.0
+        return est.total_s, slow_by
 
     # -- public API -------------------------------------------------------------
     def plan(self, shapes: Dict[str, jax.ShapeDtypeStruct],
@@ -230,22 +309,17 @@ class Planner:
             lshape = tuple(local_shapes.get(path, sds.shape))
             model_sharded = lshape != tuple(sds.shape)
             if nbytes >= bucket_bytes or model_sharded:
-                strat, chunks, codec = self._pick_strategy(nbytes)
-                sd, depth = self._pick_scatter_dim(
+                cfg, sd, sched = self._search_section(
                     lshape, avoid_dims.get(path, frozenset()))
-                if sd < 0 or depth == 0:
-                    strat, chunks = "flat", 1
+                if cfg.strategy == "flat":
+                    sd = -1
                 numel = int(np.prod(sds.shape))
-                chunks = self._adjust_chunks(lshape, sd, chunks, depth)
-                scatter_depth = -1 if depth >= self.n_fast_tiers else depth
                 sections.append(Section(
                     # '.'-separated name: section names are dict keys in the
                     # sync state and must not collide with tree-path '/'
                     name=path.replace("/", "."), leaf_paths=(path,),
                     numel=numel, dtype=str(sds.dtype), scatter_dim=sd,
-                    sync=SyncConfig(strategy=strat, chunks=chunks, codec=codec,
-                                    scatter_depth=scatter_depth),
-                    model_sharded=model_sharded))
+                    sync=cfg, model_sharded=model_sharded, schedule=sched))
             else:
                 small.append((path, sds))
         # pack small leaves into flat bucket Sections
@@ -257,12 +331,22 @@ class Planner:
             if not bucket:
                 return
             numel = bucket_numel
-            strat, chunks, codec = self._pick_strategy(numel * 4)
+            # buckets are packed flat and zero-padded to the full fast-tier
+            # product (grad_sync._bucket_pack), so the schedule plans the
+            # PADDED extent
+            padded = numel + ((-numel) % max(self.nf, 1))
+            cfg, _, sched = self._search_section((padded,))
+            depth = self.n_fast_tiers if cfg.scatter_depth < 0 \
+                else cfg.scatter_depth
+            chunks = self._adjust_chunks((padded,), 0, cfg.chunks, depth)
+            if chunks != cfg.chunks:
+                cfg = replace(cfg, chunks=chunks)
+                sched = self._build(cfg, (padded,), 0, "float32")
             sections.append(Section(
                 name=f"bucket[{bucket[0][0].replace('/', '.')}...x{len(bucket)}]",
                 leaf_paths=tuple(p for p, _ in bucket), numel=numel,
                 dtype="float32", scatter_dim=-1,
-                sync=SyncConfig(strategy=strat, chunks=1, codec=codec)))
+                sync=cfg, schedule=sched))
             bucket, bucket_numel = [], 0
 
         for path, sds in small:

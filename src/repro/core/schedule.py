@@ -1,0 +1,453 @@
+"""CommSchedule — the one IR behind DFabric's hierarchical collectives.
+
+Before this module existed the tier walk (reduce-scatter down the fast
+tiers, striped slow leg, all-gather back up) was re-encoded three separate
+times: ``collectives.py`` executed it, ``cost_model.py`` priced it, and
+``planner.py`` searched it — and the three copies drifted (the cost model
+credited an overlapped chunk pipeline the runtime never delivered).
+
+Now there is exactly one description: a :class:`CommSchedule` is a typed
+list of **legs** built once from ``(FabricSpec, SyncConfig, shape)``:
+
+  * ``ReduceScatter(tier)`` — scatter one fast tier (down phase),
+  * ``Psum(tier)``          — sum a tier in place (unscattered fast tier,
+                              or one leg of a flat plan); may carry a
+                              mid-tier codec,
+  * ``SlowChunk(i, codec)`` — one sub-flow of the slowest (NIC-pool) leg,
+  * ``AllGather(tier)``     — gather one fast tier back (up phase).
+
+Three consumers walk the SAME leg list:
+
+  * ``collectives.lower_all_reduce`` lowers it to JAX ops (and, when
+    ``pipelined``, software-pipelines slow chunk *i* against chunk *i−1*'s
+    fast-tier all-gathers),
+  * ``CostModel.from_schedule`` prices exactly those legs,
+  * ``Planner`` searches over candidate schedules (depth x chunks x
+    per-tier codec) and stores the winner on each ``Section``.
+
+The builder owns ALL divisibility decisions (which tiers scatter, how many
+chunks survive), so the executor and the cost model never re-derive them.
+
+``SyncConfig`` lives here (re-exported from ``repro.core.collectives`` for
+the legacy import path) and the legacy entry points are thin constructors
+over :func:`build_schedule`.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, replace
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.core import compression as comp
+from repro.core.topology import FabricSpec, Tier
+
+# ---------------------------------------------------------------------------
+# SyncConfig (the per-Section knob set; thin constructor over the IR)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    """How one gradient bucket ("Section") is synchronized.
+
+    ``scatter_depth``: number of fast tiers to reduce-scatter over before
+    the slowest leg (-1 = all of them).  Fast tiers beyond the depth are
+    summed in place (plain psum) instead of scattered — the planner picks
+    the depth per section from the cost model (e.g. a tensor divisible by
+    the ICI size but not by ICI*CXL scatters only one level deep).
+
+    ``pipeline``: when chunks > 1, software-pipeline the slow leg against
+    the fast-tier all-gathers (chunk *i*'s slow psum is issued while chunk
+    *i−1* gathers).  ``mid_codec``: optional int8 codec on UNSCATTERED
+    mid-tier psum legs (deep hierarchies where a full payload crosses a
+    mid tier).
+    """
+
+    strategy: str = "hier_striped"  # flat | hier_root | hier_striped
+    chunks: int = 1  # slow-tier sub-flows per Section (MPTCP analogue)
+    codec: Optional[str] = None  # None | "int8" | "topk"
+    codec_block: int = 2048
+    codec_k_frac: float = 0.0625
+    error_feedback: bool = True
+    scatter_depth: int = -1  # fast tiers to scatter over (-1 = all)
+    pipeline: bool = True  # overlap slow chunks with fast all-gathers
+    mid_codec: Optional[str] = None  # codec on unscattered mid-tier legs
+
+    def make_codec(self):
+        return comp.make_codec(self.codec, block=self.codec_block,
+                               k_frac=self.codec_k_frac)
+
+    def make_mid_codec(self):
+        return comp.make_codec(self.mid_codec, block=self.codec_block)
+
+
+# ---------------------------------------------------------------------------
+# Legs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ReduceScatter:
+    """Reduce-scatter one fast tier (down phase)."""
+
+    tier: str  # Tier.name
+    axis: str  # mesh axis
+    size: int
+
+    kind = "reduce_scatter"
+
+
+@dataclass(frozen=True)
+class Psum:
+    """Sum a tier in place — an unscattered fast tier, or one axis of a
+    flat plan.  ``codec`` is the optional mid-tier compressor (int8)."""
+
+    tier: str
+    axis: str
+    size: int
+    codec: Optional[str] = None
+
+    kind = "psum"
+
+
+@dataclass(frozen=True)
+class SlowChunk:
+    """One sub-flow of the slowest (NIC-pool striped) leg."""
+
+    index: int
+    chunks: int
+    codec: Optional[str]
+    tier: str
+    axis: str
+    size: int
+
+    kind = "slow_chunk"
+
+
+@dataclass(frozen=True)
+class AllGather:
+    """All-gather one fast tier back (up phase, reverse scatter order)."""
+
+    tier: str
+    axis: str
+    size: int
+
+    kind = "all_gather"
+
+
+Leg = Union[ReduceScatter, Psum, SlowChunk, AllGather]
+
+_LEG_KINDS = {cls.kind: cls for cls in (ReduceScatter, Psum, SlowChunk, AllGather)}
+
+
+# ---------------------------------------------------------------------------
+# The schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CommSchedule:
+    """One Section's communication plan: an ordered leg list plus the
+    static facts every consumer needs (local block shape, scatter dim,
+    chunking, pipelining) and the originating :class:`SyncConfig` (codec
+    parameters).
+
+    Invariants the builder guarantees (consumers never re-check):
+      * every ``ReduceScatter`` leg divides ``shape[scatter_dim]`` given
+        the legs before it;
+      * when ``pipelined``, ``shape[scatter_dim]`` is divisible by
+        ``chunks * prod(scattered tier sizes)``;
+      * ``SlowChunk`` legs are contiguous, between the down and up phases.
+    """
+
+    legs: Tuple[Leg, ...]
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    scatter_dim: int = 0
+    chunks: int = 1
+    pipelined: bool = False
+    strategy: str = "hier_striped"
+    cfg: SyncConfig = field(default_factory=SyncConfig)
+
+    # ---- structure ---------------------------------------------------------
+    @property
+    def down_legs(self) -> Tuple[Leg, ...]:
+        return tuple(l for l in self.legs
+                     if isinstance(l, (ReduceScatter, Psum)))
+
+    @property
+    def slow_legs(self) -> Tuple[SlowChunk, ...]:
+        return tuple(l for l in self.legs if isinstance(l, SlowChunk))
+
+    @property
+    def up_legs(self) -> Tuple[AllGather, ...]:
+        return tuple(l for l in self.legs if isinstance(l, AllGather))
+
+    @property
+    def scattered_axes(self) -> Tuple[str, ...]:
+        return tuple(l.axis for l in self.legs if isinstance(l, ReduceScatter))
+
+    @property
+    def scattered_prod(self) -> int:
+        n = 1
+        for l in self.legs:
+            if isinstance(l, ReduceScatter):
+                n *= l.size
+        return n
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        seen = []
+        for l in self.legs:
+            if l.axis not in seen:
+                seen.append(l.axis)
+        return tuple(seen)
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+    def describe(self) -> str:
+        parts = []
+        for l in self.legs:
+            if isinstance(l, ReduceScatter):
+                parts.append(f"rs[{l.axis}x{l.size}]")
+            elif isinstance(l, Psum):
+                c = f",{l.codec}" if l.codec else ""
+                parts.append(f"psum[{l.axis}x{l.size}{c}]")
+            elif isinstance(l, SlowChunk):
+                c = f",{l.codec}" if l.codec else ""
+                parts.append(f"slow[{l.index}/{l.chunks}{c}]")
+            else:
+                parts.append(f"ag[{l.axis}x{l.size}]")
+        mode = "pipelined" if self.pipelined else "sequential"
+        return f"{self.strategy}/{mode}: " + " -> ".join(parts)
+
+    # ---- (de)serialization -------------------------------------------------
+    def to_json(self) -> str:
+        """Serialize; format documented in ``SyncPlan.to_json``."""
+        return json.dumps(self.to_dict())
+
+    def to_dict(self) -> dict:
+        def leg_dict(l: Leg) -> dict:
+            d = {"kind": l.kind, "tier": l.tier, "axis": l.axis,
+                 "size": l.size}
+            if isinstance(l, (Psum, SlowChunk)) and l.codec:
+                d["codec"] = l.codec
+            if isinstance(l, SlowChunk):
+                d["index"] = l.index
+                d["chunks"] = l.chunks
+            return d
+
+        c = self.cfg
+        return {
+            "legs": [leg_dict(l) for l in self.legs],
+            "shape": list(self.shape), "dtype": self.dtype,
+            "scatter_dim": self.scatter_dim, "chunks": self.chunks,
+            "pipelined": self.pipelined, "strategy": self.strategy,
+            "cfg": {"strategy": c.strategy, "chunks": c.chunks,
+                    "codec": c.codec, "codec_block": c.codec_block,
+                    "codec_k_frac": c.codec_k_frac,
+                    "error_feedback": c.error_feedback,
+                    "scatter_depth": c.scatter_depth,
+                    "pipeline": c.pipeline, "mid_codec": c.mid_codec},
+        }
+
+    @classmethod
+    def from_json(cls, s: str) -> "CommSchedule":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommSchedule":
+        legs = []
+        for ld in d["legs"]:
+            k = _LEG_KINDS[ld["kind"]]
+            if k is SlowChunk:
+                legs.append(SlowChunk(ld["index"], ld["chunks"],
+                                      ld.get("codec"), ld["tier"],
+                                      ld["axis"], ld["size"]))
+            elif k is Psum:
+                legs.append(Psum(ld["tier"], ld["axis"], ld["size"],
+                                 ld.get("codec")))
+            else:
+                legs.append(k(ld["tier"], ld["axis"], ld["size"]))
+        return cls(legs=tuple(legs), shape=tuple(d["shape"]),
+                   dtype=d["dtype"], scatter_dim=d["scatter_dim"],
+                   chunks=d["chunks"], pipelined=d["pipelined"],
+                   strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]))
+
+
+# ---------------------------------------------------------------------------
+# Builder — the ONLY place tier-walk / divisibility decisions are made
+# ---------------------------------------------------------------------------
+
+
+def _clamp_chunks(cfg: SyncConfig, dim_extent: int, scattered: int,
+                  pipelined: bool, shard_numel: int) -> int:
+    """Largest feasible chunk count <= cfg.chunks.
+
+    Pipelined schedules split the tensor along the scatter dim BEFORE the
+    reduce-scatters, so each chunk must still divide by every scattered
+    tier (``dim_extent % (c * scattered) == 0``).  Sequential schedules
+    split the flattened shard after the scatters (``shard_numel % c``)."""
+    c = max(int(cfg.chunks), 1)
+    if cfg.codec == "topk":
+        return 1  # top-k compresses the whole shard at once
+    while c > 1:
+        ok = (dim_extent % (c * scattered) == 0) if pipelined \
+            else (shard_numel % c == 0)
+        if ok:
+            return c
+        c -= 1
+    return 1
+
+
+def schedule_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
+                       cfg: SyncConfig, shape: Sequence[int],
+                       scatter_dim: int, sizes: Mapping[str, int],
+                       dtype: str = "float32",
+                       tier_names: Optional[Mapping[str, str]] = None
+                       ) -> CommSchedule:
+    """Build a :class:`CommSchedule` from raw axis names + sizes.
+
+    This is the generic core: :func:`build_schedule` feeds it a
+    ``FabricSpec``, and the legacy in-trace entry points feed it
+    ``lax.axis_size`` results.  ``tier_names`` maps axis -> tier name for
+    display/pricing (defaults to the axis name itself)."""
+    if cfg.mid_codec not in (None, "int8"):
+        raise ValueError(
+            f"mid_codec={cfg.mid_codec!r}: only int8 is supported on "
+            "unscattered mid-tier psum legs (no error-feedback state there)")
+    fast = tuple(fast_axes)
+    names = dict(tier_names or {})
+    shape = tuple(int(s) for s in shape)
+
+    def tname(axis: str) -> str:
+        return names.get(axis, axis)
+
+    def mk_slow_legs(chunks: int) -> list:
+        if slow_axis is None or sizes.get(slow_axis, 1) <= 1:
+            return []
+        n = int(sizes[slow_axis])
+        return [SlowChunk(i, chunks, cfg.codec, tname(slow_axis),
+                          slow_axis, n) for i in range(chunks)]
+
+    strategy = cfg.strategy
+    dim = scatter_dim if scatter_dim >= 0 else 0
+    numel = 1
+    for s in shape:
+        numel *= s
+
+    # ---- flat: one psum leg per axis (executor coalesces) ------------------
+    all_axes = fast + ((slow_axis,) if slow_axis else ())
+    if strategy == "flat" or not fast:
+        legs = [Psum(tname(a), a, int(sizes.get(a, 1))) for a in all_axes]
+        return CommSchedule(tuple(legs), shape, dtype, -1, 1, False,
+                            "flat", cfg)
+
+    # ---- hier_root: psum the fast tiers, slow leg carries full payload ----
+    if strategy == "hier_root":
+        chunks = _clamp_chunks(cfg, shape[dim], 1, False, numel)
+        legs = [Psum(tname(a), a, int(sizes.get(a, 1))) for a in fast]
+        legs += mk_slow_legs(chunks)
+        return CommSchedule(tuple(legs), shape, dtype, -1, chunks, False,
+                            "hier_root", cfg)
+
+    assert strategy == "hier_striped", strategy
+
+    # ---- hier_striped: the recursive tier walk, made explicit -------------
+    depth = cfg.scatter_depth if cfg.scatter_depth >= 0 else len(fast)
+    planned_prefix = 1
+    for a in fast[:depth]:
+        planned_prefix *= int(sizes.get(a, 1))
+    if shape[dim] % planned_prefix != 0:
+        # indivisible by even the planned scatter prefix: flat fallback
+        # (tiny leaves only — the planner emits feasible depths)
+        legs = [Psum(tname(a), a, int(sizes.get(a, 1))) for a in all_axes]
+        return CommSchedule(tuple(legs), shape, dtype, -1, 1, False,
+                            "flat", cfg)
+
+    # per-tier scatter/psum decisions (mirrors the retired recursion:
+    # a tier that cannot or may not scatter is psum'ed AND consumes a
+    # depth unit)
+    decisions = []  # (op, axis, size)
+    cur = shape[dim]
+    d = depth
+    for a in fast:
+        n = int(sizes.get(a, 1))
+        if n <= 1:
+            # degenerate tier: no leg, but it still consumes a depth unit
+            # (depth semantics index tiers, matching the planner's prefix
+            # products)
+            d = 0 if d == 0 else d - 1
+        elif d == 0 or cur % n != 0:
+            decisions.append(("psum", a, n))
+            d = 0 if d == 0 else d - 1
+        else:
+            decisions.append(("rs", a, n))
+            cur //= n
+            d -= 1
+    scattered = [(a, n) for op, a, n in decisions if op == "rs"]
+    nf = 1
+    for _, n in scattered:
+        nf *= n
+
+    has_slow = slow_axis is not None and sizes.get(slow_axis, 1) > 1
+    pipelined = bool(cfg.pipeline) and cfg.chunks > 1 and has_slow \
+        and bool(scattered)
+    shard_numel = numel // nf
+    chunks = _clamp_chunks(cfg, shape[dim], nf, pipelined, shard_numel)
+    if chunks <= 1:
+        pipelined = False
+
+    mid = cfg.mid_codec
+    legs = []
+    for op, a, n in decisions:
+        if op == "rs":
+            legs.append(ReduceScatter(tname(a), a, n))
+        else:
+            legs.append(Psum(tname(a), a, n, mid if n > 1 else None))
+    legs += mk_slow_legs(chunks)
+    legs += [AllGather(tname(a), a, n) for a, n in reversed(scattered)]
+    return CommSchedule(tuple(legs), shape, dtype, dim, chunks, pipelined,
+                        "hier_striped", cfg)
+
+
+def build_schedule(fabric: FabricSpec, cfg: SyncConfig,
+                   shape: Sequence[int], scatter_dim: int = 0,
+                   dtype: str = "float32",
+                   fast_axes: Optional[Sequence[str]] = None,
+                   fast_sizes: Optional[Sequence[int]] = None
+                   ) -> CommSchedule:
+    """Build the schedule for one Section from ``(FabricSpec, SyncConfig,
+    shape)``.
+
+    ``fast_axes`` / ``fast_sizes`` override the fabric's fast-tier axis
+    names / extents when the mesh truth differs from the hardware
+    description (the planner's ``fast_axis_sizes`` escape hatch)."""
+    fab_fast = list(fabric.fast_tiers)
+    axes = list(fast_axes) if fast_axes is not None \
+        else [t.axis for t in fab_fast]
+    if fast_sizes is not None:
+        sizes_list = [int(s) for s in fast_sizes]
+    else:
+        sizes_list = [t.size for t in fab_fast]
+    if len(axes) != len(sizes_list):
+        # mesh said N fast tiers but the fabric describes M: trust the mesh
+        # axis list and pad names generically
+        while len(axes) < len(sizes_list):
+            axes.append(f"fast{len(axes)}")
+        axes = axes[:len(sizes_list)]
+    sizes = dict(zip(axes, sizes_list))
+    names = {}
+    for i, a in enumerate(axes):
+        names[a] = fab_fast[i].name if i < len(fab_fast) else a
+    slow_axis = fabric.slow_axis
+    if slow_axis is not None:
+        sizes[slow_axis] = fabric.slowest.size
+        names[slow_axis] = fabric.slowest.name
+    return schedule_from_axes(axes, slow_axis, cfg, shape, scatter_dim,
+                              sizes, dtype, tier_names=names)

@@ -37,6 +37,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--mode", default="dfabric", choices=["dfabric", "gspmd"])
     ap.add_argument("--codec", default=None)
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable the overlapped slow-leg chunk pipeline "
+                         "(sequential schedules, for A/B runs)")
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
@@ -72,7 +75,8 @@ def main() -> None:
     model = build_model(arch, st)
     cfg = TrainerConfig(steps=args.steps, lr=args.lr, warmup=max(args.steps // 10, 1),
                         mode=args.mode, zero1=not args.no_zero1,
-                        codec=args.codec, microbatches=args.microbatches,
+                        codec=args.codec, pipeline=not args.no_pipeline,
+                        microbatches=args.microbatches,
                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     trainer = Trainer(model, mesh, shape, cfg)
     trainer.install_preemption_handler()

@@ -1,7 +1,12 @@
 """DFabric gradient synchronization — the paper's DDP port, plus ZeRO-1.
 
 This module executes a :class:`repro.core.planner.SyncPlan` inside a
-``shard_map`` whose manual axes are the DP domain.  The fast side of the
+``shard_map`` whose manual axes are the DP domain.  Each Section carries
+the planner-built :class:`~repro.core.schedule.CommSchedule`, which is
+threaded straight into the executor (``collectives.lower_all_reduce``) —
+no tier plan is re-derived here; ``SyncConfig`` is only the fallback
+constructor when the in-trace shape differs from the planned one (the
+non-nested TP path sees model-global shapes).  The fast side of the
 domain is an ORDERED tuple of tiers (``SyncSettings.fast_axes``, fastest
 first — e.g. ``("data", "host")`` for intra-host ICI then rack-level CXL);
 the slowest tier (``slow_axis`` == "pod", the DCN / Ethernet leg) is where
@@ -324,7 +329,7 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
         if zero1_path:
             shard, new_ef = dfabric_reduce_scatter(
                 g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
-                ranks=ranks)
+                ranks=ranks, schedule=sec.schedule)
             shard = shard * inv_dp
             synced[sec.name] = ("shard", shard, k)
             sqnorm = sqnorm + lax.psum(jnp.sum(jnp.square(shard)),
@@ -332,7 +337,7 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
         else:
             full, new_ef = dfabric_all_reduce(
                 g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
-                ranks=ranks)
+                ranks=ranks, schedule=sec.schedule)
             full = full * inv_dp
             synced[sec.name] = ("full", full, k)
             sq = jnp.sum(jnp.square(full))

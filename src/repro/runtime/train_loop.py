@@ -92,7 +92,9 @@ def batch_sharding(mesh: Mesh, model: Model, mi: MeshInfo):
 def make_sync_plan(model: Model, mesh: Mesh, topo, *,  # topo: TwoTierTopology | FabricSpec
                    codec: Optional[str] = None, strategy: str = "auto",
                    bucket_bytes: int = 4 << 20,
-                   embed_tp: Optional[bool] = None) -> Tuple[SyncPlan, SyncSettings]:
+                   embed_tp: Optional[bool] = None,
+                   pipeline: bool = True,
+                   mid_codec: Optional[str] = None) -> Tuple[SyncPlan, SyncSettings]:
     mi = mesh_info(mesh, embed_tp=embed_tp)
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     fast_axes = fast_axes_of(sizes) or ("data",)
@@ -121,7 +123,8 @@ def make_sync_plan(model: Model, mesh: Mesh, topo, *,  # topo: TwoTierTopology |
 
     local = {p: local_shape(p) for p in shapes}
     planner = Planner(topo, fast_axis_sizes=fast_sizes, codec=codec,
-                      strategy=strategy)
+                      strategy=strategy, pipeline=pipeline,
+                      mid_codec=mid_codec)
     plan = planner.plan(shapes, bucket_bytes=bucket_bytes, avoid_dims=avoid,
                         local_shapes=local)
     return plan, ss
@@ -402,6 +405,7 @@ class TrainerConfig:
     mode: str = "dfabric"  # dfabric | gspmd
     zero1: bool = True
     codec: Optional[str] = None
+    pipeline: bool = True  # overlap slow-leg chunks with fast all-gathers
     fail_at_step: Optional[int] = None  # failure injection (tests)
     seed: int = 0
 
@@ -426,7 +430,8 @@ class Trainer:
         self.mi = mesh_info(mesh, fsdp=(cfg.mode == "gspmd"))
         if cfg.mode == "dfabric":
             self.plan, self.ss = make_sync_plan(model, mesh, self.topo,
-                                                codec=cfg.codec)
+                                                codec=cfg.codec,
+                                                pipeline=cfg.pipeline)
             self.step_fn, self._init_state, self.state_sharding = \
                 make_dfabric_train_step(model, mesh, self.plan, self.ss,
                                         opt_cfg, lr_fn,

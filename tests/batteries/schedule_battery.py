@@ -1,0 +1,129 @@
+"""Multi-device CommSchedule battery (run via subprocess, 8 fake devices).
+
+The overlapped-executor acceptance battery:
+
+  * pipelined == sequential == flat ``lax.psum`` for 1/2/3-tier meshes x
+    chunks in {1, 2, 4} x codec on/off (codec legs to tolerance, exact
+    legs bitwise between pipelined and sequential);
+  * the legs the executor lowers (``leg_log``) are IDENTICAL to the legs
+    ``CostModel.from_schedule`` prices — walked from the same
+    ``CommSchedule`` object;
+  * build -> to_json -> from_json -> lower produces bitwise-identical
+    results (the schedule JSON round-trip is lossless end-to-end).
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import CommSchedule, CostModel, SyncConfig
+from repro.core.collectives import dfabric_all_reduce, lower_all_reduce
+from repro.core.schedule import schedule_from_axes
+from repro.core.topology import three_tier_fabric
+from repro.utils import jax_compat
+
+rng = np.random.default_rng(7)
+x = rng.standard_normal((8, 1024)).astype(np.float32)
+expect = x.sum(0)
+
+# (mesh shape, mesh axes slowest-first, fast axes fastest-first, slow axis)
+MESHES = [
+    ((8,), ("data",), ("data",), None),                             # 1 tier
+    ((2, 4), ("pod", "data"), ("data",), "pod"),                    # 2 tiers
+    ((2, 2, 2), ("pod", "host", "data"), ("data", "host"), "pod"),  # 3 tiers
+]
+
+
+def run_allreduce(mesh, axes, fast, slow, cfg, xin=x):
+    dp = P(axes if len(axes) > 1 else axes[0])
+
+    def f(xs):
+        out, _ = dfabric_all_reduce(xs.reshape(-1), fast, slow, cfg)
+        return out
+
+    g = jax.jit(jax_compat.shard_map(f, mesh=mesh, in_specs=dp,
+                                     out_specs=P(), check_vma=False))
+    return np.asarray(g(jax.device_put(xin, NamedSharding(mesh, dp))))
+
+
+for shape, axes, fast, slow in MESHES:
+    mesh = jax_compat.make_mesh(shape, axes)
+    for chunks in (1, 2, 4):
+        for codec in (None, "int8"):
+            tol = 2e-2 if codec else 1e-6
+            pipe = SyncConfig("hier_striped", chunks=chunks, codec=codec,
+                              codec_block=128, pipeline=True)
+            seq = replace(pipe, pipeline=False)
+            out_p = run_allreduce(mesh, axes, fast, slow, pipe)
+            out_s = run_allreduce(mesh, axes, fast, slow, seq)
+            scale = np.max(np.abs(expect))
+            err_p = np.max(np.abs(out_p - expect)) / scale
+            err_s = np.max(np.abs(out_s - expect)) / scale
+            assert err_p < tol, (axes, chunks, codec, "pipelined", err_p)
+            assert err_s < tol, (axes, chunks, codec, "sequential", err_s)
+            if codec is None:
+                # exact legs: chunking must not change the sums at all
+                d = np.max(np.abs(out_p - out_s)) / scale
+                assert d < 1e-6, (axes, chunks, d)
+    print(f"{len(axes)}-tier mesh {axes}: pipelined == sequential == psum "
+          f"for chunks 1/2/4 x codec on/off OK")
+
+# ---- the acceptance walk: executor leg log == priced leg list --------------
+# (both consumers walk the SAME CommSchedule object)
+
+AXES3 = ("pod", "host", "data")
+mesh3 = jax_compat.make_mesh((2, 2, 2), AXES3)
+fab3 = three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)
+sizes = {"data": 2, "host": 2, "pod": 2}
+names = {"data": "ici", "host": "cxl", "pod": "dcn"}
+
+for cfg, tol in ((SyncConfig("hier_striped", chunks=4, pipeline=True), 1e-6),
+                 (SyncConfig("hier_striped", chunks=2, pipeline=False), 1e-6),
+                 (SyncConfig("hier_striped", scatter_depth=1), 1e-6),
+                 (SyncConfig("hier_striped", scatter_depth=1,
+                             mid_codec="int8", codec_block=128), 2e-2),
+                 (SyncConfig("hier_root", chunks=2), 1e-6),
+                 (SyncConfig("flat"), 1e-6)):
+    sched = schedule_from_axes(("data", "host"), "pod", cfg, (8192,), 0,
+                               sizes, tier_names=names)
+    est = CostModel(fab3).from_schedule(sched)
+    priced = [lc.leg for lc in est.leg_charges]
+    log = []
+
+    def f(xs):
+        out, _ = lower_all_reduce(sched, xs.reshape(-1), leg_log=log)
+        return out
+
+    g = jax.jit(jax_compat.shard_map(f, mesh=mesh3, in_specs=P(AXES3),
+                                     out_specs=P(), check_vma=False))
+    out = np.asarray(g(jax.device_put(x, NamedSharding(mesh3, P(AXES3)))))
+    assert log == list(sched.legs) == priced, (cfg, log, priced)
+    err = np.max(np.abs(out - expect)) / np.max(np.abs(expect))
+    assert err < tol, (cfg, err)
+    print(f"leg walk {sched.describe()}: executor == cost model "
+          f"({len(log)} legs) OK")
+
+# ---- JSON round-trip lowers identically ------------------------------------
+
+cfg = SyncConfig("hier_striped", chunks=4, pipeline=True)
+sched = schedule_from_axes(("data", "host"), "pod", cfg, (8192,), 0, sizes,
+                           tier_names=names)
+rt = CommSchedule.from_json(sched.to_json())
+assert rt == sched
+outs = []
+for s in (sched, rt):
+    def f(xs, s=s):
+        out, _ = lower_all_reduce(s, xs.reshape(-1))
+        return out
+    g = jax.jit(jax_compat.shard_map(f, mesh=mesh3, in_specs=P(AXES3),
+                                     out_specs=P(), check_vma=False))
+    outs.append(np.asarray(g(jax.device_put(x, NamedSharding(mesh3, P(AXES3))))))
+assert np.array_equal(outs[0], outs[1]), "round-tripped schedule diverged"
+print("build -> to_json -> from_json -> lower: bitwise identical OK")
+
+print("ALL OK")

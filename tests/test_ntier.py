@@ -184,10 +184,215 @@ def test_planner_two_tier_call_sites_unchanged():
 
 
 # ---------------------------------------------------------------------------
-# multi-device equivalence battery (8 forced CPU devices, subprocess)
+# CommSchedule IR (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_build_decisions():
+    """The builder owns the tier walk: scatters the divisible prefix,
+    psums the rest, chunks the slow leg, all-gathers back in reverse."""
+    from repro.core.schedule import (AllGather, Psum, ReduceScatter,
+                                     SlowChunk, SyncConfig, build_schedule)
+    fab = _fabric3()
+    s = build_schedule(fab, SyncConfig("hier_striped", chunks=4),
+                       (8, 1024), 1)
+    kinds = [type(l).__name__ for l in s.legs]
+    assert kinds == ["ReduceScatter", "ReduceScatter"] \
+        + ["SlowChunk"] * 4 + ["AllGather", "AllGather"]
+    assert s.pipelined and s.chunks == 4
+    # pipelined chunking must keep every chunk divisible by the scattered
+    # prefix: dim extent 8 with 4 scattered members clamps 4 -> 2 chunks
+    s8 = build_schedule(fab, SyncConfig("hier_striped", chunks=4),
+                        (8, 1024), 0)
+    assert s8.chunks == 2 and s8.pipelined
+    assert s.scattered_axes == ("data", "host")
+    assert s.up_legs[0].axis == "host" and s.up_legs[1].axis == "data"
+    # depth-limited plan: the mid tier beyond the depth is psum'ed
+    s1 = build_schedule(fab, SyncConfig("hier_striped", scatter_depth=1),
+                        (6, 1022), 0)
+    assert [type(l).__name__ for l in s1.legs] == \
+        ["ReduceScatter", "Psum", "SlowChunk", "AllGather"]
+    # indivisible by the planned prefix -> flat fallback (and a full-depth
+    # request on a dim only the fastest tier divides falls back the same
+    # way the retired recursion's precheck did)
+    assert build_schedule(fab, SyncConfig("hier_striped"),
+                          (6, 1022), 0).strategy == "flat"
+    sf = build_schedule(fab, SyncConfig("hier_striped"), (5, 7), 0)
+    assert sf.strategy == "flat"
+    assert all(isinstance(l, Psum) for l in sf.legs)
+    # hier_root: psum the fast tiers, full payload on the slow leg
+    sr = build_schedule(fab, SyncConfig("hier_root", chunks=2), (8, 8), 0)
+    assert [type(l).__name__ for l in sr.legs] == \
+        ["Psum", "Psum", "SlowChunk", "SlowChunk"]
+    # top-k never chunks; pipeline needs chunks>1 AND a scattered tier
+    st = build_schedule(fab, SyncConfig("hier_striped", chunks=4,
+                                        codec="topk"), (8, 1024), 0)
+    assert st.chunks == 1 and not st.pipelined
+
+
+def test_schedule_json_roundtrip():
+    from repro.core.schedule import CommSchedule, SyncConfig, build_schedule
+    fab = _fabric3()
+    for cfg in (SyncConfig("hier_striped", chunks=4, codec="int8"),
+                SyncConfig("hier_striped", scatter_depth=1,
+                           mid_codec="int8"),
+                SyncConfig("hier_root"),
+                SyncConfig("flat")):
+        s = build_schedule(fab, cfg, (8, 1024), 0)
+        rt = CommSchedule.from_json(s.to_json())
+        assert rt == s, cfg
+        assert rt.describe() == s.describe()
+
+
+def test_from_schedule_matches_ntier_striped():
+    """On a fully-divisible shape the schedule price equals the legacy
+    shape-free formula — the drift between the cost model and the executed
+    recursion is retired."""
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    cm = CostModel(fab)
+    numel = (64 << 20) // 4
+    for chunks in (1, 4):
+        s = build_schedule(fab, SyncConfig("hier_striped", chunks=chunks,
+                                           pipeline=False), (numel,), 0)
+        est = cm.from_schedule(s)
+        ref = cm.ntier_striped(64 << 20, scatter_depth=-1, chunks=chunks)
+        assert est.total_s == pytest.approx(ref.total_s, rel=1e-12), chunks
+        assert est.slow_bytes_per_chip == pytest.approx(
+            ref.slow_bytes_per_chip)
+
+
+def test_from_schedule_prices_the_lowered_legs():
+    """Acceptance: the cost model walks the SAME CommSchedule the executor
+    lowers — leg_charges[i].leg IS schedule.legs[i]."""
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    s = build_schedule(fab, SyncConfig("hier_striped", chunks=4), (8, 1024), 1)
+    est = CostModel(fab).from_schedule(s)
+    assert len(est.leg_charges) == len(s.legs)
+    assert all(lc.leg is l for lc, l in zip(est.leg_charges, s.legs))
+    assert est.pipelined and est.chunks == 4
+
+
+def test_from_schedule_overlap_credit():
+    """Pipelined schedules are credited max(slow, fast) + min(per-chunk),
+    strictly cheaper than the sequential sum of the same legs."""
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    cm = CostModel(fab)
+    numel = (64 << 20) // 4
+    seq = cm.from_schedule(build_schedule(
+        fab, SyncConfig("hier_striped", chunks=4, pipeline=False), (numel,), 0))
+    ovl = cm.from_schedule(build_schedule(
+        fab, SyncConfig("hier_striped", chunks=4, pipeline=True), (numel,), 0))
+    assert ovl.total_s < seq.total_s
+    slow = sum(lc.seconds for lc in ovl.leg_charges
+               if type(lc.leg).__name__ == "SlowChunk")
+    fast = sum(lc.seconds for lc in ovl.leg_charges
+               if type(lc.leg).__name__ != "SlowChunk")
+    assert ovl.total_s == pytest.approx(
+        max(slow, fast) + min(slow / 4, fast / 4))
+    assert seq.total_s == pytest.approx(slow + fast)
+
+
+def test_planner_stores_schedule_on_sections():
+    from repro.core.planner import Planner
+    fab = _fabric3()
+    plan = Planner(fab, strategy="hier_striped").plan(
+        {"w": jax.ShapeDtypeStruct((8, 1024), jnp.float32)}, bucket_bytes=1)
+    sec = plan.sections[0]
+    assert sec.schedule is not None
+    assert sec.schedule.scattered_axes == ("data", "host")
+    assert sec.schedule.chunks == sec.sync.chunks
+    # the serialized plan embeds the schedule
+    import json as _json
+    dumped = _json.loads(plan.to_json())
+    assert dumped[0]["schedule"]["legs"][0]["kind"] == "reduce_scatter"
+
+
+def test_planner_bucket_chunks_not_hardcoded():
+    """Regression: flush() used to hard-code chunks=1 for small-leaf
+    buckets; now the searched chunk count (clamped by _adjust_chunks)
+    lands in the emitted Section."""
+    from repro.core.planner import Planner
+    fab = _fabric3()
+    planner = Planner(fab, strategy="hier_striped", max_chunks=4)
+    shapes = {f"b{i}": jax.ShapeDtypeStruct((1 << 16,), jnp.float32)
+              for i in range(16)}
+    plan = planner.plan(shapes, bucket_bytes=32 << 20)
+    bucket = [s for s in plan.sections if len(s.leaf_paths) > 1]
+    assert bucket, "expected a bucket section"
+    sec = bucket[0]
+    assert sec.sync.chunks > 1
+    assert sec.schedule is not None and sec.schedule.chunks == sec.sync.chunks
+    padded = sec.numel + ((-sec.numel) % planner.nf)
+    assert (padded // planner.nf) % sec.sync.chunks == 0
+
+
+def test_planner_chunks_use_real_itemsize():
+    """Regression: chunk feasibility used nbytes // 4 (assumed fp32).
+    Feasibility is now driven by the true element count; schedule pricing
+    honors the schedule's dtype (the planner prices at the fp32 WIRE
+    dtype, since grad_sync upcasts before the collectives)."""
+    from repro.core.cost_model import CostModel, dtype_itemsize
+    from repro.core.planner import Planner
+    from repro.core.schedule import SyncConfig, build_schedule
+    assert dtype_itemsize("float16") == 2
+    assert dtype_itemsize("bfloat16") == 2
+    fab = _fabric3()
+    # min_chunk_numel exactly at the 2-way split of the true shard numel:
+    # an fp32-assuming byte count (nbytes // 4 == true_numel / 2 for fp16)
+    # would have rejected every chunking of this fp16 section
+    shard_numel = (1024 * 4096) // 4
+    planner = Planner(fab, strategy="hier_striped",
+                      min_chunk_numel=shard_numel // 2, max_chunks=2)
+    plan = planner.plan({"w16": jax.ShapeDtypeStruct((1024, 4096),
+                                                     jnp.float16)},
+                        bucket_bytes=1)
+    sec = plan.sections[0]
+    assert sec.sync.chunks == 2
+    # and the cost model charges half-precision half the bytes
+    cm = CostModel(fab)
+    cfg = SyncConfig("hier_striped", pipeline=False)
+    e16 = cm.from_schedule(build_schedule(fab, cfg, (64, 4096), 1,
+                                          dtype="float16"))
+    e32 = cm.from_schedule(build_schedule(fab, cfg, (64, 4096), 1,
+                                          dtype="float32"))
+    assert e16.slow_bytes_per_chip == pytest.approx(
+        e32.slow_bytes_per_chip / 2)
+
+
+def test_planner_mid_tier_codec_legal():
+    """The second ROADMAP open item: a depth-limited section may compress
+    its UNSCATTERED mid tier."""
+    from repro.core.planner import Planner
+    from repro.core.schedule import Psum
+    fab = _fabric3()
+    planner = Planner(fab, strategy="hier_striped", mid_codec="int8")
+    # dims divisible by 2 but not 4 -> depth 1, cxl tier psum'ed
+    plan = planner.plan({"w": jax.ShapeDtypeStruct((2, 524286), jnp.float32)},
+                        bucket_bytes=1)
+    sec = plan.sections[0]
+    assert sec.sync.scatter_depth == 1
+    assert sec.sync.mid_codec == "int8"
+    mid = [l for l in sec.schedule.legs if isinstance(l, Psum)]
+    assert mid and mid[0].codec == "int8"
+
+
+# ---------------------------------------------------------------------------
+# multi-device equivalence batteries (8 forced CPU devices, subprocess)
 # ---------------------------------------------------------------------------
 
 
 def test_multi_device_ntier_battery():
     out = run_multi_device(os.path.join(HERE, "batteries", "ntier_battery.py"))
+    assert "ALL OK" in out
+
+
+def test_multi_device_schedule_battery():
+    out = run_multi_device(os.path.join(HERE, "batteries",
+                                        "schedule_battery.py"))
     assert "ALL OK" in out

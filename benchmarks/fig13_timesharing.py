@@ -1,31 +1,108 @@
-"""Paper Figure 13 / §6.4 deep dive: CNs time-share the NIC pool — a CN's
-communication burst uses the full pool while peers compute, and the memory
-pool must absorb the pool's aggregate rate (paper: the NIC pool's peak
-memory demand is 2.9x the CNs' compute-phase demand)."""
+"""Paper Figure 13 / §6.4 deep dive, replayed on the fabric simulator:
+θ CNs time-share the NIC pool.
+
+The paper's claim has two halves, and both are about TIME, not aggregate
+rate — which is why this figure now runs on ``repro.sim.fabric_sim``
+instead of two lines of arithmetic:
+
+  * a CN's communication burst can use the FULL pool while its peers
+    compute (θ× the burst speed of its own NIC), but only if bursts are
+    staggered — θ CNs bursting synchronously each get their fair 1/θ of
+    the pool, i.e. exactly their own NIC back;
+  * the memory pool must absorb the NIC pool's aggregate DMA rate during
+    a burst — the paper measured ~2.9x the CNs' compute-phase demand.
+
+Setup: θ CNs on the paper's prototype rates (fabric C = 50 GB/s, NIC
+B = C/θ), each CN a tenant replaying a one-leg cross-rack burst schedule
+for several (compute, burst) rounds.  Three scenarios:
+``own_nic`` (no pooling: each flow capped at its own lane),
+``sync`` (pooled, all CNs burst at the same instant) and
+``staggered`` (pooled, CN k starts its round k exclusive-burst-times
+later — the time-sharing the LPPU's arbiter delivers).
+
+Derived columns report the burst speedup vs own-NIC (paper: θ×), the
+makespan ratio of staggered vs synchronized rounds, and the modeled
+memory-pool demand ratio: during an exclusive burst the pool DMAs
+received chunks INTO the memory pool at the full pool rate (peak granted
+lanes × B, measured from the sim's allocation trace), reads outgoing
+chunks OUT at the same rate, and the bursting CN drains reduced results
+over its CXL link — (2·pool + C)/C against a compute-phase CN drawing
+its CXL link, ~3.0x in our model vs the paper's *measured* 2.9x (the
+paper compares against observed compute-phase traffic, we charge the
+full link).
+"""
 from __future__ import annotations
 
-from benchmarks.paper_workloads import proto_topo
+from repro.core.cost_model import CostModel
+from repro.core.nicpool import NicPool
+from repro.core.schedule import SyncConfig, build_schedule
+from repro.core.topology import FabricSpec, HardwareSpec, Tier
+from repro.sim.fabric_sim import Tenant, simulate
+
+C_LINK = 50e9  # the prototype's CXL fabric rate (B = C / theta)
 
 
-def run():
-    topo = proto_topo(theta=8)
-    topo1 = proto_topo(theta=1)
+def burst_fabric(theta: float) -> FabricSpec:
+    """One CN's view of the prototype: its cross-rack leg rides one NIC
+    lane at B = C/theta; the fast tier is degenerate (the burst is the
+    CN's own payload, not a rack-wide collective)."""
+    hw = HardwareSpec(ici_bw=C_LINK, dcn_bw=C_LINK / theta,
+                      ici_latency=1e-6, dcn_latency=32.5e-6)
+    return FabricSpec(tiers=(
+        Tier("ici", "data", 1, hw.ici_bw, hw.ici_latency),
+        Tier("dcn", "pod", 2, hw.dcn_bw, hw.dcn_latency),
+    ), hw=hw)
+
+
+def run(smoke: bool = False):
+    theta = 4 if smoke else 8
+    burst = (8e6 if smoke else 256e6)  # bytes per CN per round
+    rounds = 2 if smoke else 4
+
+    fab = burst_fabric(theta)
+    cm = CostModel(fab)
+    sched = build_schedule(fab, SyncConfig("hier_striped", chunks=1,
+                                           pipeline=False),
+                           (int(burst) // 4,), 0)
+    t_nominal = cm.from_schedule(sched).total_s  # one burst on its own NIC
+    # compute long enough that a staggered peer's burst fits inside it
+    t_excl = t_nominal / theta
+    compute = theta * t_excl
+
+    def cns(stagger: bool, max_lanes):
+        return [Tenant(f"cn{k}", sched, compute_s=compute, rounds=rounds,
+                       start=(k * t_excl if stagger else 0.0),
+                       max_lanes=max_lanes) for k in range(theta)]
+
     rows = []
-    # per-CN communication burst: exclusive pool use vs own-NIC baseline
-    burst = 256e6
-    t_own = burst / topo.hw.dcn_bw
-    t_pool = burst / topo.pool_dcn_bw
-    rows.append(("fig13/burst_own_nic", t_own * 1e6, "1.00x"))
-    rows.append(("fig13/burst_full_pool", t_pool * 1e6,
-                 f"{t_own/t_pool:.2f}x_(time-shared)"))
-    # memory-pool bandwidth demand: NIC-pool DMA rate vs a CN's compute-phase
-    # access rate (CXL-link bound)
-    # at full NIC rate (B=C): pool aggregate vs a CN's single CXL link —
-    # the paper measured 2.9x against *observed* compute-phase traffic
-    nic_demand = topo1.pool_dcn_bw
-    cn_demand = topo1.hw.ici_bw  # one CXL link per CN
+    # ---- per-burst latency: own NIC vs sync pool vs staggered pool --------
+    own = simulate(fab, cns(False, 1.0), pool=NicPool(lanes=theta))
+    sync = simulate(fab, cns(False, float(theta)), pool=NicPool(lanes=theta))
+    stag = simulate(fab, cns(True, float(theta)), pool=NicPool(lanes=theta))
+
+    def mean_burst(res) -> float:
+        ev = res.slow_events()
+        return sum(e.finish - e.start for e in ev) / max(len(ev), 1)
+
+    b_own, b_sync, b_stag = mean_burst(own), mean_burst(sync), mean_burst(stag)
+    rows.append(("fig13/burst_own_nic", b_own * 1e6, "1.00x"))
+    rows.append(("fig13/burst_sync_pool", b_sync * 1e6,
+                 f"{b_own/b_sync:.2f}x_(fair_share=own_NIC)"))
+    rows.append(("fig13/burst_staggered_pool", b_stag * 1e6,
+                 f"{b_own/b_stag:.2f}x_paper={theta}x_(exclusive_pool)"))
+    # ---- makespan over R rounds: time-sharing hides bursts in compute -----
+    rows.append(("fig13/makespan_sync", sync.makespan * 1e6, "baseline"))
+    rows.append(("fig13/makespan_staggered", stag.makespan * 1e6,
+                 f"{sync.makespan/stag.makespan:.2f}x_vs_sync"))
+    # ---- memory-pool demand (paper C1): peak pool DMA vs compute draw -----
+    B = fab.slowest.bw
+    pool_rate = stag.peak_pool_lanes * B          # measured from the trace
+    cxl = fab.hw.ici_bw                           # a CN's compute-phase draw
+    ratio = (2.0 * pool_rate + cxl) / cxl         # DMA in + out + writeback
+    rows.append(("fig13/mempool_peak_pool_rate_GBps", 0.0,
+                 f"{pool_rate/1e9:.1f}GB/s_(peak_lanes={stag.peak_pool_lanes:.1f}x{B/1e9:.2f})"))
     rows.append(("fig13/mempool_bw_ratio", 0.0,
-                 f"{nic_demand/cn_demand:.2f}x_paper=2.9x_(vs_link;paper_vs_observed)"))
+                 f"{ratio:.2f}x_paper=2.9x_(model_vs_measured;full-link_compute_draw)"))
     return rows
 
 

@@ -1,10 +1,14 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
+Prints ``name,us_per_call,derived`` CSV on stdout; failures go to STDERR
+(an ``ERROR`` diagnostic row + traceback) so the CSV stream stays
+parseable, and the exit code is nonzero when any module failed.  Run:
     PYTHONPATH=src python -m benchmarks.run
 
-``--smoke`` runs the fast analytic figure subset (fig_ntier, fig_overlap)
-at tiny payload sizes — the CI sanity job.
+``--smoke`` runs the fast analytic/simulated figure subset (fig_ntier,
+fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention) at
+tiny payload sizes — the CI sanity job (the workflow uploads the CSV as
+an artifact and fails on ERROR rows).
 """
 from __future__ import annotations
 
@@ -22,13 +26,16 @@ def main() -> None:
 
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
                             fig12_nic_scaling, fig13_timesharing, fig_ntier,
-                            fig_overlap, roofline, table4_breakdown)
+                            fig_overlap, fig_pool_contention, roofline,
+                            table4_breakdown)
     if args.smoke:
-        modules = [fig_ntier, fig_overlap]
+        modules = [fig_ntier, fig_overlap, fig13_timesharing,
+                   fig_pool_contention]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
                    fig12_nic_scaling, fig13_timesharing, fig_ntier,
-                   fig_overlap, table4_breakdown, roofline]
+                   fig_overlap, fig_pool_contention, table4_breakdown,
+                   roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:
@@ -40,7 +47,8 @@ def main() -> None:
                 print(f"{name},{us:.3f},{derived}")
         except Exception:
             failed += 1
-            print(f"{mod.__name__},ERROR,", file=sys.stdout)
+            # stderr, NOT stdout: ERROR rows must not corrupt the CSV
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
     if failed:
         sys.exit(1)

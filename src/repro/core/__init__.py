@@ -1,9 +1,10 @@
 """DFabric core: N-tier fabric topology, CommSchedule IR, cost model,
-collectives (the schedule executor), planner."""
+collectives (the schedule executor), planner, NIC-pool arbiter."""
 from repro.core.topology import (
     FabricSpec, HardwareSpec, Tier, TwoTierTopology, as_fabric,
     fabric_from_mesh_sizes, production_topology, three_tier_fabric,
     topology_from_mesh_sizes)
+from repro.core.nicpool import LaneGrant, LaneRequest, NicPool, waterfill
 from repro.core.schedule import (
     AllGather, CommSchedule, Psum, ReduceScatter, SlowChunk, SyncConfig,
     build_schedule, schedule_from_axes)
@@ -20,6 +21,7 @@ __all__ = [
     "FabricSpec", "HardwareSpec", "Tier", "TwoTierTopology", "as_fabric",
     "fabric_from_mesh_sizes", "production_topology", "three_tier_fabric",
     "topology_from_mesh_sizes",
+    "LaneGrant", "LaneRequest", "NicPool", "waterfill",
     "AllGather", "CommSchedule", "Psum", "ReduceScatter", "SlowChunk",
     "SyncConfig", "build_schedule", "schedule_from_axes",
     "CostModel", "CollectiveEstimate", "LegCharge", "NTierEstimate",

@@ -86,13 +86,15 @@ def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
 
 def _trace_schedule(fast: Tuple[str, ...], slow_axis: Optional[str],
                     cfg: SyncConfig, shape: Tuple[int, ...],
-                    scatter_dim: int) -> CommSchedule:
+                    scatter_dim: int, lane_offset: int = 0) -> CommSchedule:
     """Build a schedule in-trace from live axis sizes (the legacy entry
-    points' constructor path)."""
+    points' constructor path).  ``lane_offset`` preserves the planner's
+    NIC-pool stagger when the planned schedule had to be rebuilt."""
     sizes = {a: axis_size(a) for a in fast}
     if slow_axis is not None:
         sizes[slow_axis] = axis_size(slow_axis)
-    return schedule_from_axes(fast, slow_axis, cfg, shape, scatter_dim, sizes)
+    s = schedule_from_axes(fast, slow_axis, cfg, shape, scatter_dim, sizes)
+    return s.with_lane_offset(lane_offset) if lane_offset else s
 
 
 def _schedule_usable(schedule: Optional[CommSchedule], x: jax.Array,
@@ -152,18 +154,25 @@ def _slow_group(legs: Sequence[SlowChunk], x: jax.Array,
                 ef: Optional[jax.Array], cfg: SyncConfig, ranks: prims.Ranks
                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Sequentially lower a contiguous run of slow chunks over the
-    flattened shard (the non-pipelined slow leg)."""
+    flattened shard (the non-pipelined slow leg).
+
+    Legs arrive in ISSUE order (sub-flow indices rotated by the
+    schedule's ``lane_offset``); the payload is split and reassembled by
+    ``SlowChunk.index``, so the wire order changes but the result never
+    does."""
     shp = x.shape
     xf = x.reshape(-1)
     ef_f = ef.reshape(-1) if ef is not None else None
     C = len(legs)
     parts = _split_chunks(xf, C)
     ef_parts = _split_chunks(ef_f, C) if ef_f is not None else [None] * C
-    outs, nefs = [], []
-    for leg, p, e in zip(legs, parts, ef_parts):
-        o, ne = _slow_chunk_psum(leg, p, e, cfg, ranks)
-        outs.append(o)
-        nefs.append(ne)
+    outs: List = [None] * C
+    nefs: List = [None] * C
+    for leg in legs:
+        o, ne = _slow_chunk_psum(leg, parts[leg.index], ef_parts[leg.index],
+                                 cfg, ranks)
+        outs[leg.index] = o
+        nefs[leg.index] = ne
     out = jnp.concatenate(outs) if C > 1 else outs[0]
     if ef is not None:
         nef = (jnp.concatenate(nefs) if C > 1 else nefs[0]).reshape(ef.shape)
@@ -266,12 +275,15 @@ def _lower_pipelined(schedule: CommSchedule, x: jax.Array,
               for i, p in enumerate(parts)]
     shard_shape = shards[0].shape
 
-    def issue_slow(i: int):
-        o, ne = _slow_chunk_psum(slow[i], shards[i].reshape(-1), ef_parts[i],
-                                 cfg, ranks)
+    def issue_slow(pos: int):
+        # legs are in ISSUE order; the leg's index picks the data chunk
+        # (lane_offset rotation — see CommSchedule.with_lane_offset)
+        leg = slow[pos]
+        o, ne = _slow_chunk_psum(leg, shards[leg.index].reshape(-1),
+                                 ef_parts[leg.index], cfg, ranks)
         if slow_log is not None:
-            slow_log.append(slow[i])
-        return o, ne
+            slow_log.append(leg)
+        return leg.index, o, ne
 
     def gather(buf: jax.Array, lg) -> jax.Array:
         y = buf.reshape(shard_shape)
@@ -283,14 +295,16 @@ def _lower_pipelined(schedule: CommSchedule, x: jax.Array,
 
     outs: List[Optional[jax.Array]] = [None] * C
     nefs: List[Optional[jax.Array]] = [None] * C
-    inflight, inflight_ef = issue_slow(0)
-    for i in range(1, C):
-        nxt, nxt_ef = issue_slow(i)  # chunk i crosses the slow tier ...
-        outs[i - 1] = gather(inflight, up_log if i == 1 else None)
-        nefs[i - 1] = inflight_ef    # ... while chunk i-1 gathers
-        inflight, inflight_ef = nxt, nxt_ef
-    outs[C - 1] = gather(inflight, up_log if C == 1 else None)
-    nefs[C - 1] = inflight_ef
+    inflight = issue_slow(0)
+    for pos in range(1, C):
+        nxt = issue_slow(pos)        # this sub-flow crosses the slow tier
+        idx, buf, buf_ef = inflight  # ... while the previous one gathers
+        outs[idx] = gather(buf, up_log if pos == 1 else None)
+        nefs[idx] = buf_ef
+        inflight = nxt
+    idx, buf, buf_ef = inflight
+    outs[idx] = gather(buf, up_log if C == 1 else None)
+    nefs[idx] = buf_ef
 
     if log is not None:
         log.extend(down_log + slow_log + up_log)
@@ -340,21 +354,23 @@ def lower_reduce_scatter(schedule: CommSchedule, x: jax.Array,
 
 def pod_psum(x: jax.Array, slow_axis: Optional[str], cfg: SyncConfig,
              ef: Optional[jax.Array] = None,
-             ranks: prims.Ranks = None
+             ranks: prims.Ranks = None,
+             lane_offset: int = 0
              ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """All-reduce ``x`` (this chip's fast-tier-scattered shard) over the
     slowest axis — the bare NIC-pool leg, kept for direct callers.
 
     ``cfg.chunks`` splits the transfer into independent sub-flows; the
-    codec (if any) runs here and only here."""
+    codec (if any) runs here and only here.  ``lane_offset`` rotates the
+    sub-flow issue order (the NIC-pool stagger)."""
     if slow_axis is None or axis_size(slow_axis) == 1:
         return x, ef
     n = axis_size(slow_axis)
     chunks = max(cfg.chunks, 1) if cfg.codec != "topk" else 1
     while chunks > 1 and x.shape[0] % chunks != 0:
         chunks -= 1
-    legs = [SlowChunk(i, chunks, cfg.codec, slow_axis, slow_axis, n)
-            for i in range(chunks)]
+    legs = [SlowChunk((j + lane_offset) % chunks, chunks, cfg.codec,
+                      slow_axis, slow_axis, n) for j in range(chunks)]
     return _slow_group(legs, x, ef, cfg, ranks)
 
 
@@ -365,6 +381,7 @@ def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
                        ranks: prims.Ranks = None,
                        schedule: Optional[CommSchedule] = None,
                        leg_log: Optional[List] = None,
+                       lane_offset: int = 0,
                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """All-reduce ``x`` over (fast tiers x slow tier) with the DFabric plan.
 
@@ -373,11 +390,12 @@ def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
     the fast tiers (must be divisible by the product of the scattered tier
     sizes — indivisible tensors fall back to a flat psum).  When the
     planner already built a :class:`CommSchedule` for this Section, pass
-    it via ``schedule``; otherwise one is built in-trace from ``cfg``.
-    """
+    it via ``schedule``; otherwise one is built in-trace from ``cfg``
+    (``lane_offset`` keeps the planner's NIC-pool stagger on that path)."""
     fast = normalize_axes(fast_axis)
     if not _schedule_usable(schedule, x, fast, slow_axis):
-        schedule = _trace_schedule(fast, slow_axis, cfg, x.shape, scatter_dim)
+        schedule = _trace_schedule(fast, slow_axis, cfg, x.shape, scatter_dim,
+                                   lane_offset)
     return lower_all_reduce(schedule, x, ef=ef, ranks=ranks, leg_log=leg_log)
 
 
@@ -387,7 +405,8 @@ def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
                            ef: Optional[jax.Array] = None,
                            ranks: prims.Ranks = None,
                            schedule: Optional[CommSchedule] = None,
-                           leg_log: Optional[List] = None):
+                           leg_log: Optional[List] = None,
+                           lane_offset: int = 0):
     """Like :func:`dfabric_all_reduce` but stops before the final fast-tier
     all-gathers — the caller owns the 1/prod(fast sizes) shard, indexed
     fastest-tier-major (ZeRO-1 entry point)."""
@@ -399,7 +418,7 @@ def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
             or any(isinstance(l, Psum) for l in schedule.down_legs):
         full = _dc_replace(cfg, scatter_depth=-1)
         schedule = _trace_schedule(fast, slow_axis, full, x.shape,
-                                   scatter_dim)
+                                   scatter_dim, lane_offset)
     return lower_reduce_scatter(schedule, x, ef=ef, ranks=ranks,
                                 leg_log=leg_log)
 

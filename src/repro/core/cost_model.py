@@ -197,7 +197,8 @@ class CostModel:
     # ---- schedule pricing ---------------------------------------------------
     def from_schedule(self, schedule: "sched.CommSchedule", *,
                       mem_bw_limit: Optional[float] = None,
-                      cached: bool = True) -> ScheduleEstimate:
+                      cached: bool = True,
+                      granted_lanes: Optional[float] = None) -> ScheduleEstimate:
         """Price EXACTLY the legs the executor will lower — walk the same
         :class:`~repro.core.schedule.CommSchedule` leg list, charging each
         leg its alpha-beta time on its tier (this retires the drift
@@ -208,12 +209,23 @@ class CostModel:
         Pipelined schedules get the overlap credit
         ``max(slow, fast) + min(per-chunk slow, per-chunk fast)``.
 
+        ``granted_lanes`` is the contention-aware mode: slow legs are
+        charged at the NIC-pool lanes the arbiter actually GRANTS this
+        flow (e.g. ``NicPool.fair_share(tenants)``) instead of the tier's
+        nominal ``lanes`` — the whole per-leg charge scales by
+        ``nominal / granted``, matching ``repro.sim.fabric_sim``'s
+        lane-second flow model (at ``granted == nominal`` the estimate is
+        unchanged, and a single uncontended tenant's simulated makespan
+        equals ``total_s``).
+
         Note: a flat-strategy schedule is priced as per-tier sequential
         rings (an optimistic flat); the planner keeps using ``flat_ring``
         (the bottleneck-link model) when COMPARING flat against
         hierarchical candidates."""
         fab = self.fabric
         cfg = schedule.cfg
+        if granted_lanes is not None and granted_lanes <= 0:
+            raise ValueError(f"granted_lanes must be positive: {granted_lanes}")
         payload = float(schedule.numel * dtype_itemsize(schedule.dtype))
 
         def tier_for(leg) -> Tier:
@@ -228,6 +240,7 @@ class CostModel:
         n_chunks = max(len(schedule.slow_legs), 1)
         leg_charges: List[LegCharge] = []
         fast_s = slow_s = 0.0
+        first_slow = True
         for leg in schedule.legs:
             t = tier_for(leg)
             n = leg.size
@@ -243,6 +256,12 @@ class CostModel:
                 else:
                     by = 2.0 * (n - 1) / n * payload / ratio
                     secs = by / t.rate + 2.0 * (n - 1) * t.latency
+                    # a flat plan's slow-tier psum crosses the NIC pool
+                    # too: the contention-aware mode scales it the same
+                    # way as SlowChunk legs
+                    if granted_lanes is not None and fab.depth > 1 \
+                            and t.name == fab.slowest.name:
+                        secs *= max(t.lanes, 1e-30) / granted_lanes
                 fast_s += secs
             elif isinstance(leg, sched.SlowChunk):
                 rate = t.rate
@@ -255,11 +274,16 @@ class CostModel:
                     secs = by = 0.0
                 else:
                     by = 2.0 * (n - 1) / n * (payload / n_chunks) / ratio
-                    # ring latency once, then a launch overhead per extra
-                    # sub-flow (matches the retired ntier_striped total)
-                    lat = 2.0 * (n - 1) * t.latency if leg.index == 0 \
+                    # ring latency once on the FIRST ISSUED sub-flow (the
+                    # lane_offset rotation must not change the total),
+                    # then a launch overhead per extra sub-flow (matches
+                    # the retired ntier_striped total)
+                    lat = 2.0 * (n - 1) * t.latency if first_slow \
                         else 2.0 * t.latency
                     secs = by / rate + lat
+                    if granted_lanes is not None:
+                        secs *= max(t.lanes, 1e-30) / granted_lanes
+                first_slow = False
                 slow_s += secs
             else:  # AllGather — mirrors its ReduceScatter's payload level
                 payload *= n

@@ -34,6 +34,7 @@ import jax
 import numpy as np
 
 from repro.core.cost_model import CostModel, dtype_itemsize
+from repro.core.nicpool import NicPool
 from repro.core.schedule import CommSchedule, SyncConfig, build_schedule
 from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
 
@@ -104,12 +105,19 @@ class SyncPlan:
              "shape": [<local block shape>], "dtype": "<dtype>",
              "scatter_dim": <int>, "chunks": <int>,
              "pipelined": <bool>, "strategy": "<strategy>",
+             "lane_offset": <int>,
              "cfg": {<SyncConfig fields>}}
 
         Legs appear in lowering order: reduce-scatters down the fast
         tiers, unscattered psums, the slow-tier sub-flows, then
-        all-gathers back up.  ``CommSchedule.from_json`` round-trips this
-        exactly."""
+        all-gathers back up.  ``lane_offset`` is the planner's NIC-pool
+        stagger (``NicPool.stagger``): the slow_chunk legs appear in
+        ISSUE order, their ``index`` fields rotated by the offset so
+        concurrent Sections' first sub-flows ride different pool lanes
+        (sub-flow *i* maps to lane ``i mod lanes``); the executor
+        reassembles the payload by ``index``, so the field only affects
+        wire order.  Absent in pre-NIC-pool plans (defaults to 0 on
+        load).  ``CommSchedule.from_json`` round-trips this exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
@@ -130,7 +138,10 @@ class Planner:
     truth differs from the fabric description; ``fast_axis_size`` is the
     legacy single-tier override.  ``pipeline`` enables the overlapped
     slow-leg pipeline for chunked sections; ``mid_codec`` adds candidates
-    that int8-compress UNSCATTERED mid-tier psum legs (deep hierarchies)."""
+    that int8-compress UNSCATTERED mid-tier psum legs (deep hierarchies);
+    ``stagger_lanes`` asks the NIC-pool arbiter for per-Section sub-flow
+    phase offsets (``CommSchedule.lane_offset``) so concurrent Sections'
+    slow legs interleave across pool lanes instead of colliding."""
 
     def __init__(self, topo: Union[TwoTierTopology, FabricSpec], *,
                  fast_axis_size: Optional[int] = None,
@@ -140,10 +151,13 @@ class Planner:
                  min_chunk_numel: int = 1 << 16,
                  strategy: str = "auto",
                  pipeline: bool = True,
-                 mid_codec: Optional[str] = None):
+                 mid_codec: Optional[str] = None,
+                 stagger_lanes: bool = True):
         self.topo = topo
         self.fabric = as_fabric(topo)
         self.cost = CostModel(topo)
+        self.stagger_lanes = stagger_lanes
+        self.nic_pool = NicPool.from_fabric(self.fabric)
         if fast_axis_sizes is not None:
             self.fast_sizes: Tuple[int, ...] = tuple(int(s) for s in fast_axis_sizes)
         elif fast_axis_size is not None:
@@ -356,6 +370,8 @@ class Planner:
                 flush()
         flush()
 
+        if self.stagger_lanes:
+            sections = self._stagger_sections(sections)
         plan = SyncPlan(sections)
         # aggregate estimates
         tot, dcn = 0.0, 0.0
@@ -366,6 +382,23 @@ class Planner:
         plan.est_total_s = tot
         plan.est_dcn_bytes_per_chip = dcn
         return plan
+
+    def _stagger_sections(self, sections: List[Section]) -> List[Section]:
+        """NIC-pool stagger: concurrent Sections (bucket slow-legs
+        especially) hit the pool together, so ask the arbiter for a phase
+        offset per Section and rotate each schedule's slow sub-flow issue
+        order (``CommSchedule.with_lane_offset`` — cost- and
+        numerics-invariant; stored on the schedule, honored by
+        ``collectives.lower_all_reduce``, serialized by
+        ``SyncPlan.to_json``)."""
+        offs = self.nic_pool.stagger([s.schedule for s in sections])
+        out = []
+        for sec, off in zip(sections, offs):
+            if off and sec.schedule is not None:
+                sec = replace(sec,
+                              schedule=sec.schedule.with_lane_offset(off))
+            out.append(sec)
+        return out
 
     def _adjust_chunks(self, shape, scatter_dim, chunks, depth=None) -> int:
         """Chunking flattens the fast-tier-scattered shard; ensure

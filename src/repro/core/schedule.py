@@ -157,7 +157,18 @@ class CommSchedule:
         the legs before it;
       * when ``pipelined``, ``shape[scatter_dim]`` is divisible by
         ``chunks * prod(scattered tier sizes)``;
-      * ``SlowChunk`` legs are contiguous, between the down and up phases.
+      * ``SlowChunk`` legs are contiguous, between the down and up phases
+        — listed in ISSUE order (sub-flow ``index`` rotated by
+        ``lane_offset``), and every index in ``range(chunks)`` appears
+        exactly once.
+
+    ``lane_offset`` is the planner's NIC-pool stagger (see
+    ``repro.core.nicpool.NicPool.stagger``): slow sub-flow *i* rides pool
+    lane ``i mod lanes``, and rotating the issue order by the offset makes
+    concurrent Sections' first sub-flows land on DIFFERENT lanes.  The
+    executor lowers legs in listed (issue) order but splits/reassembles
+    the payload by ``SlowChunk.index``, so the rotation is numerically
+    free.
     """
 
     legs: Tuple[Leg, ...]
@@ -168,6 +179,7 @@ class CommSchedule:
     pipelined: bool = False
     strategy: str = "hier_striped"
     cfg: SyncConfig = field(default_factory=SyncConfig)
+    lane_offset: int = 0
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -210,6 +222,28 @@ class CommSchedule:
             n *= s
         return n
 
+    def with_lane_offset(self, offset: int) -> "CommSchedule":
+        """The NIC-pool stagger: rotate the slow sub-flow ISSUE order by
+        ``offset`` (position ``j`` issues chunk ``(j + offset) % chunks``)
+        and record the normalized offset.  Cost- and numerics-invariant:
+        the same legs are lowered and priced, only their wire order (and
+        hence which pool lane is hit first) changes."""
+        slow = self.slow_legs
+        C = len(slow)
+        if C == 0:
+            return replace(self, lane_offset=0)
+        off = int(offset) % C
+        if off == self.lane_offset and all(
+                l.index == (j + off) % C for j, l in enumerate(slow)):
+            return self
+        by_index = {l.index: l for l in slow}
+        rotated = [by_index[(j + off) % C] for j in range(C)]
+        first = next(i for i, l in enumerate(self.legs)
+                     if isinstance(l, SlowChunk))
+        legs = (self.legs[:first] + tuple(rotated)
+                + self.legs[first + C:])
+        return replace(self, legs=legs, lane_offset=off)
+
     def describe(self) -> str:
         parts = []
         for l in self.legs:
@@ -224,6 +258,8 @@ class CommSchedule:
             else:
                 parts.append(f"ag[{l.axis}x{l.size}]")
         mode = "pipelined" if self.pipelined else "sequential"
+        if self.lane_offset:
+            mode += f"+lane{self.lane_offset}"
         return f"{self.strategy}/{mode}: " + " -> ".join(parts)
 
     # ---- (de)serialization -------------------------------------------------
@@ -248,6 +284,7 @@ class CommSchedule:
             "shape": list(self.shape), "dtype": self.dtype,
             "scatter_dim": self.scatter_dim, "chunks": self.chunks,
             "pipelined": self.pipelined, "strategy": self.strategy,
+            "lane_offset": self.lane_offset,
             "cfg": {"strategy": c.strategy, "chunks": c.chunks,
                     "codec": c.codec, "codec_block": c.codec_block,
                     "codec_k_frac": c.codec_k_frac,
@@ -277,7 +314,8 @@ class CommSchedule:
         return cls(legs=tuple(legs), shape=tuple(d["shape"]),
                    dtype=d["dtype"], scatter_dim=d["scatter_dim"],
                    chunks=d["chunks"], pipelined=d["pipelined"],
-                   strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]))
+                   strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]),
+                   lane_offset=int(d.get("lane_offset", 0)))
 
 
 # ---------------------------------------------------------------------------

@@ -148,6 +148,13 @@ class FabricSpec:
         return self.members_below(self.depth - 1) * self.slowest.rate
 
     @property
+    def pool_lanes(self) -> float:
+        """Total NIC-pool lanes of one slow-tier group (every member's
+        per-chip ``lanes`` consolidated — the capacity a
+        ``repro.core.nicpool.NicPool`` arbitrates)."""
+        return self.members_below(self.depth - 1) * self.slowest.lanes
+
+    @property
     def pool_hbm_bw(self) -> float:
         """Aggregate memory-pool bandwidth per slow-tier group."""
         return self.members_below(self.depth - 1) * self.hw.hbm_bw

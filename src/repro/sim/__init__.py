@@ -1,0 +1,5 @@
+"""Discrete-event fabric simulation: replay CommSchedules against the
+NIC-pool arbiter (``repro.sim.fabric_sim``)."""
+from repro.sim.fabric_sim import LegEvent, SimResult, Tenant, simulate
+
+__all__ = ["LegEvent", "SimResult", "Tenant", "simulate"]

@@ -1,0 +1,346 @@
+"""Discrete-event fabric simulator — CommSchedules replayed in TIME.
+
+The analytic cost model answers "how long does one Section's collective
+take, alone".  The paper's Fig. 13 claim is about *concurrency*: θ CNs
+time-share the NIC pool, a burst grabbing the whole pool while peers
+compute.  This simulator replays one or more :class:`CommSchedule` leg
+lists from concurrent tenants against a :class:`~repro.core.nicpool.NicPool`
+and emits per-leg start/finish timelines and a makespan.
+
+Model (one tenant)
+------------------
+Each tenant owns a serial **fast engine** (its ICI/CXL tiers — private,
+never contended across tenants) and submits its slow-tier legs as **pool
+flows** to the shared NIC pool:
+
+  * compute phases (``Tenant.compute_s``) and fast legs (ReduceScatter /
+    Psum / AllGather on non-slowest tiers) run back-to-back on the fast
+    engine, each charged exactly its
+    :meth:`CostModel.from_schedule <repro.core.cost_model.CostModel.from_schedule>`
+    leg time;
+  * slow legs (any leg on the slowest tier) become pool flows whose
+    service demand is ``leg_seconds * Tier.lanes`` lane-seconds — granted
+    its nominal lanes the flow takes exactly its priced time, granted the
+    whole pool it speeds up proportionally (latency is folded into the
+    scaled charge; bandwidth dominates at burst sizes);
+  * a **sequential** schedule walks its legs in order; a **pipelined**
+    schedule becomes the two-stage chunk pipeline the cost model credits:
+    per chunk, a fast stage of ``fast_total / chunks`` then its slow
+    flow, with fast stages serialized on the engine and one tenant's
+    flows FIFO-chained.  The resulting makespan reproduces
+    ``max(slow, fast) + min(per-chunk slow, per-chunk fast)`` exactly,
+    so a single tenant on an uncontended pool matches
+    ``ScheduleEstimate.total`` (the sim/cost parity contract).
+
+Concurrency is where the sim says more than the formula: flows from many
+tenants share the pool under the arbiter's weighted max-min (fluid) or
+pinned-lane (static executor, honoring ``CommSchedule.lane_offset``)
+allocation, and the timeline shows who got which lanes when.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.cost_model import CostModel, ScheduleEstimate
+from repro.core.nicpool import LaneRequest, NicPool
+from repro.core.schedule import CommSchedule
+from repro.core.topology import FabricSpec, as_fabric
+
+_EPS = 1e-12
+
+COMPUTE = "compute"  # the pseudo-leg label of a compute phase
+
+
+# ---------------------------------------------------------------------------
+# Inputs / outputs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Tenant:
+    """One concurrent replay of a schedule (a CN, a serving job, a
+    Section stream).
+
+    ``rounds`` repeats (compute phase, collective) back to back —
+    ``compute_s`` of local work precedes each collective.  ``max_lanes``
+    caps the pool grant of this tenant's slow flows: None = the
+    schedule's nominal lanes (no bursting), ``pool.lanes`` = fully
+    opportunistic (the Fig. 13 burst).  ``pin_lanes`` pins sub-flow *i*
+    to lane ``i mod pool_lanes`` — the static-executor constraint the
+    planner's ``lane_offset`` staggering exists for."""
+
+    name: str
+    schedule: Optional[CommSchedule]
+    start: float = 0.0
+    compute_s: float = 0.0
+    rounds: int = 1
+    priority: float = 1.0
+    max_lanes: Optional[float] = None
+    pin_lanes: bool = False
+
+
+@dataclass(frozen=True)
+class LegEvent:
+    """One leg's (or compute phase's) busy interval.  ``lanes`` is the
+    mean granted lane count (pool flows only, else 0).  Pipelined fast
+    stages are attributed per chunk: each fast leg gets one event per
+    chunk, its per-chunk share of the stage window."""
+
+    tenant: str
+    leg: object  # schedule leg, or the COMPUTE label
+    start: float
+    finish: float
+    lanes: float = 0.0
+    round: int = 0
+    chunk: int = -1
+
+
+@dataclass(frozen=True)
+class SimResult:
+    makespan: float
+    events: Tuple[LegEvent, ...]
+    finish: Dict[str, float]  # per-tenant completion time
+    pool: NicPool
+
+    def tenant_events(self, name: str) -> Tuple[LegEvent, ...]:
+        return tuple(e for e in self.events if e.tenant == name)
+
+    def slow_events(self, name: Optional[str] = None) -> Tuple[LegEvent, ...]:
+        return tuple(e for e in self.events if e.lanes > 0
+                     and (name is None or e.tenant == name))
+
+    @property
+    def peak_pool_lanes(self) -> float:
+        return self.pool.peak_lanes()
+
+
+# ---------------------------------------------------------------------------
+# Tenant programs (task DAGs)
+# ---------------------------------------------------------------------------
+
+
+class _Task:
+    __slots__ = ("kind", "dur", "work", "deps", "legs", "round", "chunk",
+                 "lane", "state", "start", "finish", "flow_id")
+
+    def __init__(self, kind, *, dur=0.0, work=0.0, deps=(), legs=(),
+                 rnd=0, chunk=-1, lane=None):
+        self.kind = kind  # "local" | "pool"
+        self.dur = dur
+        self.work = work
+        self.deps = list(deps)
+        self.legs = list(legs)  # [(leg, seconds_weight)]
+        self.round = rnd
+        self.chunk = chunk
+        self.lane = lane
+        self.state = "waiting"  # waiting | running | done
+        self.start = 0.0
+        self.finish = 0.0
+        self.flow_id = -1
+
+
+def _is_pool_leg(leg, fab: FabricSpec) -> bool:
+    """A leg crosses the NIC pool when it runs on the slowest tier —
+    matched by tier NAME or mesh AXIS, like ``CostModel.from_schedule``'s
+    ``tier_for`` (schedules built without ``tier_names`` carry the axis
+    name in ``leg.tier``)."""
+    if fab.depth <= 1:
+        return False
+    slow = fab.slowest
+    return leg.tier == slow.name or leg.axis == slow.axis \
+        or leg.tier == slow.axis
+
+
+def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
+             fab: FabricSpec, pool_lanes: float) -> List[_Task]:
+    """Expand one tenant into its task DAG (see module docstring)."""
+    nominal = fab.slowest.lanes if fab.depth > 1 else 1.0
+    sched = tenant.schedule
+    tasks: List[_Task] = []
+    tail: List[int] = []  # tasks the next round waits on
+
+    def lane_of(chunk_index: int) -> Optional[int]:
+        if not tenant.pin_lanes:
+            return None
+        return chunk_index % max(int(math.ceil(pool_lanes)), 1)
+
+    for r in range(max(tenant.rounds, 1)):
+        head = list(tail)
+        if tenant.compute_s > 0:
+            tasks.append(_Task("local", dur=tenant.compute_s, deps=head,
+                               legs=[(COMPUTE, tenant.compute_s)], rnd=r))
+            head = [len(tasks) - 1]
+        if sched is None or est is None or not sched.legs:
+            tail = head
+            continue
+        charges = est.leg_charges
+        slow = [lc for lc in charges if _is_pool_leg(lc.leg, fab)]
+        if sched.pipelined and sched.chunks > 1 and slow:
+            # the two-stage chunk pipeline the cost model credits
+            # (slow in issue order; a pipelined schedule with no pool
+            # legs — hand-built / degenerate — replays sequentially)
+            fast = [lc for lc in charges
+                    if not _is_pool_leg(lc.leg, fab)]
+            C = len(slow)
+            fast_total = sum(lc.seconds for lc in fast)
+            prev_local = head
+            prev_flow: List[int] = []
+            for j, slc in enumerate(slow):
+                tasks.append(_Task(
+                    "local", dur=fast_total / C, deps=prev_local,
+                    legs=[(lc.leg, lc.seconds) for lc in fast], rnd=r,
+                    chunk=slc.leg.index))
+                prev_local = [len(tasks) - 1]
+                tasks.append(_Task(
+                    "pool", work=slc.seconds * nominal,
+                    deps=prev_local + prev_flow,
+                    legs=[(slc.leg, slc.seconds)], rnd=r,
+                    chunk=slc.leg.index, lane=lane_of(slc.leg.index)))
+                prev_flow = [len(tasks) - 1]
+            tail = prev_local + prev_flow
+        else:
+            prev = head
+            for lc in charges:
+                if _is_pool_leg(lc.leg, fab):
+                    chunk = getattr(lc.leg, "index", 0)
+                    tasks.append(_Task(
+                        "pool", work=lc.seconds * nominal, deps=prev,
+                        legs=[(lc.leg, lc.seconds)], rnd=r, chunk=chunk,
+                        lane=lane_of(chunk)))
+                else:
+                    tasks.append(_Task("local", dur=lc.seconds, deps=prev,
+                                       legs=[(lc.leg, lc.seconds)], rnd=r))
+                prev = [len(tasks) - 1]
+            tail = prev
+    return tasks
+
+
+# ---------------------------------------------------------------------------
+# The event loop
+# ---------------------------------------------------------------------------
+
+
+def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
+             pool: Optional[NicPool] = None,
+             cost: Optional[CostModel] = None) -> SimResult:
+    """Replay ``tenants`` concurrently against ``pool``.
+
+    ``pool`` defaults to ``NicPool.from_fabric(fabric, len(tenants))`` —
+    every tenant contributes its nominal lanes (the rack pool).  Fast
+    legs are charged per :meth:`CostModel.from_schedule`; slow legs go
+    through the arbiter.  Returns per-leg events, per-tenant finish
+    times, and the makespan."""
+    fab = as_fabric(fabric)
+    cm = cost or CostModel(fab)
+    pool = pool or NicPool.from_fabric(fab, tenants=len(tenants))
+    if pool.active or pool.segments:
+        # a reused pool would merge allocation traces across runs and
+        # silently corrupt peak_lanes / busy_lane_seconds
+        raise ValueError("pool already has flows or a recorded trace; "
+                         "pass a fresh NicPool per simulate() run")
+
+    progs: List[List[_Task]] = []
+    for tn in tenants:
+        est = cm.from_schedule(tn.schedule) if tn.schedule is not None else None
+        progs.append(_compile(tn, est, fab, pool.lanes))
+
+    names = [tn.name for tn in tenants]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+
+    engine_task: List[Optional[int]] = [None] * len(tenants)  # running local
+    flows: Dict[int, Tuple[int, int]] = {}  # flow id -> (tenant, task idx)
+    events: List[LegEvent] = []
+    finish = {tn.name: 0.0 for tn in tenants}
+
+    def deps_done(ti: int, task: _Task) -> bool:
+        return all(progs[ti][d].state == "done" for d in task.deps)
+
+    def emit_local(tn: Tenant, task: _Task) -> None:
+        total = sum(w for _, w in task.legs)
+        t0 = task.start
+        span = task.finish - task.start
+        for leg, w in task.legs:
+            frac = (w / total) if total > 0 else 1.0 / max(len(task.legs), 1)
+            t1 = min(t0 + span * frac, task.finish)
+            events.append(LegEvent(tn.name, leg, t0, t1, 0.0, task.round,
+                                   task.chunk))
+            t0 = t1
+
+    t = min((tn.start for tn in tenants), default=0.0)
+    guard = 0
+    total_tasks = sum(len(p) for p in progs)
+    while True:
+        guard += 1
+        if guard > 200 * (total_tasks + 4):
+            raise RuntimeError("fabric_sim event-loop guard tripped")
+        # ---- start everything startable at time t --------------------------
+        for ti, (tn, prog) in enumerate(zip(tenants, progs)):
+            if t + _EPS < tn.start:
+                continue
+            # submit ready pool flows (FIFO order within the tenant is
+            # enforced by deps, so submission order is free)
+            for idx, task in enumerate(prog):
+                if task.kind == "pool" and task.state == "waiting" \
+                        and deps_done(ti, task):
+                    task.state = "running"
+                    task.start = t
+                    task.flow_id = pool.submit(LaneRequest(
+                        tenant=tn.name, work=task.work, arrive=t,
+                        lanes=(fab.slowest.lanes if fab.depth > 1 else 1.0),
+                        max_lanes=tn.max_lanes, priority=tn.priority,
+                        lane=task.lane, tag=task.legs[0][0]), t)
+                    flows[task.flow_id] = (ti, idx)
+            # the serial fast engine: first waiting local task, in order
+            if engine_task[ti] is None:
+                for idx, task in enumerate(prog):
+                    if task.kind == "local" and task.state == "waiting":
+                        if deps_done(ti, task):
+                            task.state = "running"
+                            task.start = t
+                            task.finish = t + task.dur
+                            engine_task[ti] = idx
+                        break  # in-order engine: don't skip ahead
+        # ---- done? ---------------------------------------------------------
+        if all(task.state == "done" for prog in progs for task in prog):
+            break
+        # ---- next event ----------------------------------------------------
+        t_next = math.inf
+        for ti, prog in enumerate(progs):
+            if engine_task[ti] is not None:
+                t_next = min(t_next, prog[engine_task[ti]].finish)
+        t_next = min(t_next, pool.earliest_finish(t))
+        for tn in tenants:  # tenants not yet started
+            if tn.start > t + _EPS:
+                t_next = min(t_next, tn.start)
+        if not math.isfinite(t_next):
+            stuck = [(tenants[ti].name, i, task.kind, task.state)
+                     for ti, prog in enumerate(progs)
+                     for i, task in enumerate(prog) if task.state != "done"]
+            raise RuntimeError(f"fabric_sim deadlock at t={t}: {stuck}")
+        # ---- advance -------------------------------------------------------
+        for fid, grant in pool.advance(t, t_next):
+            ti, idx = flows.pop(fid)
+            task = progs[ti][idx]
+            task.state = "done"
+            task.finish = t_next
+            events.append(LegEvent(tenants[ti].name, task.legs[0][0],
+                                   task.start, t_next, grant.mean_lanes,
+                                   task.round, task.chunk))
+            finish[tenants[ti].name] = max(finish[tenants[ti].name], t_next)
+        for ti, prog in enumerate(progs):
+            idx = engine_task[ti]
+            if idx is not None and prog[idx].finish <= t_next + _EPS:
+                prog[idx].state = "done"
+                prog[idx].finish = min(prog[idx].finish, t_next)
+                emit_local(tenants[ti], prog[idx])
+                finish[tenants[ti].name] = max(finish[tenants[ti].name],
+                                               prog[idx].finish)
+                engine_task[ti] = None
+        t = t_next
+
+    events.sort(key=lambda e: (e.start, e.finish, e.tenant))
+    makespan = max(finish.values(), default=0.0)
+    return SimResult(makespan, tuple(events), finish, pool)

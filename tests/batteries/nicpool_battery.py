@@ -1,0 +1,187 @@
+"""NIC-pool subsystem battery (pure Python — no devices needed; run via
+subprocess like the other batteries for log isolation).
+
+  * arbiter invariants: work conservation (every allocation segment
+    grants ``min(pool, sum of active caps)``), no lane oversubscription
+    (total and per-pinned-lane), FIFO fairness under equal priority
+    (earlier arrivals of equal flows never finish later);
+  * sim/cost parity: for the schedule_battery grid (1/2/3 tiers x chunks
+    1/2/4 x pipeline on/off x strategies), a single tenant's simulated
+    makespan matches ``ScheduleEstimate.total`` within 1% (exact at
+    chunks=1), and under θ-way contention the sim matches the
+    contention-aware ``granted_lanes`` pricing;
+  * a 2-tenant pinned-lane contention case where the arbiter's staggered
+    ``lane_offset`` assignment beats synchronized issue by the analytic
+    ``(fast + 2*slow) / (fast + slow)`` ratio.
+"""
+import itertools
+import math
+
+from repro.core.cost_model import CostModel
+from repro.core.nicpool import LaneRequest, NicPool, waterfill
+from repro.core.schedule import SyncConfig, schedule_from_axes
+from repro.core.topology import (FabricSpec, HardwareSpec, Tier, as_fabric,
+                                 three_tier_fabric, TwoTierTopology,
+                                 fabric_from_mesh_sizes)
+from repro.sim.fabric_sim import Tenant, simulate
+
+EPS = 1e-9
+
+# ---------------------------------------------------------------------------
+# 1. water-filling allocator
+# ---------------------------------------------------------------------------
+
+# capped flows spill to the uncapped; grants never exceed caps
+out = waterfill([(1.0, 0.5), (1.0, 10.0), (2.0, 10.0)], 4.0)
+assert abs(sum(out) - 4.0) < EPS, out
+assert abs(out[0] - 0.5) < EPS, out
+assert out[2] > out[1] - EPS and abs(out[2] / out[1] - 2.0) < 1e-6, out
+# demand below capacity: everyone gets their cap (work conservation stops
+# at total demand)
+out = waterfill([(1.0, 1.0), (3.0, 0.25)], 8.0)
+assert abs(out[0] - 1.0) < EPS and abs(out[1] - 0.25) < EPS, out
+print("waterfill: caps + weights + conservation OK")
+
+# ---------------------------------------------------------------------------
+# 2. arbiter invariants on a mixed request trace
+# ---------------------------------------------------------------------------
+
+pool = NicPool(lanes=4.0)
+reqs = [
+    LaneRequest("a", work=4.0, arrive=0.0, lanes=1.0, max_lanes=4.0),
+    LaneRequest("b", work=2.0, arrive=0.5, lanes=1.0, max_lanes=2.0),
+    LaneRequest("c", work=1.0, arrive=0.5, lanes=1.0, max_lanes=4.0,
+                priority=2.0),
+    LaneRequest("d", work=3.0, arrive=2.0, lanes=1.0, max_lanes=4.0),
+]
+grants = pool.run(reqs)
+assert len(grants) == len(reqs)
+total_work = sum(r.work for r in reqs)
+assert abs(pool.busy_lane_seconds() - total_work) < 1e-6
+for seg in pool.segments:
+    assert seg.total <= pool.lanes + EPS, seg  # no oversubscription
+    # work conservation: every segment grants min(pool, sum caps)
+    caps = sum(min(r.cap, pool.lanes) for fid, r in
+               ((fid, g) for fid in seg.alloc
+                for g in [reqs[fid]]))
+    assert seg.total >= min(pool.lanes, caps) - 1e-6, (seg, caps)
+print(f"arbiter: {len(pool.segments)} segments work-conserving, "
+      "no oversubscription OK")
+
+# FIFO fairness: equal-priority equal-work flows finish in arrival order
+pool = NicPool(lanes=2.0)
+reqs = [LaneRequest(f"f{i}", work=2.0, arrive=0.25 * i, max_lanes=2.0)
+        for i in range(6)]
+order = [g.request.tenant for g in pool.run(reqs)]
+assert order == [f"f{i}" for i in range(6)], order
+print("arbiter: FIFO fairness under equal priority OK")
+
+# pinned lanes never exceed a single lane's capacity
+pool = NicPool(lanes=2.0)
+reqs = [LaneRequest("p0", 1.0, lane=0), LaneRequest("p1", 1.0, lane=0),
+        LaneRequest("p2", 1.0, lane=1)]
+pool.run(reqs)
+for seg in pool.segments:
+    per_lane = {}
+    for fid, g in seg.alloc.items():
+        lane = reqs[fid].lane
+        per_lane[lane] = per_lane.get(lane, 0.0) + g
+    assert all(v <= 1.0 + EPS for v in per_lane.values()), seg
+print("arbiter: pinned flows never oversubscribe their lane OK")
+
+# ---------------------------------------------------------------------------
+# 3. sim/cost parity over the schedule_battery grid
+# ---------------------------------------------------------------------------
+
+# (mesh sizes, fast axes fastest-first, slow axis) — the schedule_battery
+# meshes, priced on their canonical fabrics
+GRID = [
+    ({"data": 8}, ("data",), None, fabric_from_mesh_sizes({"data": 8})),
+    ({"data": 4, "pod": 2}, ("data",), "pod",
+     as_fabric(TwoTierTopology(num_pods=2, pod_shape=(4,)))),
+    ({"data": 2, "host": 2, "pod": 2}, ("data", "host"), "pod",
+     three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)),
+]
+NAMES = {"data": "ici", "host": "cxl", "pod": "dcn"}
+
+checked = 0
+for (sizes, fast, slow, fab), chunks, pipe, strat in itertools.product(
+        GRID, (1, 2, 4), (False, True), ("hier_striped", "hier_root", "flat")):
+    cfg = SyncConfig(strat, chunks=chunks, pipeline=pipe)
+    sched = schedule_from_axes(fast, slow, cfg, (8192,), 0, sizes,
+                               tier_names=NAMES)
+    cm = CostModel(fab)
+    est = cm.from_schedule(sched)
+    res = simulate(fab, [Tenant("solo", sched)])
+    rel = abs(res.makespan - est.total_s) / max(est.total_s, 1e-30)
+    tol = 1e-9 if not sched.pipelined else 1e-2  # acceptance: within 1%
+    assert rel < tol, (sizes, strat, chunks, pipe, est.total_s, res.makespan)
+    checked += 1
+print(f"sim/cost parity: {checked} schedules within tolerance "
+      "(exact when sequential) OK")
+
+# θ-way contention matches the granted-lanes pricing
+fab3 = three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)
+cm = CostModel(fab3)
+sched = schedule_from_axes(("data", "host"), "pod",
+                           SyncConfig("hier_striped", pipeline=False),
+                           (1 << 18,), 0, {"data": 2, "host": 2, "pod": 2},
+                           tier_names=NAMES)
+for theta in (2, 4, 8):
+    pool = NicPool(lanes=fab3.slowest.lanes)
+    res = simulate(fab3, [Tenant(f"t{k}", sched) for k in range(theta)],
+                   pool=pool)
+    est = cm.from_schedule(sched, granted_lanes=pool.fair_share(theta))
+    rel = abs(res.makespan - est.total_s) / est.total_s
+    assert rel < 1e-9, (theta, res.makespan, est.total_s)
+    solo = cm.from_schedule(sched)
+    assert est.total_s > solo.total_s, (theta, est.total_s, solo.total_s)
+print("contention: sim == granted-lanes pricing for theta in 2/4/8 OK")
+
+# the exclusive burst: one opportunistic tenant gets the whole pool
+theta = 8
+pool = NicPool(lanes=theta * fab3.slowest.lanes)
+res = simulate(fab3, [Tenant("burst", sched, max_lanes=pool.lanes)],
+               pool=pool)
+solo = cm.from_schedule(sched).total_s
+slow_ev = res.slow_events("burst")
+slow_t = sum(e.finish - e.start for e in slow_ev)
+slow_priced = sum(lc.seconds for lc in cm.from_schedule(sched).leg_charges
+                  if type(lc.leg).__name__ == "SlowChunk")
+assert abs(slow_t - slow_priced / theta) / slow_priced < 1e-9, \
+    (slow_t, slow_priced)
+print(f"burst: slow leg {slow_priced/slow_t:.1f}x faster on the full pool OK")
+
+# ---------------------------------------------------------------------------
+# 4. staggered lane assignment beats synchronized by the analytic ratio
+# ---------------------------------------------------------------------------
+
+s2 = schedule_from_axes(("data", "host"), "pod",
+                        SyncConfig("hier_striped", chunks=2, pipeline=False),
+                        (1 << 18,), 0, {"data": 2, "host": 2, "pod": 2},
+                        tier_names=NAMES)
+assert len(s2.slow_legs) == 2
+offs = NicPool(lanes=2.0).stagger([s2, s2])
+assert offs == [0, 1], offs
+sync = simulate(fab3, [Tenant("a", s2, pin_lanes=True),
+                       Tenant("b", s2, pin_lanes=True)],
+                pool=NicPool(lanes=2.0))
+stag = simulate(fab3, [Tenant("a", s2, pin_lanes=True),
+                       Tenant("b", s2.with_lane_offset(offs[1]),
+                              pin_lanes=True)],
+                pool=NicPool(lanes=2.0))
+est = CostModel(fab3).from_schedule(s2)
+slow = sum(lc.seconds for lc in est.leg_charges
+           if type(lc.leg).__name__ == "SlowChunk")
+fast = est.total_s - slow
+ratio = sync.makespan / stag.makespan
+analytic = (fast + 2 * slow) / (fast + slow)
+assert stag.makespan < sync.makespan
+assert abs(ratio - analytic) / analytic < 1e-9, (ratio, analytic)
+# the staggered run is exactly one tenant's sequential time: perfect
+# interleave, zero lane collisions
+assert abs(stag.makespan - (fast + slow)) / (fast + slow) < 1e-9
+print(f"stagger: lane_offset beats synchronized {ratio:.3f}x "
+      f"(analytic {analytic:.3f}x) OK")
+
+print("ALL OK")

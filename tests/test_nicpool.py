@@ -1,0 +1,305 @@
+"""NIC-pool subsystem tests (PR 3 tentpole).
+
+Unit tests for the arbiter, the lane_offset schedule surface, the
+contention-aware cost model and the planner's stagger run directly (no
+devices); the full invariant/parity battery
+(``tests/batteries/nicpool_battery.py``) runs via subprocess, and the
+lowering of a rotated schedule is covered in ``schedule_battery``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import run_multi_device
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _fabric3():
+    from repro.core.topology import three_tier_fabric
+    return three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)
+
+
+# ---------------------------------------------------------------------------
+# arbiter units
+# ---------------------------------------------------------------------------
+
+
+def test_waterfill_conservation_and_caps():
+    from repro.core.nicpool import waterfill
+    out = waterfill([(1.0, 0.25), (1.0, 8.0)], 2.0)
+    assert out[0] == pytest.approx(0.25)
+    assert sum(out) == pytest.approx(2.0)
+    # capacity above total demand: grants == caps
+    out = waterfill([(1.0, 0.5), (1.0, 0.5)], 4.0)
+    assert out == [pytest.approx(0.5)] * 2
+
+
+def test_pool_exclusive_burst_is_theta_x():
+    from repro.core.nicpool import LaneRequest, NicPool
+    theta = 8
+    pool = NicPool(lanes=float(theta))
+    (g,) = pool.run([LaneRequest("burst", work=theta * 1.0,
+                                 max_lanes=float(theta))])
+    assert g.duration == pytest.approx(1.0)  # theta lane-seconds in 1s
+    assert g.mean_lanes == pytest.approx(theta)
+
+
+def test_pool_fair_share_and_priority():
+    from repro.core.nicpool import LaneRequest, NicPool
+    pool = NicPool(lanes=2.0)
+    grants = pool.run([
+        LaneRequest("hi", work=1.0, priority=3.0, max_lanes=2.0),
+        LaneRequest("lo", work=1.0, priority=1.0, max_lanes=2.0)])
+    by = {g.request.tenant: g for g in grants}
+    assert by["hi"].finish < by["lo"].finish
+    assert pool.peak_lanes() == pytest.approx(2.0)  # work conserving
+
+
+def test_pinned_flow_on_fractional_pool_capped():
+    """Regression: pinned-lane capacity used to be a hardcoded 1.0, so a
+    fractional pool (lanes < 1) could be oversubscribed."""
+    from repro.core.nicpool import LaneRequest, NicPool
+    pool = NicPool(lanes=0.5)
+    (g,) = pool.run([LaneRequest("p", work=1.0, lane=0, max_lanes=4.0)])
+    assert g.duration == pytest.approx(2.0)  # 1 lane-s at half a lane
+    assert all(s.total <= 0.5 + 1e-9 for s in pool.segments)
+
+
+def test_pool_rejects_bad_inputs():
+    from repro.core.nicpool import LaneRequest, NicPool
+    with pytest.raises(ValueError):
+        NicPool(lanes=0.0)
+    pool = NicPool(lanes=2.0)
+    with pytest.raises(ValueError):
+        pool.submit(LaneRequest("x", work=1.0, lane=5), 0.0)
+    with pytest.raises(ValueError):
+        pool.submit(LaneRequest("x", work=-1.0), 0.0)
+    with pytest.raises(ValueError):  # would starve forever (deadlock)
+        pool.submit(LaneRequest("x", work=1.0, priority=0.0), 0.0)
+
+
+def test_pool_from_fabric_and_topology_lanes():
+    from repro.core.nicpool import NicPool
+    from repro.core.topology import three_tier_fabric
+    fab = three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2,
+                            dcn_lanes=2.0)
+    assert fab.pool_lanes == pytest.approx(4 * 2.0)
+    pool = NicPool.from_fabric(fab, tenants=3)
+    assert pool.lanes == pytest.approx(6.0)
+    assert pool.fair_share(3) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# lane_offset on the schedule
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_lane_offset_rotation_and_roundtrip():
+    from repro.core.schedule import CommSchedule, SyncConfig, build_schedule
+    fab = _fabric3()
+    s = build_schedule(fab, SyncConfig("hier_striped", chunks=4), (8, 1024), 1)
+    s1 = s.with_lane_offset(1)
+    assert s1.lane_offset == 1
+    assert [l.index for l in s1.slow_legs] == [1, 2, 3, 0]
+    # same legs, rotated issue order; non-slow legs untouched
+    assert set(s1.slow_legs) == set(s.slow_legs)
+    assert s1.down_legs == s.down_legs and s1.up_legs == s.up_legs
+    # normalization + idempotence
+    assert s.with_lane_offset(4) == s
+    assert s1.with_lane_offset(5) == s1
+    assert "lane1" in s1.describe()
+    rt = CommSchedule.from_json(s1.to_json())
+    assert rt == s1
+    # pre-NIC-pool JSON (no lane_offset key) loads as offset 0
+    import json
+    d = s.to_dict()
+    d.pop("lane_offset")
+    assert CommSchedule.from_dict(json.loads(json.dumps(d))).lane_offset == 0
+
+
+def test_lane_offset_cost_invariant():
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    cm = CostModel(fab)
+    for chunks in (2, 4):
+        s = build_schedule(fab, SyncConfig("hier_striped", chunks=chunks,
+                                           pipeline=False),
+                           ((1 << 20),), 0)
+        base = cm.from_schedule(s).total_s
+        for off in range(1, chunks):
+            assert cm.from_schedule(s.with_lane_offset(off)).total_s \
+                == pytest.approx(base, rel=1e-12), off
+
+
+# ---------------------------------------------------------------------------
+# contention-aware pricing
+# ---------------------------------------------------------------------------
+
+
+def test_granted_lanes_pricing():
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    cm = CostModel(fab)
+    s = build_schedule(fab, SyncConfig("hier_striped", pipeline=False),
+                       ((1 << 20),), 0)
+    nominal = fab.slowest.lanes
+    base = cm.from_schedule(s)
+    same = cm.from_schedule(s, granted_lanes=nominal)
+    assert same.total_s == pytest.approx(base.total_s)
+    halved = cm.from_schedule(s, granted_lanes=nominal / 2)
+    slow = base.slow_s
+    assert halved.total_s == pytest.approx(base.total_s + slow)
+    # fast legs are never contended
+    assert halved.fast_s == pytest.approx(base.fast_s)
+    with pytest.raises(ValueError):
+        cm.from_schedule(s, granted_lanes=0.0)
+
+
+def test_granted_lanes_scales_flat_slow_psum():
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    fab = _fabric3()
+    cm = CostModel(fab)
+    s = build_schedule(fab, SyncConfig("flat"), ((1 << 20),), 0)
+    base = cm.from_schedule(s).total_s
+    crowded = cm.from_schedule(s, granted_lanes=fab.slowest.lanes / 4).total_s
+    assert crowded > base
+
+
+# ---------------------------------------------------------------------------
+# planner stagger
+# ---------------------------------------------------------------------------
+
+
+def test_planner_staggers_concurrent_sections():
+    from repro.core.planner import Planner
+    fab = _fabric3()
+    planner = Planner(fab, strategy="hier_striped", max_chunks=4)
+    shapes = {f"w{i}": jax.ShapeDtypeStruct((64, 65536), jnp.float32)
+              for i in range(3)}
+    plan = planner.plan(shapes, bucket_bytes=1)
+    multi = [s for s in plan.sections
+             if s.schedule is not None and len(s.schedule.slow_legs) > 1]
+    assert len(multi) >= 2, "expected chunked sections to stagger"
+    offs = [s.schedule.lane_offset for s in multi]
+    assert offs == [k % len(multi[k].schedule.slow_legs)
+                    for k in range(len(multi))]
+    assert any(o != 0 for o in offs[1:])
+    # the offset survives the plan JSON
+    import json
+    dumped = json.loads(plan.to_json())
+    by_name = {d["name"]: d for d in dumped}
+    for s in multi:
+        assert by_name[s.name]["schedule"]["lane_offset"] == s.schedule.lane_offset
+
+
+def test_planner_stagger_off():
+    from repro.core.planner import Planner
+    fab = _fabric3()
+    planner = Planner(fab, strategy="hier_striped", stagger_lanes=False)
+    plan = planner.plan({f"w{i}": jax.ShapeDtypeStruct((8, 4096), jnp.float32)
+                         for i in range(3)}, bucket_bytes=1)
+    assert all((s.schedule is None or s.schedule.lane_offset == 0)
+               for s in plan.sections)
+
+
+# ---------------------------------------------------------------------------
+# simulator units
+# ---------------------------------------------------------------------------
+
+
+def test_sim_single_tenant_matches_cost_model():
+    from repro.core.cost_model import CostModel
+    from repro.core.schedule import SyncConfig, build_schedule
+    from repro.sim.fabric_sim import Tenant, simulate
+    fab = _fabric3()
+    cm = CostModel(fab)
+    for chunks, pipe in ((1, False), (4, False), (4, True)):
+        s = build_schedule(fab, SyncConfig("hier_striped", chunks=chunks,
+                                           pipeline=pipe), ((1 << 18),), 0)
+        res = simulate(fab, [Tenant("solo", s)])
+        est = cm.from_schedule(s)
+        tol = 1e-2 if s.pipelined else 1e-9
+        assert res.makespan == pytest.approx(est.total_s, rel=tol)
+        # every leg appears in the timeline (pipelined: once per chunk)
+        seen = {id(e.leg) for e in res.events}
+        assert all(id(l) in seen for l in s.legs)
+
+
+def test_sim_compute_rounds_and_start_offsets():
+    from repro.core.schedule import SyncConfig, build_schedule
+    from repro.core.cost_model import CostModel
+    from repro.sim.fabric_sim import Tenant, simulate
+    fab = _fabric3()
+    s = build_schedule(fab, SyncConfig("hier_striped", pipeline=False),
+                       ((1 << 18),), 0)
+    t1 = CostModel(fab).from_schedule(s).total_s
+    res = simulate(fab, [Tenant("t", s, compute_s=2 * t1, rounds=3,
+                                start=1e-3)])
+    assert res.makespan == pytest.approx(1e-3 + 3 * (2 * t1 + t1))
+    assert sum(1 for e in res.events if e.leg == "compute") == 3
+
+
+def test_sim_axis_named_tiers_still_hit_the_pool():
+    """Regression: slow legs whose ``tier`` field defaults to the mesh
+    AXIS name (schedules built without ``tier_names``, e.g. the in-trace
+    constructor path) were simulated as private fast legs — contention
+    silently disappeared and pipelined schedules compiled to an empty
+    task list."""
+    from repro.core.cost_model import CostModel
+    from repro.core.nicpool import NicPool
+    from repro.core.schedule import SyncConfig, schedule_from_axes
+    from repro.sim.fabric_sim import Tenant, simulate
+    fab = _fabric3()
+    sizes = {"data": 2, "host": 2, "pod": 2}
+    cm = CostModel(fab)
+    # no tier_names: legs carry tier="pod", fabric's slowest is "dcn"
+    seq = schedule_from_axes(("data", "host"), "pod",
+                             SyncConfig("hier_striped", pipeline=False),
+                             ((1 << 18),), 0, sizes)
+    solo = simulate(fab, [Tenant("solo", seq)])
+    assert solo.slow_events(), "slow legs must reach the pool"
+    assert solo.makespan == pytest.approx(cm.from_schedule(seq).total_s)
+    crowd = simulate(fab, [Tenant(f"t{k}", seq) for k in range(4)],
+                     pool=NicPool(lanes=fab.slowest.lanes))
+    assert crowd.makespan > solo.makespan  # contention is modeled
+    # pipelined: the chunk pipeline must not vanish
+    pipe = schedule_from_axes(("data", "host"), "pod",
+                              SyncConfig("hier_striped", chunks=4,
+                                         pipeline=True),
+                              ((1 << 18),), 0, sizes)
+    assert pipe.pipelined
+    res = simulate(fab, [Tenant("p", pipe)])
+    assert res.makespan == pytest.approx(cm.from_schedule(pipe).total_s,
+                                         rel=1e-2)
+
+
+def test_sim_rejects_duplicate_tenants_and_reused_pools():
+    from repro.core.nicpool import NicPool
+    from repro.core.schedule import SyncConfig, build_schedule
+    from repro.sim.fabric_sim import Tenant, simulate
+    fab = _fabric3()
+    s = build_schedule(fab, SyncConfig("hier_striped"), ((1 << 10),), 0)
+    with pytest.raises(ValueError):
+        simulate(fab, [Tenant("x", s), Tenant("x", s)])
+    # a reused pool would merge allocation traces across runs
+    pool = NicPool(lanes=1.0)
+    simulate(fab, [Tenant("x", s)], pool=pool)
+    with pytest.raises(ValueError):
+        simulate(fab, [Tenant("y", s)], pool=pool)
+
+
+# ---------------------------------------------------------------------------
+# the full battery (subprocess, like the other batteries)
+# ---------------------------------------------------------------------------
+
+
+def test_nicpool_battery():
+    out = run_multi_device(os.path.join(HERE, "batteries",
+                                        "nicpool_battery.py"), n_devices=1)
+    assert "ALL OK" in out

@@ -1,0 +1,117 @@
+"""Memory-pool scaling (the paper's Fig. 12/14 shape), on the simulator.
+
+The paper's §4.1 argument in two sweeps:
+
+  * **NIC lanes under local-only memory** — adding NICs to the pool
+    stops paying once the hosts' local DRAM channels cannot absorb the
+    aggregate DMA (every wire byte is written into memory and read back
+    out, ``traffic_factor = 2``): throughput saturates at the memory
+    wall no matter how many lanes the pool grants (paper C1);
+  * **added memory devices** — holding the lane count at its largest,
+    growing the pool's device interleave (CXL expanders next to the
+    local channels) lifts the memory ceiling until the NIC pool is the
+    bottleneck again: throughput recovers to the lanes-bound ideal.
+
+Each point replays one CN's striped slow leg on ``repro.sim.fabric_sim``
+with the fabric's :class:`~repro.core.mempool.MemPoolSpec` co-simulated,
+and cross-checks the makespan against the memory-aware pricing mode
+(``CostModel.from_schedule(mem=True)`` — the sim/price parity contract).
+A final pair of rows shows the OTHER side of the wall: a peer CN's
+compute phase drawing its local channels while CN0's burst DMAs into
+them — local-only memory stretches both, added devices give the burst
+its own bandwidth back.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import MemPoolSpec
+from repro.core.schedule import SyncConfig, build_schedule
+from repro.core.topology import FabricSpec, HardwareSpec, Tier
+from repro.sim.fabric_sim import Tenant, simulate
+
+GRP = 2           # fast chips per rack group (the NIC/memory pool members)
+SLOW_BW = 6.25e9  # per-chip, per-lane slow-tier rate
+LOCAL_BW = 25e9   # total local DRAM bandwidth (exactly one lane's demand:
+                  # 2 * GRP * SLOW_BW — the memory wall sits at lanes=1)
+DEV_BW = 12.5e9   # one added CXL expander (matches a local channel)
+NBYTES = 64 * 2**20
+SMOKE_NBYTES = 1 * 2**20
+
+
+def mk_fabric(lanes: float, spec) -> FabricSpec:
+    hw = HardwareSpec(ici_bw=50e9, dcn_bw=SLOW_BW)
+    return FabricSpec(tiers=(
+        Tier("ici", "data", GRP, hw.ici_bw, hw.ici_latency),
+        Tier("dcn", "pod", 2, hw.dcn_bw, hw.dcn_latency, lanes=lanes),
+    ), hw=hw, mem=spec)
+
+
+def mk_spec(devices: int) -> MemPoolSpec:
+    return MemPoolSpec.build(local_bw=LOCAL_BW, local_channels=2,
+                             device_bw=DEV_BW, devices=devices,
+                             device_latency=2e-6)
+
+
+def _throughput(nbytes: int, fab: FabricSpec):
+    """(throughput B/s, sim-vs-priced err) of one CN's striped slow leg."""
+    s = build_schedule(fab, SyncConfig("hier_striped", chunks=1,
+                                       pipeline=False),
+                       (nbytes // 4,), 0)
+    res = simulate(fab, [Tenant("cn", s)])
+    est = CostModel(fab).from_schedule(s, mem=True)
+    err = abs(res.makespan - est.total_s) / est.total_s
+    return nbytes / res.makespan, err, res.makespan
+
+
+def run(smoke: bool = False):
+    nbytes = SMOKE_NBYTES if smoke else NBYTES
+    rows = []
+
+    # ---- sweep 1: NIC lanes, ideal memory vs local-only -------------------
+    thr = {}
+    for lanes in (1, 2, 4):
+        for name, spec in (("ideal", None), ("local_only", mk_spec(0))):
+            t, err, mk = _throughput(nbytes, mk_fabric(lanes, spec))
+            thr[(lanes, name)] = t
+            rows.append((f"mempool/lanes{lanes}_{name}", mk * 1e6,
+                         f"thr={t/1e9:.2f}GBps_priced_err={err*100:.2f}%"))
+    sat = thr[(4, "local_only")] / thr[(1, "local_only")]
+    rows.append(("mempool/local_only_scaling_4x_lanes", 0.0,
+                 f"{sat:.2f}x_(memory_wall;ideal="
+                 f"{thr[(4, 'ideal')]/thr[(1, 'ideal')]:.2f}x)"))
+
+    # ---- sweep 2: added memory devices at the largest lane count ----------
+    for m in (0, 1, 2, 4, 6):
+        t, err, mk = _throughput(nbytes, mk_fabric(4, mk_spec(m)))
+        thr[("dev", m)] = t
+        rows.append((f"mempool/lanes4_devices{m}", mk * 1e6,
+                     f"thr={t/1e9:.2f}GBps_priced_err={err*100:.2f}%"))
+    rec = thr[("dev", 6)] / thr[("dev", 0)]
+    rows.append(("mempool/recovery_6_devices", 0.0,
+                 f"{rec:.2f}x_vs_local_only_"
+                 f"({thr[('dev', 6)]/thr[(4, 'ideal')]*100:.0f}%_of_ideal)"))
+
+    # ---- compute vs DMA on the same channels (the C1 wall, lived) ---------
+    fab_local = mk_fabric(4, mk_spec(0))
+    s = build_schedule(fab_local, SyncConfig("hier_striped", chunks=1,
+                                             pipeline=False),
+                       (nbytes // 4,), 0)
+    t_burst = CostModel(fab_local).from_schedule(s, mem=True).total_s
+    peer_kw = dict(compute_s=2 * t_burst, compute_mem_bw=LOCAL_BW / 2)
+    crowded = simulate(fab_local, [Tenant("cn0", s),
+                                   Tenant("peer", None, **peer_kw)])
+    roomy = simulate(mk_fabric(4, mk_spec(4)),
+                     [Tenant("cn0", s), Tenant("peer", None, **peer_kw)])
+    rows.append(("mempool/burst_vs_compute_local_only",
+                 crowded.finish["cn0"] * 1e6,
+                 f"peer_done={crowded.finish['peer']*1e6:.1f}us"))
+    rows.append(("mempool/burst_vs_compute_4_devices",
+                 roomy.finish["cn0"] * 1e6,
+                 f"{crowded.finish['cn0']/roomy.finish['cn0']:.2f}x_faster_"
+                 f"peer_done={roomy.finish['peer']*1e6:.1f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

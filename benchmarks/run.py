@@ -6,9 +6,9 @@ parseable, and the exit code is nonzero when any module failed.  Run:
     PYTHONPATH=src python -m benchmarks.run
 
 ``--smoke`` runs the fast analytic/simulated figure subset (fig_ntier,
-fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention) at
-tiny payload sizes — the CI sanity job (the workflow uploads the CSV as
-an artifact and fails on ERROR rows).
+fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention,
+fig_mempool_scaling) at tiny payload sizes — the CI sanity job (the
+workflow uploads the CSV as an artifact and fails on ERROR rows).
 """
 from __future__ import annotations
 
@@ -25,17 +25,17 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                            fig12_nic_scaling, fig13_timesharing, fig_ntier,
-                            fig_overlap, fig_pool_contention, roofline,
-                            table4_breakdown)
+                            fig12_nic_scaling, fig13_timesharing,
+                            fig_mempool_scaling, fig_ntier, fig_overlap,
+                            fig_pool_contention, roofline, table4_breakdown)
     if args.smoke:
         modules = [fig_ntier, fig_overlap, fig13_timesharing,
-                   fig_pool_contention]
+                   fig_pool_contention, fig_mempool_scaling]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                   fig12_nic_scaling, fig13_timesharing, fig_ntier,
-                   fig_overlap, fig_pool_contention, table4_breakdown,
-                   roofline]
+                   fig12_nic_scaling, fig13_timesharing, fig_mempool_scaling,
+                   fig_ntier, fig_overlap, fig_pool_contention,
+                   table4_breakdown, roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

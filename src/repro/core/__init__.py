@@ -1,10 +1,13 @@
 """DFabric core: N-tier fabric topology, CommSchedule IR, cost model,
-collectives (the schedule executor), planner, NIC-pool arbiter."""
+collectives (the schedule executor), planner, NIC-pool and memory-pool
+arbiters."""
 from repro.core.topology import (
     FabricSpec, HardwareSpec, Tier, TwoTierTopology, as_fabric,
     fabric_from_mesh_sizes, production_topology, three_tier_fabric,
     topology_from_mesh_sizes)
 from repro.core.nicpool import LaneGrant, LaneRequest, NicPool, waterfill
+from repro.core.mempool import (
+    MemDevice, MemGrant, MemPool, MemPoolSpec, MemRequest, mem_waterfill)
 from repro.core.schedule import (
     AllGather, CommSchedule, Psum, ReduceScatter, SlowChunk, SyncConfig,
     build_schedule, schedule_from_axes)
@@ -22,6 +25,8 @@ __all__ = [
     "fabric_from_mesh_sizes", "production_topology", "three_tier_fabric",
     "topology_from_mesh_sizes",
     "LaneGrant", "LaneRequest", "NicPool", "waterfill",
+    "MemDevice", "MemGrant", "MemPool", "MemPoolSpec", "MemRequest",
+    "mem_waterfill",
     "AllGather", "CommSchedule", "Psum", "ReduceScatter", "SlowChunk",
     "SyncConfig", "build_schedule", "schedule_from_axes",
     "CostModel", "CollectiveEstimate", "LegCharge", "NTierEstimate",

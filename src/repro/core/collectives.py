@@ -86,15 +86,21 @@ def _split_chunks(x: jax.Array, chunks: int) -> Sequence[jax.Array]:
 
 def _trace_schedule(fast: Tuple[str, ...], slow_axis: Optional[str],
                     cfg: SyncConfig, shape: Tuple[int, ...],
-                    scatter_dim: int, lane_offset: int = 0) -> CommSchedule:
+                    scatter_dim: int, lane_offset: int = 0,
+                    staging: Optional[str] = None) -> CommSchedule:
     """Build a schedule in-trace from live axis sizes (the legacy entry
     points' constructor path).  ``lane_offset`` preserves the planner's
-    NIC-pool stagger when the planned schedule had to be rebuilt."""
+    NIC-pool stagger and ``staging`` its memory-pool placement when the
+    planned schedule had to be rebuilt."""
     sizes = {a: axis_size(a) for a in fast}
     if slow_axis is not None:
         sizes[slow_axis] = axis_size(slow_axis)
     s = schedule_from_axes(fast, slow_axis, cfg, shape, scatter_dim, sizes)
-    return s.with_lane_offset(lane_offset) if lane_offset else s
+    if lane_offset:
+        s = s.with_lane_offset(lane_offset)
+    if staging is not None:
+        s = s.with_staging(staging)
+    return s
 
 
 def _schedule_usable(schedule: Optional[CommSchedule], x: jax.Array,
@@ -382,6 +388,7 @@ def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
                        schedule: Optional[CommSchedule] = None,
                        leg_log: Optional[List] = None,
                        lane_offset: int = 0,
+                       staging: Optional[str] = None,
                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """All-reduce ``x`` over (fast tiers x slow tier) with the DFabric plan.
 
@@ -391,11 +398,14 @@ def dfabric_all_reduce(x: jax.Array, fast_axis: Optional[Axes],
     sizes — indivisible tensors fall back to a flat psum).  When the
     planner already built a :class:`CommSchedule` for this Section, pass
     it via ``schedule``; otherwise one is built in-trace from ``cfg``
-    (``lane_offset`` keeps the planner's NIC-pool stagger on that path)."""
+    (``lane_offset`` keeps the planner's NIC-pool stagger and ``staging``
+    its memory-pool placement on that path — staging is an annotation
+    here: the lowering is placement-free on this backend, but the rebuilt
+    schedule must round-trip what the planner chose)."""
     fast = normalize_axes(fast_axis)
     if not _schedule_usable(schedule, x, fast, slow_axis):
         schedule = _trace_schedule(fast, slow_axis, cfg, x.shape, scatter_dim,
-                                   lane_offset)
+                                   lane_offset, staging)
     return lower_all_reduce(schedule, x, ef=ef, ranks=ranks, leg_log=leg_log)
 
 
@@ -406,7 +416,8 @@ def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
                            ranks: prims.Ranks = None,
                            schedule: Optional[CommSchedule] = None,
                            leg_log: Optional[List] = None,
-                           lane_offset: int = 0):
+                           lane_offset: int = 0,
+                           staging: Optional[str] = None):
     """Like :func:`dfabric_all_reduce` but stops before the final fast-tier
     all-gathers — the caller owns the 1/prod(fast sizes) shard, indexed
     fastest-tier-major (ZeRO-1 entry point)."""
@@ -418,7 +429,7 @@ def dfabric_reduce_scatter(x: jax.Array, fast_axis: Axes,
             or any(isinstance(l, Psum) for l in schedule.down_legs):
         full = _dc_replace(cfg, scatter_depth=-1)
         schedule = _trace_schedule(fast, slow_axis, full, x.shape,
-                                   scatter_dim, lane_offset)
+                                   scatter_dim, lane_offset, staging)
     return lower_reduce_scatter(schedule, x, ef=ef, ranks=ranks,
                                 leg_log=leg_log)
 

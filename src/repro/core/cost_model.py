@@ -194,11 +194,43 @@ class CostModel:
             rate = rate / 2.1
         return rate
 
+    # ---- memory-pool pricing helpers ----------------------------------------
+    def _mem_model(self, mem):
+        """Normalize a ``mem`` argument (MemPoolSpec | MemPool | True for
+        the fabric's own spec | None) to a MemPoolSpec or None."""
+        if mem is None or mem is False:
+            return None
+        if mem is True:
+            return self.fabric.mem
+        spec = getattr(mem, "spec", mem)
+        return spec
+
+    def _mem_leg_seconds(self, wire_bytes: float, tier: Tier,
+                         granted_lanes: float, spec, staging: Optional[str],
+                         granted_mem_bw: Optional[float]) -> float:
+        """Seconds the MEMORY side of one slow-tier leg needs: the leg's
+        wire bytes hit the pool ``traffic_factor`` times (NIC-DMA write in
+        + consumer read out), aggregated over the slow-tier group, drawn
+        at min(pool grant, the flow's own max draw at its granted lanes),
+        plus the staging placement's access-latency tail.  This is exactly
+        the memory flow ``repro.sim.fabric_sim`` submits, so a slow leg
+        priced ``max(wire, memory)`` matches the co-simulated completion
+        (both flows drain in parallel; the task finishes when both do)."""
+        grp = max(self.fabric.n_fast, 1)
+        pool_bw = granted_mem_bw if granted_mem_bw is not None \
+            else spec.deliverable_bw(staging)
+        cap = spec.traffic_factor * grp * tier.bw * max(granted_lanes, 1e-30)
+        eff = max(min(pool_bw, cap), 1e-30)
+        return (spec.traffic_factor * grp * wire_bytes / eff
+                + spec.staging_latency(staging))
+
     # ---- schedule pricing ---------------------------------------------------
     def from_schedule(self, schedule: "sched.CommSchedule", *,
                       mem_bw_limit: Optional[float] = None,
                       cached: bool = True,
-                      granted_lanes: Optional[float] = None) -> ScheduleEstimate:
+                      granted_lanes: Optional[float] = None,
+                      mem=None, staging: Optional[str] = None,
+                      granted_mem_bw: Optional[float] = None) -> ScheduleEstimate:
         """Price EXACTLY the legs the executor will lower — walk the same
         :class:`~repro.core.schedule.CommSchedule` leg list, charging each
         leg its alpha-beta time on its tier (this retires the drift
@@ -218,6 +250,20 @@ class CostModel:
         unchanged, and a single uncontended tenant's simulated makespan
         equals ``total_s``).
 
+        ``mem`` is the memory-aware mode (the paper's §4.1 pillar): a
+        :class:`~repro.core.mempool.MemPoolSpec` (or ``MemPool``, or
+        ``True`` for the fabric's own ``mem``).  Every slow-tier leg is
+        then charged ``max(wire seconds, memory seconds)`` — its wire
+        bytes hit the pool ``traffic_factor`` times (NIC-DMA in, consume
+        out) and drain at the staging placement's deliverable bandwidth
+        (see :meth:`_mem_leg_seconds`), so the leg's effective rate is
+        ``min(granted lanes, granted memory bandwidth)``.  ``staging``
+        overrides the schedule's planned placement ("local" | "pool");
+        ``granted_mem_bw`` is the contention-aware override of the pool
+        grant (e.g. ``deliverable / θ``), symmetric to ``granted_lanes``.
+        With ``mem=None`` (the default) the estimate is bitwise what it
+        was before the memory model existed.
+
         Note: a flat-strategy schedule is priced as per-tier sequential
         rings (an optimistic flat); the planner keeps using ``flat_ring``
         (the bottleneck-link model) when COMPARING flat against
@@ -226,6 +272,11 @@ class CostModel:
         cfg = schedule.cfg
         if granted_lanes is not None and granted_lanes <= 0:
             raise ValueError(f"granted_lanes must be positive: {granted_lanes}")
+        if granted_mem_bw is not None and granted_mem_bw <= 0:
+            raise ValueError(
+                f"granted_mem_bw must be positive: {granted_mem_bw}")
+        mem_spec = self._mem_model(mem)
+        mem_staging = staging if staging is not None else schedule.staging
         payload = float(schedule.numel * dtype_itemsize(schedule.dtype))
 
         def tier_for(leg) -> Tier:
@@ -257,11 +308,17 @@ class CostModel:
                     by = 2.0 * (n - 1) / n * payload / ratio
                     secs = by / t.rate + 2.0 * (n - 1) * t.latency
                     # a flat plan's slow-tier psum crosses the NIC pool
-                    # too: the contention-aware mode scales it the same
-                    # way as SlowChunk legs
-                    if granted_lanes is not None and fab.depth > 1 \
-                            and t.name == fab.slowest.name:
-                        secs *= max(t.lanes, 1e-30) / granted_lanes
+                    # (and the memory pool behind it) too: both
+                    # contention-aware modes treat it like SlowChunk legs
+                    if fab.depth > 1 and t.name == fab.slowest.name:
+                        if granted_lanes is not None:
+                            secs *= max(t.lanes, 1e-30) / granted_lanes
+                        if mem_spec is not None:
+                            secs = max(secs, self._mem_leg_seconds(
+                                by, t,
+                                granted_lanes if granted_lanes is not None
+                                else t.lanes,
+                                mem_spec, mem_staging, granted_mem_bw))
                 fast_s += secs
             elif isinstance(leg, sched.SlowChunk):
                 rate = t.rate
@@ -283,6 +340,12 @@ class CostModel:
                     secs = by / rate + lat
                     if granted_lanes is not None:
                         secs *= max(t.lanes, 1e-30) / granted_lanes
+                    if mem_spec is not None:
+                        secs = max(secs, self._mem_leg_seconds(
+                            by, t,
+                            granted_lanes if granted_lanes is not None
+                            else t.lanes,
+                            mem_spec, mem_staging, granted_mem_bw))
                 first_slow = False
                 slow_s += secs
             else:  # AllGather — mirrors its ReduceScatter's payload level

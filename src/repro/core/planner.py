@@ -106,6 +106,7 @@ class SyncPlan:
              "scatter_dim": <int>, "chunks": <int>,
              "pipelined": <bool>, "strategy": "<strategy>",
              "lane_offset": <int>,
+             "staging": "local" | "pool" | null,
              "cfg": {<SyncConfig fields>}}
 
         Legs appear in lowering order: reduce-scatters down the fast
@@ -117,7 +118,11 @@ class SyncPlan:
         (sub-flow *i* maps to lane ``i mod lanes``); the executor
         reassembles the payload by ``index``, so the field only affects
         wire order.  Absent in pre-NIC-pool plans (defaults to 0 on
-        load).  ``CommSchedule.from_json`` round-trips this exactly."""
+        load).  ``staging`` is the planner's memory-pool placement for
+        the slow leg's staging buffers ("local" DRAM channels vs the
+        "pool" device interleave — see ``repro.core.mempool``); numerics-
+        free like ``lane_offset``, absent/null in pre-mempool plans.
+        ``CommSchedule.from_json`` round-trips this exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
@@ -141,7 +146,17 @@ class Planner:
     that int8-compress UNSCATTERED mid-tier psum legs (deep hierarchies);
     ``stagger_lanes`` asks the NIC-pool arbiter for per-Section sub-flow
     phase offsets (``CommSchedule.lane_offset``) so concurrent Sections'
-    slow legs interleave across pool lanes instead of colliding."""
+    slow legs interleave across pool lanes instead of colliding.
+
+    When the fabric carries a memory model (``FabricSpec.mem``), every
+    candidate is additionally priced per staging placement — slow-leg
+    staging buffers in local DRAM (low latency) vs interleaved across
+    the pooled devices (high bandwidth, the expander's added latency) —
+    and the winner's placement is stored on the schedule
+    (``CommSchedule.staging``); slow-leg chunk counts are clamped when
+    MEMORY, not lanes, is the binding constraint (extra sub-flows only
+    add per-chunk access-latency tails a memory-bound pipeline cannot
+    hide)."""
 
     def __init__(self, topo: Union[TwoTierTopology, FabricSpec], *,
                  fast_axis_size: Optional[int] = None,
@@ -202,13 +217,42 @@ class Planner:
                 return best_dim, depth
         return -1, 0
 
-    def _candidate_chunks(self, shard_numel: int) -> List[int]:
+    def _mem_chunk_cap(self, shard_numel: int) -> int:
+        """Largest slow-leg chunk count worth pricing under the memory
+        model.  When memory (not lanes) is the binding slow-leg
+        constraint, extra sub-flows cannot speed the leg up — they only
+        add one staging-latency tail each — so candidates are clamped to
+        keep the summed tails under ~10% of the memory-bound slow time.
+        With no memory model (or when lanes bind) the NIC-pool search
+        rules are unchanged."""
+        spec = self.fabric.mem
+        fab = self.fabric
+        if spec is None or fab.depth <= 1 or fab.slowest.size <= 1:
+            return self.max_chunks
+        slow = fab.slowest
+        grp = max(fab.n_fast, 1)
+        # per-chip wire rate the memory pool can sustain, best placement
+        mem_rate = spec.deliverable_bw("pool") / (spec.traffic_factor * grp)
+        if mem_rate >= slow.rate:
+            return self.max_chunks  # lanes bind, not memory
+        tail = spec.staging_latency("pool")
+        if tail <= 0:
+            return self.max_chunks
+        wire = 2.0 * (slow.size - 1) / slow.size * shard_numel \
+            * dtype_itemsize("float32")  # the wire dtype (see _search_section)
+        return max(1, min(self.max_chunks,
+                          int(0.1 * (wire / mem_rate) / tail)))
+
+    def _candidate_chunks(self, shard_numel: int,
+                          cap: Optional[int] = None) -> List[int]:
         """Slow-leg sub-flow counts worth pricing: 1 plus powers of two up
-        to ``max_chunks`` that divide the shard and keep each sub-flow
-        above ``min_chunk_numel``."""
+        to ``max_chunks`` (clamped to ``cap`` — the memory-bound limit)
+        that divide the shard and keep each sub-flow above
+        ``min_chunk_numel``."""
         cands = [1]
         c = 2
-        while c <= self.max_chunks:
+        top = self.max_chunks if cap is None else min(self.max_chunks, cap)
+        while c <= top:
             if shard_numel % c == 0 and shard_numel // c >= self.min_chunk_numel:
                 cands.append(c)
             c *= 2
@@ -233,6 +277,9 @@ class Planner:
 
         Candidate order encodes tie-breaks: within the striped family
         deeper scatters come first (never slower in the alpha-beta model),
+        within a depth the "pool" staging precedes "local" (more
+        deliverable bandwidth — local only wins when strictly cheaper,
+        i.e. when the expander tail costs more than its bandwidth buys),
         and a flat plan only wins when strictly cheaper than every
         hierarchical one (matching the legacy selection)."""
         dtype = "float32"  # the wire dtype
@@ -240,6 +287,18 @@ class Planner:
         nbytes = numel * dtype_itemsize(dtype)
         sd, dmax = self._pick_scatter_dim(lshape, avoid)
         strat = self.strategy
+        mem = self.fabric.mem
+        if mem is None:
+            stagings: List[Optional[str]] = [None]
+        elif mem.placement("pool") == mem.placement("local"):
+            # degenerate pool (e.g. local channels only): both stagings
+            # resolve to the same device set — price once, label honestly
+            stagings = ["pool" if mem.pooled_devices else "local"]
+        else:
+            stagings = ["pool", "local"]
+
+        def price(s: CommSchedule) -> float:
+            return self.cost.from_schedule(s, mem=True).total_s
 
         flat_cfg = SyncConfig(strategy="flat", chunks=1, codec=self.codec,
                               pipeline=self.pipeline)
@@ -255,21 +314,25 @@ class Planner:
                 mids: List[Optional[str]] = [None]
                 if self.mid_codec and d < self.n_fast_tiers:
                     mids.append(self.mid_codec)
-                for c in self._candidate_chunks(shard_numel):
+                cap = self._mem_chunk_cap(shard_numel)
+                for c in self._candidate_chunks(shard_numel, cap):
                     for mid in mids:
                         cfg = SyncConfig(strategy="hier_striped", chunks=c,
                                          codec=self.codec,
                                          scatter_depth=depth_val,
                                          pipeline=self.pipeline,
                                          mid_codec=mid)
-                        s = self._build(cfg, lshape, sd, dtype)
-                        cands.append((self.cost.from_schedule(s).total_s,
-                                      cfg, s))
+                        s0 = self._build(cfg, lshape, sd, dtype)
+                        for stg in stagings:
+                            s = s0.with_staging(stg)
+                            cands.append((price(s), cfg, s))
         if strat in ("auto", "hier_root"):
             cfg = SyncConfig(strategy="hier_root", chunks=1, codec=self.codec,
                              pipeline=self.pipeline)
-            s = self._build(cfg, lshape, sd, dtype)
-            cands.append((self.cost.from_schedule(s).total_s, cfg, s))
+            s0 = self._build(cfg, lshape, sd, dtype)
+            for stg in stagings:
+                s = s0.with_staging(stg)
+                cands.append((price(s), cfg, s))
         if strat == "auto":
             # flat priced by the bottleneck-link model (a flat ring's
             # cross-pod hop is NOT pooled), not by per-tier rings
@@ -294,7 +357,7 @@ class Planner:
                 or sec.schedule.strategy == "flat":
             est = self.cost.flat_ring(sec.nbytes)
             return est.total_s, est.dcn_bytes_per_chip
-        est = self.cost.from_schedule(sec.schedule)
+        est = self.cost.from_schedule(sec.schedule, mem=True)
         # on a 1-tier fabric the single tier doubles as "slowest" in the
         # estimate accessors, but there is no DCN leg to report
         slow_by = est.slow_bytes_per_chip if self.fabric.depth > 1 else 0.0
@@ -354,8 +417,10 @@ class Planner:
                 else cfg.scatter_depth
             chunks = self._adjust_chunks((padded,), 0, cfg.chunks, depth)
             if chunks != cfg.chunks:
+                stg = sched.staging if sched is not None else None
                 cfg = replace(cfg, chunks=chunks)
-                sched = self._build(cfg, (padded,), 0, "float32")
+                sched = self._build(cfg, (padded,), 0,
+                                    "float32").with_staging(stg)
             sections.append(Section(
                 name=f"bucket[{bucket[0][0].replace('/', '.')}...x{len(bucket)}]",
                 leaf_paths=tuple(p for p, _ in bucket), numel=numel,

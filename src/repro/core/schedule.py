@@ -169,6 +169,16 @@ class CommSchedule:
     executor lowers legs in listed (issue) order but splits/reassembles
     the payload by ``SlowChunk.index``, so the rotation is numerically
     free.
+
+    ``staging`` is the planner's memory-pool placement for the slow leg's
+    staging buffers: ``"local"`` (host DRAM channels only — lower access
+    latency) or ``"pool"`` (interleaved across the fabric's memory
+    devices — higher bandwidth, the expander's added latency).  ``None``
+    means unplanned (priced as "pool" when a memory model is present).
+    Like ``lane_offset`` it is numerics-free: the simulator and the cost
+    model place the flow's memory traffic by it, the executor treats it
+    as an annotation (JAX memory-kind offload is gated in
+    ``repro.core.memory_pool``).
     """
 
     legs: Tuple[Leg, ...]
@@ -180,6 +190,15 @@ class CommSchedule:
     strategy: str = "hier_striped"
     cfg: SyncConfig = field(default_factory=SyncConfig)
     lane_offset: int = 0
+    staging: Optional[str] = None
+
+    def __post_init__(self):
+        # validated HERE (not only in with_staging) so a hand-edited /
+        # corrupted plan JSON fails at load, not at a distant pricing or
+        # simulation call site
+        if self.staging not in (None, "local", "pool"):
+            raise ValueError(
+                f"staging must be local|pool|None: {self.staging!r}")
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -244,6 +263,14 @@ class CommSchedule:
                 + self.legs[first + C:])
         return replace(self, legs=legs, lane_offset=off)
 
+    def with_staging(self, staging: Optional[str]) -> "CommSchedule":
+        """The planner's memory-pool placement (see class docstring) —
+        cost- and numerics-free relabeling, like ``with_lane_offset``.
+        Values are validated by ``__post_init__``."""
+        if staging == self.staging:
+            return self
+        return replace(self, staging=staging)
+
     def describe(self) -> str:
         parts = []
         for l in self.legs:
@@ -260,6 +287,8 @@ class CommSchedule:
         mode = "pipelined" if self.pipelined else "sequential"
         if self.lane_offset:
             mode += f"+lane{self.lane_offset}"
+        if self.staging:
+            mode += f"@{self.staging}"
         return f"{self.strategy}/{mode}: " + " -> ".join(parts)
 
     # ---- (de)serialization -------------------------------------------------
@@ -285,6 +314,7 @@ class CommSchedule:
             "scatter_dim": self.scatter_dim, "chunks": self.chunks,
             "pipelined": self.pipelined, "strategy": self.strategy,
             "lane_offset": self.lane_offset,
+            "staging": self.staging,
             "cfg": {"strategy": c.strategy, "chunks": c.chunks,
                     "codec": c.codec, "codec_block": c.codec_block,
                     "codec_k_frac": c.codec_k_frac,
@@ -315,7 +345,8 @@ class CommSchedule:
                    dtype=d["dtype"], scatter_dim=d["scatter_dim"],
                    chunks=d["chunks"], pipelined=d["pipelined"],
                    strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]),
-                   lane_offset=int(d.get("lane_offset", 0)))
+                   lane_offset=int(d.get("lane_offset", 0)),
+                   staging=d.get("staging"))
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.core.mempool import MemPoolSpec
+
 
 @dataclass(frozen=True)
 class HardwareSpec:
@@ -77,10 +79,19 @@ class FabricSpec:
     The hierarchical collective contract: reduce-scatter down
     ``fast_tiers`` in order, run the (optionally compressed / chunked)
     striped all-reduce on ``slowest``, all-gather back up in reverse.
+
+    ``mem`` is the optional memory-pool description
+    (:class:`~repro.core.mempool.MemPoolSpec`): when present, the
+    simulator charges slow-tier flows for memory bandwidth, the cost
+    model's ``from_schedule(mem=...)`` mode prices it, and the planner
+    chooses a per-Section staging placement.  ``None`` means memory is
+    unmodeled (infinite bandwidth) — every pre-mempool result is
+    unchanged.
     """
 
     tiers: Tuple[Tier, ...]
     hw: HardwareSpec = field(default_factory=HardwareSpec)
+    mem: Optional[MemPoolSpec] = None
 
     def __post_init__(self):
         if not self.tiers:
@@ -188,6 +199,11 @@ class FabricSpec:
         """Fabric with the slowest tier's per-chip bandwidth overridden."""
         tiers = self.tiers[:-1] + (replace(self.slowest, bw=bw),)
         return replace(self, tiers=tiers)
+
+    def with_mem(self, mem: Optional[MemPoolSpec]) -> "FabricSpec":
+        """Fabric with the memory-pool description attached (None
+        detaches it — back to the infinite-memory model)."""
+        return replace(self, mem=mem)
 
     def describe(self) -> str:
         parts = [f"{t.name}[{t.axis}]x{t.size}@{t.bw/1e9:.1f}GB/s"
@@ -315,7 +331,8 @@ def production_topology(multi_pod: bool = True) -> TwoTierTopology:
 def three_tier_fabric(num_pods: int = 2, hosts_per_pod: int = 4,
                       chips_per_host: int = 64,
                       hw: Optional[HardwareSpec] = None,
-                      dcn_lanes: float = 1.0) -> FabricSpec:
+                      dcn_lanes: float = 1.0,
+                      mem: Optional[MemPoolSpec] = None) -> FabricSpec:
     """The ROADMAP's target hierarchy: intra-host ICI ("data") -> rack-level
     CXL fabric ("host") -> inter-rack Ethernet ("pod")."""
     hw = hw or HardwareSpec()
@@ -324,7 +341,7 @@ def three_tier_fabric(num_pods: int = 2, hosts_per_pod: int = 4,
         Tier("cxl", "host", hosts_per_pod, hw.cxl_bw, hw.cxl_latency),
         Tier("dcn", "pod", num_pods, hw.dcn_bw, hw.dcn_latency,
              lanes=dcn_lanes),
-    ), hw=hw)
+    ), hw=hw, mem=mem)
 
 
 # the paper's FPGA prototype, for figure reproduction: 2 racks x 2 CNs,

@@ -326,13 +326,16 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
                       and (bucket or (sec.scatter_dim >= 0 and full_depth(sec, ss))))
         model_axes = ((ss.model_axis,) if (ss.model_axis and sec.model_sharded)
                       else ())
-        # the planner's NIC-pool stagger survives in-trace schedule
-        # rebuilds (the non-nested TP path sees model-global shapes)
+        # the planner's NIC-pool stagger and memory-pool staging survive
+        # in-trace schedule rebuilds (the non-nested TP path sees
+        # model-global shapes)
         lane_off = sec.schedule.lane_offset if sec.schedule is not None else 0
+        staging = sec.schedule.staging if sec.schedule is not None else None
         if zero1_path:
             shard, new_ef = dfabric_reduce_scatter(
                 g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
-                ranks=ranks, schedule=sec.schedule, lane_offset=lane_off)
+                ranks=ranks, schedule=sec.schedule, lane_offset=lane_off,
+                staging=staging)
             shard = shard * inv_dp
             synced[sec.name] = ("shard", shard, k)
             sqnorm = sqnorm + lax.psum(jnp.sum(jnp.square(shard)),
@@ -340,7 +343,8 @@ def sync_and_update(params, grads, sync_state, plan: SyncPlan,
         else:
             full, new_ef = dfabric_all_reduce(
                 g, ss.fast, ss.slow_axis, sec.sync, scatter_dim=k, ef=ef,
-                ranks=ranks, schedule=sec.schedule, lane_offset=lane_off)
+                ranks=ranks, schedule=sec.schedule, lane_offset=lane_off,
+                staging=staging)
             full = full * inv_dp
             synced[sec.name] = ("full", full, k)
             sq = jnp.sum(jnp.square(full))

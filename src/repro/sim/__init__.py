@@ -1,5 +1,6 @@
 """Discrete-event fabric simulation: replay CommSchedules against the
-NIC-pool arbiter (``repro.sim.fabric_sim``)."""
+NIC-pool arbiter and the co-simulated memory pool
+(``repro.sim.fabric_sim``)."""
 from repro.sim.fabric_sim import LegEvent, SimResult, Tenant, simulate
 
 __all__ = ["LegEvent", "SimResult", "Tenant", "simulate"]

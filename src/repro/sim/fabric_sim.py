@@ -5,7 +5,9 @@ take, alone".  The paper's Fig. 13 claim is about *concurrency*: θ CNs
 time-share the NIC pool, a burst grabbing the whole pool while peers
 compute.  This simulator replays one or more :class:`CommSchedule` leg
 lists from concurrent tenants against a :class:`~repro.core.nicpool.NicPool`
-and emits per-leg start/finish timelines and a makespan.
+— and, when the fabric carries a memory model, against a co-simulated
+:class:`~repro.core.mempool.MemPool` — and emits per-leg start/finish
+timelines and a makespan.
 
 Model (one tenant)
 ------------------
@@ -32,8 +34,28 @@ flows** to the shared NIC pool:
     so a single tenant on an uncontended pool matches
     ``ScheduleEstimate.total`` (the sim/cost parity contract).
 
+Memory co-simulation (the paper's §4.1 pillar)
+----------------------------------------------
+When a memory pool is modeled (``fabric.mem`` or an explicit ``mem=``),
+every slow-tier flow ALSO submits a memory flow: its wire bytes hit the
+pool ``traffic_factor`` times (the NIC-DMA write in plus the CN-consume
+read out), aggregated over the slow-tier group, staged per the
+schedule's planned placement (local DRAM channels vs the device
+interleave).  The wire flow and the memory flow drain in parallel and
+the leg completes only when BOTH have — i.e. with constant grants the
+tenant's effective slow rate is ``min(granted lanes, granted memory
+bandwidth)``, which is exactly what ``CostModel.from_schedule(mem=...)``
+charges (``max(wire seconds, memory seconds)`` per leg), preserving the
+sim/cost parity contract in the memory-aware mode.  Compute phases with
+``Tenant.compute_mem_bw > 0`` draw their demand from the LOCAL channels
+while they run, so a burst's DMA and a peer's compute contend for the
+same memory — the C1 memory wall: the NIC pool stops scaling when local
+memory saturates, and recovers as pooled devices are added.  With no
+memory model the code path (and every result) is bitwise what it was
+before the memory pool existed.
+
 Concurrency is where the sim says more than the formula: flows from many
-tenants share the pool under the arbiter's weighted max-min (fluid) or
+tenants share the pools under the arbiters' weighted max-min (fluid) or
 pinned-lane (static executor, honoring ``CommSchedule.lane_offset``)
 allocation, and the timeline shows who got which lanes when.
 """
@@ -44,6 +66,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cost_model import CostModel, ScheduleEstimate
+from repro.core.mempool import MemPool, MemRequest
 from repro.core.nicpool import LaneRequest, NicPool
 from repro.core.schedule import CommSchedule
 from repro.core.topology import FabricSpec, as_fabric
@@ -69,7 +92,11 @@ class Tenant:
     schedule's nominal lanes (no bursting), ``pool.lanes`` = fully
     opportunistic (the Fig. 13 burst).  ``pin_lanes`` pins sub-flow *i*
     to lane ``i mod pool_lanes`` — the static-executor constraint the
-    planner's ``lane_offset`` staggering exists for."""
+    planner's ``lane_offset`` staggering exists for.  ``compute_mem_bw``
+    is the memory bandwidth (B/s, the tenant's aggregate) a compute
+    phase draws from the LOCAL channels of a modeled memory pool; 0
+    keeps compute phases pure time (always so when memory is
+    unmodeled)."""
 
     name: str
     schedule: Optional[CommSchedule]
@@ -79,6 +106,7 @@ class Tenant:
     priority: float = 1.0
     max_lanes: Optional[float] = None
     pin_lanes: bool = False
+    compute_mem_bw: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -103,6 +131,7 @@ class SimResult:
     events: Tuple[LegEvent, ...]
     finish: Dict[str, float]  # per-tenant completion time
     pool: NicPool
+    mem: Optional[MemPool] = None
 
     def tenant_events(self, name: str) -> Tuple[LegEvent, ...]:
         return tuple(e for e in self.events if e.tenant == name)
@@ -115,6 +144,15 @@ class SimResult:
     def peak_pool_lanes(self) -> float:
         return self.pool.peak_lanes()
 
+    @property
+    def peak_mem_bw(self) -> float:
+        """Peak total RECORDED memory-pool draw over the run — the
+        paper's "memory pool demand" during a burst.  0 when memory was
+        unmodeled, and also when the pool provably could not bind any
+        flow (the ∞-bandwidth fast path skips co-simulation, leaving
+        ``mem`` attached with an empty trace — see ``simulate``)."""
+        return self.mem.peak_bw() if self.mem is not None else 0.0
+
 
 # ---------------------------------------------------------------------------
 # Tenant programs (task DAGs)
@@ -123,10 +161,13 @@ class SimResult:
 
 class _Task:
     __slots__ = ("kind", "dur", "work", "deps", "legs", "round", "chunk",
-                 "lane", "state", "start", "finish", "flow_id")
+                 "lane", "state", "start", "finish", "flow_id",
+                 "mem_bytes", "mem_cap", "staging", "mem_flow_id",
+                 "wire_done", "mem_done", "nic_lanes")
 
     def __init__(self, kind, *, dur=0.0, work=0.0, deps=(), legs=(),
-                 rnd=0, chunk=-1, lane=None):
+                 rnd=0, chunk=-1, lane=None, mem_bytes=0.0, mem_cap=None,
+                 staging=None):
         self.kind = kind  # "local" | "pool"
         self.dur = dur
         self.work = work
@@ -139,6 +180,15 @@ class _Task:
         self.start = 0.0
         self.finish = 0.0
         self.flow_id = -1
+        # memory co-simulation: a task completes only when its wire work
+        # (NIC flow / engine timer) AND its memory flow have both drained
+        self.mem_bytes = mem_bytes
+        self.mem_cap = mem_cap
+        self.staging = staging
+        self.mem_flow_id = -1
+        self.wire_done = False
+        self.mem_done = mem_bytes <= 0.0
+        self.nic_lanes = 0.0  # mean granted lanes of the completed flow
 
 
 def _is_pool_leg(leg, fab: FabricSpec) -> bool:
@@ -154,9 +204,11 @@ def _is_pool_leg(leg, fab: FabricSpec) -> bool:
 
 
 def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
-             fab: FabricSpec, pool_lanes: float) -> List[_Task]:
+             fab: FabricSpec, pool_lanes: float,
+             mem_spec) -> List[_Task]:
     """Expand one tenant into its task DAG (see module docstring)."""
     nominal = fab.slowest.lanes if fab.depth > 1 else 1.0
+    grp = max(fab.n_fast, 1)
     sched = tenant.schedule
     tasks: List[_Task] = []
     tail: List[int] = []  # tasks the next round waits on
@@ -166,11 +218,33 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
             return None
         return chunk_index % max(int(math.ceil(pool_lanes)), 1)
 
+    def mem_of(lc) -> dict:
+        """Memory-flow kwargs of one slow leg: its wire bytes hit the
+        pool ``traffic_factor`` times aggregated over the group, capped
+        at the flow's own max draw (wire rate at its lane cap) — the
+        exact twin of ``CostModel._mem_leg_seconds``."""
+        if mem_spec is None:
+            return {}
+        cap_lanes = tenant.max_lanes if tenant.max_lanes is not None \
+            else nominal
+        return dict(
+            mem_bytes=mem_spec.traffic_factor * grp * lc.bytes_per_chip,
+            mem_cap=mem_spec.traffic_factor * grp * fab.slowest.bw
+            * max(cap_lanes, _EPS),
+            staging=sched.staging if sched is not None else None)
+
     for r in range(max(tenant.rounds, 1)):
         head = list(tail)
         if tenant.compute_s > 0:
+            cm_kw = {}
+            if mem_spec is not None and tenant.compute_mem_bw > 0:
+                # compute reads its working set from the LOCAL channels
+                cm_kw = dict(
+                    mem_bytes=tenant.compute_s * tenant.compute_mem_bw,
+                    mem_cap=tenant.compute_mem_bw, staging="local")
             tasks.append(_Task("local", dur=tenant.compute_s, deps=head,
-                               legs=[(COMPUTE, tenant.compute_s)], rnd=r))
+                               legs=[(COMPUTE, tenant.compute_s)], rnd=r,
+                               **cm_kw))
             head = [len(tasks) - 1]
         if sched is None or est is None or not sched.legs:
             tail = head
@@ -197,7 +271,8 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
                     "pool", work=slc.seconds * nominal,
                     deps=prev_local + prev_flow,
                     legs=[(slc.leg, slc.seconds)], rnd=r,
-                    chunk=slc.leg.index, lane=lane_of(slc.leg.index)))
+                    chunk=slc.leg.index, lane=lane_of(slc.leg.index),
+                    **mem_of(slc)))
                 prev_flow = [len(tasks) - 1]
             tail = prev_local + prev_flow
         else:
@@ -208,7 +283,7 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
                     tasks.append(_Task(
                         "pool", work=lc.seconds * nominal, deps=prev,
                         legs=[(lc.leg, lc.seconds)], rnd=r, chunk=chunk,
-                        lane=lane_of(chunk)))
+                        lane=lane_of(chunk), **mem_of(lc)))
                 else:
                     tasks.append(_Task("local", dur=lc.seconds, deps=prev,
                                        legs=[(lc.leg, lc.seconds)], rnd=r))
@@ -224,14 +299,17 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
 
 def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
              pool: Optional[NicPool] = None,
-             cost: Optional[CostModel] = None) -> SimResult:
-    """Replay ``tenants`` concurrently against ``pool``.
+             cost: Optional[CostModel] = None,
+             mem: Optional[MemPool] = None) -> SimResult:
+    """Replay ``tenants`` concurrently against ``pool`` (and ``mem``).
 
     ``pool`` defaults to ``NicPool.from_fabric(fabric, len(tenants))`` —
-    every tenant contributes its nominal lanes (the rack pool).  Fast
-    legs are charged per :meth:`CostModel.from_schedule`; slow legs go
-    through the arbiter.  Returns per-leg events, per-tenant finish
-    times, and the makespan."""
+    every tenant contributes its nominal lanes (the rack pool).  ``mem``
+    defaults to ``fabric.mem.make_pool()`` when the fabric carries a
+    memory model, else memory is unmodeled.  Fast legs are charged per
+    :meth:`CostModel.from_schedule`; slow legs go through the arbiters
+    (wire AND memory — see the module docstring).  Returns per-leg
+    events, per-tenant finish times, and the makespan."""
     fab = as_fabric(fabric)
     cm = cost or CostModel(fab)
     pool = pool or NicPool.from_fabric(fab, tenants=len(tenants))
@@ -240,18 +318,51 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         # silently corrupt peak_lanes / busy_lane_seconds
         raise ValueError("pool already has flows or a recorded trace; "
                          "pass a fresh NicPool per simulate() run")
+    if mem is None and fab.mem is not None:
+        mem = fab.mem.make_pool()
+    if mem is not None and (mem.active or mem.segments):
+        raise ValueError("mem pool already has flows or a recorded trace; "
+                         "pass a fresh MemPool per simulate() run")
+    mem_spec = mem.spec if mem is not None else None
 
     progs: List[List[_Task]] = []
     for tn in tenants:
         est = cm.from_schedule(tn.schedule) if tn.schedule is not None else None
-        progs.append(_compile(tn, est, fab, pool.lanes))
+        progs.append(_compile(tn, est, fab, pool.lanes, mem_spec))
+
+    if mem is not None:
+        # ∞-bandwidth fast path: when EVERY device is faster than the sum
+        # of all flow caps and no placement carries a latency tail, the
+        # memory pool can never bind any flow — drop the memory flows
+        # entirely so the event stream (and every completion time) is
+        # BITWISE the no-memory run's (interior mem events would otherwise
+        # perturb the NIC flows' piecewise fp arithmetic by an ulp)
+        mtasks = [task for prog in progs for task in prog if not task.mem_done]
+        total_cap = sum(task.mem_cap for task in mtasks)
+        tails = max((mem_spec.staging_latency(task.staging)
+                     for task in mtasks), default=0.0)
+        if mtasks and tails <= 0.0 \
+                and min(d.bw for d in mem_spec.devices) >= total_cap:
+            for task in mtasks:
+                task.mem_done = True
+            mtasks = []
+        if not mtasks:
+            # the pool stays on the SimResult (memory WAS modeled, it
+            # just cannot bind) with an empty trace; only the event-loop
+            # participation is skipped
+            result_mem, mem, mem_spec = mem, None, None
+    else:
+        result_mem = None
+    if mem is not None:
+        result_mem = mem
 
     names = [tn.name for tn in tenants]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate tenant names: {names}")
 
     engine_task: List[Optional[int]] = [None] * len(tenants)  # running local
-    flows: Dict[int, Tuple[int, int]] = {}  # flow id -> (tenant, task idx)
+    flows: Dict[int, Tuple[int, int]] = {}  # nic flow id -> (tenant, task)
+    mem_flows: Dict[int, Tuple[int, int]] = {}  # mem flow id -> (tenant, task)
     events: List[LegEvent] = []
     finish = {tn.name: 0.0 for tn in tenants}
 
@@ -269,12 +380,39 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                                    task.chunk))
             t0 = t1
 
+    def submit_mem(ti: int, idx: int, task: _Task, now: float) -> None:
+        if mem is None or task.mem_done:
+            return
+        tn = tenants[ti]
+        task.mem_flow_id = mem.submit(MemRequest(
+            tenant=tn.name, nbytes=task.mem_bytes, arrive=now,
+            cap_bw=task.mem_cap, priority=tn.priority,
+            staging=task.staging, tag=task.legs[0][0]), now)
+        mem_flows[task.mem_flow_id] = (ti, idx)
+
+    def complete_pool_task(ti: int, idx: int, now: float) -> None:
+        task = progs[ti][idx]
+        task.state = "done"
+        task.finish = now
+        events.append(LegEvent(tenants[ti].name, task.legs[0][0],
+                               task.start, now, task.nic_lanes,
+                               task.round, task.chunk))
+        finish[tenants[ti].name] = max(finish[tenants[ti].name], now)
+
+    def complete_local_task(ti: int, idx: int, now: float) -> None:
+        task = progs[ti][idx]
+        task.state = "done"
+        task.finish = now
+        emit_local(tenants[ti], task)
+        finish[tenants[ti].name] = max(finish[tenants[ti].name], now)
+        engine_task[ti] = None
+
     t = min((tn.start for tn in tenants), default=0.0)
     guard = 0
     total_tasks = sum(len(p) for p in progs)
     while True:
         guard += 1
-        if guard > 200 * (total_tasks + 4):
+        if guard > 400 * (total_tasks + 4):
             raise RuntimeError("fabric_sim event-loop guard tripped")
         # ---- start everything startable at time t --------------------------
         for ti, (tn, prog) in enumerate(zip(tenants, progs)):
@@ -293,6 +431,7 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                         max_lanes=tn.max_lanes, priority=tn.priority,
                         lane=task.lane, tag=task.legs[0][0]), t)
                     flows[task.flow_id] = (ti, idx)
+                    submit_mem(ti, idx, task, t)
             # the serial fast engine: first waiting local task, in order
             if engine_task[ti] is None:
                 for idx, task in enumerate(prog):
@@ -302,6 +441,7 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                             task.start = t
                             task.finish = t + task.dur
                             engine_task[ti] = idx
+                            submit_mem(ti, idx, task, t)
                         break  # in-order engine: don't skip ahead
         # ---- done? ---------------------------------------------------------
         if all(task.state == "done" for prog in progs for task in prog):
@@ -309,9 +449,12 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         # ---- next event ----------------------------------------------------
         t_next = math.inf
         for ti, prog in enumerate(progs):
-            if engine_task[ti] is not None:
-                t_next = min(t_next, prog[engine_task[ti]].finish)
+            idx = engine_task[ti]
+            if idx is not None and not prog[idx].wire_done:
+                t_next = min(t_next, prog[idx].finish)
         t_next = min(t_next, pool.earliest_finish(t))
+        if mem is not None:
+            t_next = min(t_next, mem.earliest_finish(t))
         for tn in tenants:  # tenants not yet started
             if tn.start > t + _EPS:
                 t_next = min(t_next, tn.start)
@@ -324,23 +467,33 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         for fid, grant in pool.advance(t, t_next):
             ti, idx = flows.pop(fid)
             task = progs[ti][idx]
-            task.state = "done"
-            task.finish = t_next
-            events.append(LegEvent(tenants[ti].name, task.legs[0][0],
-                                   task.start, t_next, grant.mean_lanes,
-                                   task.round, task.chunk))
-            finish[tenants[ti].name] = max(finish[tenants[ti].name], t_next)
+            task.wire_done = True
+            task.nic_lanes = grant.mean_lanes
+            if task.mem_done:
+                complete_pool_task(ti, idx, t_next)
+        if mem is not None:
+            for mfid, _grant in mem.advance(t, t_next):
+                ti, idx = mem_flows.pop(mfid)
+                task = progs[ti][idx]
+                task.mem_done = True
+                if not task.wire_done:
+                    continue  # still on the wire / engine
+                if task.kind == "pool":
+                    complete_pool_task(ti, idx, t_next)
+                else:
+                    complete_local_task(ti, idx, t_next)
         for ti, prog in enumerate(progs):
             idx = engine_task[ti]
-            if idx is not None and prog[idx].finish <= t_next + _EPS:
-                prog[idx].state = "done"
-                prog[idx].finish = min(prog[idx].finish, t_next)
-                emit_local(tenants[ti], prog[idx])
-                finish[tenants[ti].name] = max(finish[tenants[ti].name],
-                                               prog[idx].finish)
-                engine_task[ti] = None
+            if idx is not None and not prog[idx].wire_done \
+                    and prog[idx].finish <= t_next + _EPS:
+                task = prog[idx]
+                task.wire_done = True
+                if task.mem_done:
+                    complete_local_task(ti, idx, min(task.finish, t_next))
+                # else: the engine stays blocked until the memory flow
+                # drains — compute stretched by memory contention
         t = t_next
 
     events.sort(key=lambda e: (e.start, e.finish, e.tenant))
     makespan = max(finish.values(), default=0.0)
-    return SimResult(makespan, tuple(events), finish, pool)
+    return SimResult(makespan, tuple(events), finish, pool, result_mem)

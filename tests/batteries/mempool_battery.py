@@ -1,0 +1,197 @@
+"""Memory-pool subsystem battery (pure Python — no devices needed; run via
+subprocess like the other batteries for log isolation).
+
+  * allocator invariants: uniform-stripe max-min (a lone flow is bounded
+    by ``k * min(device bw)``), per-device conservation (no device ever
+    oversubscribed), weights and caps honored, tail-latency completion;
+  * sim/price parity in the MEMORY-AWARE mode over the schedule grid
+    (1/2/3 tiers x chunks 1/2/4 x pipeline on/off x strategies x
+    local/pool staging): a single tenant's simulated makespan matches
+    ``CostModel.from_schedule(mem=True)`` exactly when sequential, <1%
+    pipelined;
+  * the ∞-memory invariance contract: with a memory pool too fast to
+    bind, every NIC-pool grid result is BITWISE the no-memory result;
+  * θ-way memory contention matches the ``granted_mem_bw`` pricing, and
+    compute phases drawing the local channels stretch under DMA pressure
+    exactly when the shared capacity binds.
+"""
+import itertools
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import (MemDevice, MemPool, MemPoolSpec, MemRequest,
+                                mem_waterfill)
+from repro.core.nicpool import NicPool
+from repro.core.schedule import SyncConfig, schedule_from_axes
+from repro.core.topology import (TwoTierTopology, as_fabric,
+                                 fabric_from_mesh_sizes, three_tier_fabric)
+from repro.sim.fabric_sim import Tenant, simulate
+
+EPS = 1e-9
+
+# ---------------------------------------------------------------------------
+# 1. multi-device max-min allocator
+# ---------------------------------------------------------------------------
+
+# a lone flow striped over heterogeneous devices is paced by the slowest
+rates = mem_waterfill([(1.0, 1e18, (0, 1))], [100.0, 50.0])
+assert abs(rates[0] - 2 * 50.0) < EPS, rates
+# two flows on one device split by weight; a third on its own device
+rates = mem_waterfill([(1.0, 1e18, (0,)), (3.0, 1e18, (0,)),
+                       (1.0, 1e18, (1,))], [80.0, 50.0])
+assert abs(rates[0] - 20.0) < EPS and abs(rates[1] - 60.0) < EPS, rates
+assert abs(rates[2] - 50.0) < EPS, rates
+# caps spill to the uncapped sharer
+rates = mem_waterfill([(1.0, 10.0, (0,)), (1.0, 1e18, (0,))], [100.0])
+assert abs(rates[0] - 10.0) < EPS and abs(rates[1] - 90.0) < EPS, rates
+# per-device conservation on a striped + dedicated mix
+flows = [(1.0, 1e18, (0, 1, 2)), (1.0, 1e18, (0,)), (2.0, 1e18, (2,))]
+caps = [60.0, 30.0, 90.0]
+rates = mem_waterfill(flows, caps)
+for d in range(3):
+    draw = sum(r / len(f[2]) for f, r in zip(flows, rates) if d in f[2])
+    assert draw <= caps[d] + EPS, (d, draw)
+print("mem_waterfill: stripe bound + weights + caps + conservation OK")
+
+# ---------------------------------------------------------------------------
+# 2. arbiter invariants on a request trace
+# ---------------------------------------------------------------------------
+
+spec = MemPoolSpec(devices=(
+    MemDevice("dram0", 50e9), MemDevice("dram1", 50e9),
+    MemDevice("cxl0", 50e9, latency=1e-3, kind="cxl")))
+pool = MemPool(spec)
+reqs = [
+    MemRequest("a", nbytes=100e9, staging="pool"),       # 3-way stripe
+    MemRequest("b", nbytes=50e9, arrive=0.2, staging="local"),
+    MemRequest("c", nbytes=25e9, arrive=0.2, staging="local", priority=2.0),
+]
+grants = pool.run(reqs)
+assert len(grants) == 3
+by = {g.request.tenant: g for g in grants}
+# the pool flow serves its 1e-3 tail after draining
+assert by["a"].finish >= 1e-3
+for seg in pool.segments:
+    # per-device draw never exceeds device bandwidth
+    draw = {}
+    for fid, bw in seg.alloc.items():
+        req = reqs[fid]
+        ids = spec.placement(req.staging)
+        for d in ids:
+            draw[d] = draw.get(d, 0.0) + bw / len(ids)
+    for d, v in draw.items():
+        assert v <= spec.devices[d].bw + EPS, (seg, d, v)
+total_bytes = sum(r.nbytes for r in reqs)
+assert abs(pool.busy_bytes() - total_bytes) / total_bytes < 1e-6
+print(f"arbiter: {len(pool.segments)} segments, no device oversubscribed, "
+      "tail served OK")
+
+# the deliverable-bandwidth contract: alone, a flow gets exactly
+# k * min(device bw) through its placement
+pool = MemPool(spec)
+(g,) = pool.run([MemRequest("solo", nbytes=300e9, staging="pool")])
+assert abs(g.duration - (300e9 / spec.deliverable_bw("pool") + 1e-3)) < 1e-6
+pool = MemPool(spec)
+(g,) = pool.run([MemRequest("solo", nbytes=100e9, staging="local")])
+assert abs(g.duration - 100e9 / spec.deliverable_bw("local")) < 1e-6, g
+print("arbiter: deliverable_bw == lone-flow rate for both stagings OK")
+
+# ---------------------------------------------------------------------------
+# 3. sim/price parity in the memory-aware mode over the schedule grid
+# ---------------------------------------------------------------------------
+
+GRID = [
+    ({"data": 8}, ("data",), None, fabric_from_mesh_sizes({"data": 8})),
+    ({"data": 4, "pod": 2}, ("data",), "pod",
+     as_fabric(TwoTierTopology(num_pods=2, pod_shape=(4,)))),
+    ({"data": 2, "host": 2, "pod": 2}, ("data", "host"), "pod",
+     three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)),
+]
+NAMES = {"data": "ici", "host": "cxl", "pod": "dcn"}
+
+# a memory pool that BINDS (deliverable below the slow tier's demand)
+tight = MemPoolSpec.build(local_bw=12e9, local_channels=2, device_bw=6e9,
+                          devices=2, device_latency=2e-6)
+# and one far too fast to bind (the ∞-memory invariance check)
+huge = MemPoolSpec.build(local_bw=1e18, local_channels=2)
+
+checked = 0
+for (sizes, fast, slow, fab0), chunks, pipe, strat, stg in itertools.product(
+        GRID, (1, 2, 4), (False, True), ("hier_striped", "hier_root", "flat"),
+        ("local", "pool")):
+    cfg = SyncConfig(strat, chunks=chunks, pipeline=pipe)
+    sched = schedule_from_axes(fast, slow, cfg, (8192,), 0, sizes,
+                               tier_names=NAMES).with_staging(stg)
+    fab = fab0.with_mem(tight)
+    cm = CostModel(fab)
+    est = cm.from_schedule(sched, mem=True)
+    res = simulate(fab, [Tenant("solo", sched)])
+    rel = abs(res.makespan - est.total_s) / max(est.total_s, 1e-30)
+    tol = 1e-9 if not sched.pipelined else 1e-2  # acceptance: within 1%
+    assert rel < tol, (sizes, strat, chunks, pipe, stg, est.total_s,
+                       res.makespan)
+    # ∞ memory: bitwise the no-memory result (sim AND pricing)
+    base = simulate(fab0, [Tenant("solo", sched)])
+    inf = simulate(fab0.with_mem(huge), [Tenant("solo", sched)])
+    assert inf.makespan == base.makespan, (sizes, strat, chunks, pipe, stg)
+    assert CostModel(fab0.with_mem(huge)).from_schedule(sched, mem=True) \
+        .total_s == CostModel(fab0).from_schedule(sched).total_s
+    # memory can only slow a schedule down
+    assert est.total_s >= CostModel(fab0).from_schedule(sched).total_s - EPS
+    checked += 1
+print(f"sim/price parity (mem): {checked} schedules within tolerance, "
+      "inf-memory bitwise invariant OK")
+
+# ---------------------------------------------------------------------------
+# 4. θ-way memory contention == granted_mem_bw pricing
+# ---------------------------------------------------------------------------
+
+fab3 = three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2,
+                         mem=tight)
+cm = CostModel(fab3)
+sched = schedule_from_axes(("data", "host"), "pod",
+                           SyncConfig("hier_striped", pipeline=False),
+                           (1 << 18,), 0, {"data": 2, "host": 2, "pod": 2},
+                           tier_names=NAMES).with_staging("pool")
+for theta in (2, 4, 8):
+    pool = NicPool(lanes=fab3.slowest.lanes)
+    res = simulate(fab3, [Tenant(f"t{k}", sched) for k in range(theta)],
+                   pool=pool)
+    est = cm.from_schedule(sched, mem=True,
+                           granted_lanes=pool.fair_share(theta),
+                           granted_mem_bw=tight.deliverable_bw("pool") / theta)
+    rel = abs(res.makespan - est.total_s) / est.total_s
+    assert rel < 1e-9, (theta, res.makespan, est.total_s)
+print("contention: sim == granted-mem pricing for theta in 2/4/8 OK")
+
+# ---------------------------------------------------------------------------
+# 5. compute phases draw the local channels
+# ---------------------------------------------------------------------------
+
+# within local bandwidth: compute time is untouched
+alone = simulate(fab3.with_mem(None), [Tenant("c", None, compute_s=1e-3)])
+ok = simulate(fab3, [Tenant("c", None, compute_s=1e-3,
+                            compute_mem_bw=tight.local_bw)])
+assert ok.makespan == alone.makespan
+# demand above local bandwidth stretches by exactly the ratio
+over = simulate(fab3, [Tenant("c", None, compute_s=1e-3,
+                              compute_mem_bw=2 * tight.local_bw)])
+assert abs(over.makespan - 2e-3) < 1e-9, over.makespan
+# a burst's DMA steals the channels a computing peer is using: with
+# local-only memory BOTH stretch vs the roomy (pooled-device) run
+local_only = MemPoolSpec.build(local_bw=12e9, local_channels=2)
+roomy = MemPoolSpec.build(local_bw=12e9, local_channels=2, device_bw=12e9,
+                          devices=4, device_latency=2e-6)
+t_burst = CostModel(fab3.with_mem(local_only)).from_schedule(
+    sched, mem=True).total_s
+pair = [Tenant("cn0", sched),
+        Tenant("peer", None, compute_s=2 * t_burst,
+               compute_mem_bw=local_only.local_bw / 2)]
+crowded = simulate(fab3.with_mem(local_only), pair)
+spacious = simulate(fab3.with_mem(roomy), pair)
+assert spacious.finish["cn0"] < crowded.finish["cn0"], \
+    (spacious.finish, crowded.finish)
+assert spacious.finish["peer"] <= crowded.finish["peer"] + EPS
+print("compute: local-channel draw, stretch ratio, burst-vs-compute "
+      "contention OK")
+
+print("ALL OK")

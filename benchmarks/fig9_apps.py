@@ -1,11 +1,77 @@
 """Paper Figure 9 (+10): per-application communication-time reduction vs
-NIC bandwidth B = C/theta, compared against the paper's reported numbers."""
+NIC bandwidth B = C/theta, compared against the paper's reported numbers —
+plus EXPERIMENTS.md §Perf **cell C**: the deepseek-MoE dispatch priced
+from its planner-searched all-to-all schedule and replayed through the
+NIC-pool AND memory-pool arbiters (per-expert flows), not analytically.
+"""
 from __future__ import annotations
 
-from benchmarks.paper_workloads import PAPER_CLAIMS, WORKLOADS, sweep
+from benchmarks.paper_workloads import (C_LINK, PAPER_CLAIMS, WORKLOADS,
+                                        proto_topo, sweep)
 
 
-def run():
+def cellc_moe_dispatch(theta: float = 8.0, smoke: bool = False):
+    """Cell C rows: one MoE dispatch round on the paper's prototype
+    (2 racks x 2 CNs at B = C/theta) with a memory pool behind the NICs.
+
+    The schedule comes from ``moe_dispatch_schedule`` (per-expert flow
+    sizes from the capacity C), is priced by
+    ``CostModel.from_schedule(mem=True)``, and is replayed single-tenant
+    and under θ-way shuffle contention by ``repro.sim.fabric_sim`` — the
+    slow sub-flows arbitrated per destination.  The baseline is the same
+    exchange through one CN's own NIC (``CostModel.all_to_all``
+    unstriped)."""
+    from repro.configs import get_arch, get_smoke_arch
+    from repro.core.cost_model import CostModel, dtype_itemsize
+    from repro.core.mempool import MemPoolSpec
+    from repro.core.nicpool import NicPool
+    from repro.core.planner import Planner
+    from repro.core.topology import as_fabric
+    from repro.models.layers import moe_dispatch_schedule
+    from repro.sim.fabric_sim import Tenant, simulate
+
+    topo = proto_topo(theta)
+    mem = MemPoolSpec.build(local_bw=C_LINK, local_channels=2,
+                            device_bw=C_LINK / 2, devices=2,
+                            device_latency=2e-6)
+    fab = as_fabric(topo).with_mem(mem)
+    planner = Planner(fab, min_chunk_numel=1 << 12)
+    arch = get_smoke_arch("deepseek-moe-16b") if smoke \
+        else get_arch("deepseek-moe-16b")
+    tokens = 512 if smoke else 8192  # tokens per CN per dispatch round
+    sched = moe_dispatch_schedule(arch, tokens, planner)
+
+    cm = CostModel(fab)
+    est = cm.from_schedule(sched, mem=True)
+    solo = simulate(fab, [Tenant("cn0", sched)])
+    err = abs(solo.makespan - est.total_s) / max(est.total_s, 1e-30)
+
+    # baseline: the dispatch payload through one CN's own (unpooled) NIC
+    nbytes = sched.numel * dtype_itemsize(sched.dtype)
+    t_base = cm.all_to_all(nbytes, striped=False)
+    red = 100.0 * (1.0 - solo.makespan / t_base)
+
+    # θ-way shuffle contention: every CN dispatches at once on one CN's
+    # worth of lanes — sim == the granted-lanes/granted-mem pricing
+    ncn = topo.chips_per_pod  # CNs per rack sharing the rack pool
+    pool = NicPool(lanes=fab.slowest.lanes)
+    crowd = simulate(fab, [Tenant(f"cn{k}", sched) for k in range(ncn)],
+                     pool=pool)
+    est_c = cm.from_schedule(
+        sched, mem=True, granted_lanes=pool.fair_share(ncn),
+        granted_mem_bw=mem.deliverable_bw(sched.staging) / ncn)
+    err_c = abs(crowd.makespan - est_c.total_s) / max(est_c.total_s, 1e-30)
+
+    return [
+        (f"fig9/cellC_moe_dispatch", solo.makespan * 1e6,
+         f"reduction={red:.1f}%_vs_own_nic_sim_err={err * 100:.2f}%"
+         f"_sched={sched.describe().replace(' ', '')}"),
+        (f"fig9/cellC_moe_dispatch_contended_x{ncn}", crowd.makespan * 1e6,
+         f"sim_vs_granted_pricing_err={err_c * 100:.2f}%"),
+    ]
+
+
+def run(smoke: bool = False):
     rows = []
     for name in WORKLOADS:
         s = sweep(name)
@@ -17,6 +83,7 @@ def run():
         # us_per_call column = worst-case dfabric time for the workload
         tb, td = WORKLOADS[name](8)
         rows.append((f"fig9/{name}", td * 1e6, derived))
+    rows.extend(cellc_moe_dispatch(smoke=smoke))
     return rows
 
 

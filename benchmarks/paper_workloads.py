@@ -11,9 +11,20 @@ Trace assumptions (documented per DESIGN.md §8):
     1/3 of peers are intra-rack (4 CNs, 2 racks).
   * ResNet18 DDP: 11M fp32 params, Gloo ring all-reduce.
   * TinyStories LLM: 1M fp32 params, all-to-all gradient exchange.
-  * WordCount: 3 mappers -> 1 reducer, 256 MB shuffle, incast at reducer.
+  * WordCount: 3 mappers -> 1 reducer, 256 MB shuffle — since PR 5
+    REPLAYED on the NIC-pool arbiter (the incast flows time-share the
+    reducer's single NIC in the baseline, stripe over the rack pool in
+    DFabric) instead of closed-form division.
   * Redis: open-loop M/D/1 queueing at the NIC; DFabric spreads load over
     the pool and pays far-memory latency (the paper's B=C crossover).
+
+``PAPER_BANDS`` records the accepted band for each workload's average
+communication-time reduction: the alpha-beta/simulated model reproduces
+the paper's *ordering and shape* but not its absolute percentages (no
+protocol overheads, switch buffers or measurement noise in the model),
+so each band is centered on the model's value with the paper's claim kept
+alongside in ``PAPER_CLAIMS`` for reference.
+``tests/test_paper_workloads.py`` asserts every workload stays in band.
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ from dataclasses import dataclass
 from typing import Dict, Tuple
 
 from repro.core.cost_model import CostModel
+from repro.core.nicpool import LaneRequest, NicPool
 from repro.core.topology import HardwareSpec, TwoTierTopology
 
 C_LINK = 50e9  # "CXL" fast-tier link rate in the prototype
@@ -74,13 +86,29 @@ def llm_a2a(theta: float) -> Tuple[float, float]:
 
 
 def wordcount(theta: float) -> Tuple[float, float]:
+    """3 mappers -> 1 reducer shuffle, REPLAYED on the NIC-pool arbiter
+    (paper §6.2 WordCount; EXPERIMENTS.md §Perf cell C).
+
+    Baseline: all three mappers' flows incast at the reducer's single
+    ToR-attached NIC and time-share that one lane (processor sharing —
+    the arbiter's makespan is the serialized 3x transfer the paper
+    measures).  DFabric: the two cross-rack mappers' flows stripe over
+    the rack's whole NIC pool, and the intra-rack mapper's shuffle rides
+    the CXL fabric pass-by-reference; the reducer consumes the local leg
+    after the pooled incast drains."""
     topo = proto_topo(theta)
     shuffle = 256e6  # bytes per mapper
     dcn = topo.hw.dcn_bw
-    # 3 mappers -> 1 reducer; baseline incast at the reducer's single NIC;
-    # one mapper is intra-rack with the reducer
-    t_base = 3 * shuffle / dcn
-    t_df = 2 * shuffle / topo.pool_dcn_bw + shuffle / topo.hw.ici_bw
+    # baseline incast: 3 equal flows, one lane at NIC rate B
+    base_pool = NicPool(lanes=1.0)
+    t_base = max(g.finish for g in base_pool.run(
+        [LaneRequest(f"mapper{i}", work=shuffle / dcn) for i in range(3)]))
+    # dfabric: 2 cross-rack flows, free to burst over the whole pool
+    pool = NicPool(lanes=topo.chips_per_pod * topo.dcn_lanes)
+    t_cross = max(g.finish for g in pool.run(
+        [LaneRequest(f"mapper{i}", work=shuffle / dcn, max_lanes=pool.lanes)
+         for i in range(2)]))
+    t_df = t_cross + shuffle / topo.hw.ici_bw
     return t_base, t_df
 
 
@@ -124,6 +152,19 @@ PAPER_CLAIMS = {  # average / worst-case communication-time reduction (%)
     "llm_a2a": (34.7, None),
     "wordcount": (31.1, None),
     "redis_p99": (40.5, None),
+}
+
+# accepted (lo, hi) band for the AVG reduction % over the theta sweep —
+# the regression contract (see module docstring; asserted in
+# tests/test_paper_workloads.py).  Model values as of PR 5:
+# pagerank 51.0, resnet18_ddp 36.8, llm_a2a 42.0, wordcount 51.0
+# (sim-replayed == the retired closed form), redis_p99 41.7.
+PAPER_BANDS = {
+    "pagerank": (45.0, 57.0),
+    "resnet18_ddp": (31.0, 43.0),
+    "llm_a2a": (36.0, 48.0),
+    "wordcount": (45.0, 57.0),
+    "redis_p99": (36.0, 48.0),
 }
 
 

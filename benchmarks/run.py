@@ -7,8 +7,10 @@ parseable, and the exit code is nonzero when any module failed.  Run:
 
 ``--smoke`` runs the fast analytic/simulated figure subset (fig_ntier,
 fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention,
-fig_mempool_scaling) at tiny payload sizes — the CI sanity job (the
-workflow uploads the CSV as an artifact and fails on ERROR rows).
+fig_mempool_scaling, and fig9_apps — whose wordcount and cell C
+MoE-dispatch rows go through the NIC/memory-pool simulator) at tiny
+payload sizes — the CI sanity job (the workflow uploads the CSV as an
+artifact and fails on ERROR rows).
 """
 from __future__ import annotations
 
@@ -29,7 +31,7 @@ def main() -> None:
                             fig_mempool_scaling, fig_ntier, fig_overlap,
                             fig_pool_contention, roofline, table4_breakdown)
     if args.smoke:
-        modules = [fig_ntier, fig_overlap, fig13_timesharing,
+        modules = [fig_ntier, fig_overlap, fig9_apps, fig13_timesharing,
                    fig_pool_contention, fig_mempool_scaling]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,

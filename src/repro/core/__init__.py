@@ -9,15 +9,16 @@ from repro.core.nicpool import LaneGrant, LaneRequest, NicPool, waterfill
 from repro.core.mempool import (
     MemDevice, MemGrant, MemPool, MemPoolSpec, MemRequest, mem_waterfill)
 from repro.core.schedule import (
-    AllGather, CommSchedule, Psum, ReduceScatter, SlowChunk, SyncConfig,
-    build_schedule, schedule_from_axes)
+    AllGather, AllToAll, CommSchedule, Psum, ReduceScatter, SlowChunk,
+    SyncConfig, all_to_all_from_axes, build_all_to_all, build_schedule,
+    schedule_from_axes)
 from repro.core.cost_model import (
     CostModel, CollectiveEstimate, LegCharge, NTierEstimate,
     ScheduleEstimate, TierCharge)
 from repro.core.collectives import (
     dfabric_all_gather, dfabric_all_reduce, dfabric_all_to_all,
-    dfabric_reduce_scatter, lower_all_reduce, lower_reduce_scatter,
-    pod_psum, ring_all_reduce)
+    dfabric_reduce_scatter, lower_all_reduce, lower_all_to_all,
+    lower_reduce_scatter, pod_psum, ring_all_reduce)
 from repro.core.planner import Planner, SyncPlan, Section
 
 __all__ = [
@@ -27,12 +28,13 @@ __all__ = [
     "LaneGrant", "LaneRequest", "NicPool", "waterfill",
     "MemDevice", "MemGrant", "MemPool", "MemPoolSpec", "MemRequest",
     "mem_waterfill",
-    "AllGather", "CommSchedule", "Psum", "ReduceScatter", "SlowChunk",
-    "SyncConfig", "build_schedule", "schedule_from_axes",
+    "AllGather", "AllToAll", "CommSchedule", "Psum", "ReduceScatter",
+    "SlowChunk", "SyncConfig", "all_to_all_from_axes", "build_all_to_all",
+    "build_schedule", "schedule_from_axes",
     "CostModel", "CollectiveEstimate", "LegCharge", "NTierEstimate",
     "ScheduleEstimate", "TierCharge",
     "dfabric_all_gather", "dfabric_all_reduce", "dfabric_all_to_all",
-    "dfabric_reduce_scatter", "lower_all_reduce", "lower_reduce_scatter",
-    "pod_psum", "ring_all_reduce",
+    "dfabric_reduce_scatter", "lower_all_reduce", "lower_all_to_all",
+    "lower_reduce_scatter", "pod_psum", "ring_all_reduce",
     "Planner", "SyncPlan", "Section",
 ]

@@ -25,9 +25,11 @@ builds a typed leg list (``ReduceScatter`` / ``Psum`` / ``SlowChunk`` /
 Codec / chunking (``SyncConfig``) apply to the slowest leg — DFabric's
 point is that bandwidth is scarce exactly there; an optional ``mid_codec``
 compresses UNSCATTERED mid-tier psum legs in deep hierarchies.  The legacy
-entry points (``dfabric_all_reduce`` / ``dfabric_reduce_scatter``) survive
-as thin constructors: given no schedule they build one in-trace from
-``(axes, SyncConfig, shape)`` via the same builder the planner uses.
+entry points (``dfabric_all_reduce`` / ``dfabric_reduce_scatter``, and
+``dfabric_all_to_all`` for ``kind="all_to_all"`` schedules — shuffle / MoE
+dispatch traffic) survive as thin constructors: given no schedule they
+build one in-trace from ``(axes, SyncConfig, shape)`` via the same builder
+the planner uses.
 """
 from __future__ import annotations
 
@@ -40,16 +42,17 @@ from jax import lax
 
 from repro.core import compression as comp
 from repro.core import prims
-from repro.core.schedule import (AllGather, CommSchedule, Psum, ReduceScatter,
-                                 SlowChunk, SyncConfig, build_schedule,
+from repro.core.schedule import (AllGather, AllToAll, CommSchedule, Psum,
+                                 ReduceScatter, SlowChunk, SyncConfig,
+                                 all_to_all_from_axes, build_schedule,
                                  schedule_from_axes)
 from repro.utils.jax_compat import axis_size
 
 __all__ = [
     "SyncConfig", "dfabric_all_reduce", "dfabric_reduce_scatter",
     "dfabric_all_gather", "dfabric_all_to_all", "pod_psum",
-    "lower_all_reduce", "lower_reduce_scatter", "ring_all_reduce",
-    "normalize_axes", "fast_axes_size",
+    "lower_all_reduce", "lower_all_to_all", "lower_reduce_scatter",
+    "ring_all_reduce", "normalize_axes", "fast_axes_size",
 ]
 
 Axes = Union[str, Sequence[str]]
@@ -331,6 +334,10 @@ def lower_all_reduce(schedule: CommSchedule, x: jax.Array,
     ``leg_log``, when given, receives the legs actually lowered, in
     schedule order — the acceptance contract is that it equals the leg
     list ``CostModel.from_schedule`` prices."""
+    if schedule.kind != "all_reduce":
+        raise ValueError(
+            f"lower_all_reduce needs an all_reduce schedule, got "
+            f"kind={schedule.kind!r} (use lower_all_to_all)")
     if not schedule.legs:
         return x, ef
     if schedule.pipelined and schedule.chunks > 1:
@@ -449,34 +456,44 @@ def dfabric_all_gather(x: jax.Array, fast_axis: Axes,
 
 # ---------------------------------------------------------------------------
 # Multi-stage hierarchical all-to-all (the NIC pool applied to MoE dispatch /
-# shuffle traffic, paper §6.2 WordCount + our §Perf cell C future work)
+# shuffle traffic, paper §6.2 WordCount + our §Perf cell C)
 # ---------------------------------------------------------------------------
 
 
-def dfabric_all_to_all(x: jax.Array, fast_axis: Axes,
-                       slow_axis: Optional[str]) -> jax.Array:
-    """All-to-all over the (fast tiers x slow tier) DP domain, one stage
-    per tier.
+def lower_all_to_all(schedule: CommSchedule, x: jax.Array,
+                     leg_log: Optional[List] = None) -> jax.Array:
+    """Lower a ``kind="all_to_all"`` schedule to JAX ops.
 
-    ``x``: (n_total, chunk, ...) — row r holds the payload for member r of
-    the domain, rows ordered slow-major (slowest tier's sub-index is the
+    ``x``: (n_total, ...) — row r holds the payload for member r of the
+    DP domain, rows ordered slow-major (slowest tier's sub-index is the
     most significant digit, the fastest tier's the least).  A flat
     all-to-all would move every cross-group row point-to-point over the
     slow tier; the hierarchical form exchanges each tier's OWN sub-index
-    starting from the fastest tier, so that by the time a stripe crosses a
-    slow tier it is a single contiguous block and every member of the
+    starting from the fastest tier, so that by the time a stripe crosses
+    a slow tier it is a single contiguous block and every member of the
     faster tiers below carries exactly its 1/members_below share of the
     cross-tier traffic (the pool).  Numerically equivalent to
     ``lax.all_to_all(x, (slowest, ..., fastest), 0, 0)`` at every depth.
-    """
-    fast = normalize_axes(fast_axis)
-    axes = fast if slow_axis is None else fast + (slow_axis,)
-    active = [(a, axis_size(a)) for a in axes if axis_size(a) > 1]
+
+    The slow tier's exchange runs as the schedule's ``SlowChunk``
+    sub-flows: each sub-flow exchanges an equal slice of every
+    destination's payload, issued in leg order (``lane_offset`` rotation)
+    and reassembled by ``SlowChunk.index`` — bitwise identical at every
+    chunk count and offset, since an all-to-all restricted to a payload
+    slice is the same block permutation.  ``leg_log`` receives the legs
+    actually lowered, in schedule order (the battery's contract with
+    ``CostModel.from_schedule``)."""
+    if schedule.kind != "all_to_all":
+        raise ValueError(
+            f"lower_all_to_all needs an all_to_all schedule, got "
+            f"kind={schedule.kind!r}")
+    fast_legs = [l for l in schedule.legs if isinstance(l, AllToAll)]
+    slow = schedule.slow_legs
+    active = [(l.axis, l.size) for l in fast_legs]
+    if slow:
+        active.append((slow[0].axis, slow[0].size))
     if not active:
         return x
-    if len(active) == 1:
-        return lax.all_to_all(x, active[0][0], split_axis=0, concat_axis=0,
-                              tiled=True)
     sizes = [n for _, n in active]
     n_total = 1
     for n in sizes:
@@ -486,10 +503,66 @@ def dfabric_all_to_all(x: jax.Array, fast_axis: Axes,
     # leading dim viewed slow-major: dims ordered (slowest, ..., fastest)
     y = x.reshape(tuple(reversed(sizes)) + rest)
     k = len(active)
-    for i, (a, _) in enumerate(active):  # fastest tier first
+    for i, leg in enumerate(fast_legs):  # fastest tier first
         d = k - 1 - i  # its sub-index dim in the slow-major view
-        y = lax.all_to_all(y, a, split_axis=d, concat_axis=d, tiled=True)
+        y = lax.all_to_all(y, leg.axis, split_axis=d, concat_axis=d,
+                           tiled=True)
+        if leg_log is not None:
+            leg_log.append(leg)
+    if slow:
+        C = len(slow)
+        n_slow = slow[0].size
+        yshape = y.shape
+        yf = y.reshape(n_slow, -1)
+        blk = yf.shape[1] // C
+        outs: List[Optional[jax.Array]] = [None] * C
+        for leg in slow:  # ISSUE order; payload slice picked by index
+            part = lax.slice_in_dim(yf, leg.index * blk,
+                                    (leg.index + 1) * blk, axis=1)
+            outs[leg.index] = lax.all_to_all(part, leg.axis, split_axis=0,
+                                             concat_axis=0, tiled=True)
+            if leg_log is not None:
+                leg_log.append(leg)
+        yf = jnp.concatenate(outs, axis=1) if C > 1 else outs[0]
+        y = yf.reshape(yshape)
     return y.reshape((n_total,) + rest)
+
+
+def dfabric_all_to_all(x: jax.Array, fast_axis: Axes,
+                       slow_axis: Optional[str],
+                       cfg: Optional[SyncConfig] = None,
+                       schedule: Optional[CommSchedule] = None,
+                       leg_log: Optional[List] = None,
+                       lane_offset: int = 0,
+                       staging: Optional[str] = None) -> jax.Array:
+    """All-to-all over the (fast tiers x slow tier) DP domain, one stage
+    per tier — the thin in-trace constructor over
+    :func:`lower_all_to_all` (see its docstring for the payload layout
+    and numerics contract).
+
+    When the planner already built a ``kind="all_to_all"``
+    :class:`CommSchedule` for this exchange (``Planner.plan_all_to_all``),
+    pass it via ``schedule``; otherwise one is built in-trace from
+    ``cfg`` (default: one slow sub-flow) and the live axis sizes —
+    ``lane_offset`` keeps the planner's NIC-pool stagger and ``staging``
+    its memory-pool placement on that path, exactly like
+    :func:`dfabric_all_reduce`."""
+    if schedule is not None and schedule.kind != "all_to_all":
+        raise ValueError(
+            f"dfabric_all_to_all needs an all_to_all schedule, got "
+            f"kind={schedule.kind!r}")
+    fast = normalize_axes(fast_axis)
+    if not _schedule_usable(schedule, x, fast, slow_axis):
+        cfg = cfg or SyncConfig()
+        sizes = {a: axis_size(a) for a in fast}
+        if slow_axis is not None:
+            sizes[slow_axis] = axis_size(slow_axis)
+        schedule = all_to_all_from_axes(fast, slow_axis, cfg, x.shape, sizes)
+        if lane_offset:
+            schedule = schedule.with_lane_offset(lane_offset)
+        if staging is not None:
+            schedule = schedule.with_staging(staging)
+    return lower_all_to_all(schedule, x, leg_log=leg_log)
 
 
 # ---------------------------------------------------------------------------

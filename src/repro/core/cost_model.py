@@ -264,6 +264,15 @@ class CostModel:
         With ``mem=None`` (the default) the estimate is bitwise what it
         was before the memory model existed.
 
+        ``kind="all_to_all"`` schedules price the same way with the
+        exchange volumes of a permutation instead of a reduction: every
+        tier's stage (``AllToAll`` legs and the slow tier's ``SlowChunk``
+        sub-flows alike) moves ``(n_i - 1) / n_i`` of the CURRENT payload
+        once (no doubling — nothing comes back up), the payload never
+        shrinks between legs, and the slow legs keep the full NIC-pool /
+        memory-pool treatment (``granted_lanes`` scaling and the
+        ``max(wire, memory)`` rule).
+
         Note: a flat-strategy schedule is priced as per-tier sequential
         rings (an optimistic flat); the planner keeps using ``flat_ring``
         (the bottleneck-link model) when COMPARING flat against
@@ -289,13 +298,27 @@ class CostModel:
             return Tier(leg.tier, leg.axis, leg.size, t0.bw, t0.latency)
 
         n_chunks = max(len(schedule.slow_legs), 1)
+        # per-member wire traffic of one leg, relative to the payload it
+        # carries: an all-reduce slow leg moves (n-1)/n down AND back up
+        # (xfer=2), an all-to-all stage moves its cross fraction once
+        a2a = schedule.kind == "all_to_all"
+        xfer = 1.0 if a2a else 2.0
         leg_charges: List[LegCharge] = []
         fast_s = slow_s = 0.0
         first_slow = True
         for leg in schedule.legs:
             t = tier_for(leg)
             n = leg.size
-            if isinstance(leg, sched.ReduceScatter):
+            if isinstance(leg, sched.AllToAll):
+                # one hierarchical all-to-all stage: exchanges this tier's
+                # own sub-index — (n-1)/n of the (never-shrinking) payload
+                if n <= 1:
+                    secs = by = 0.0
+                else:
+                    by = (n - 1) / n * payload
+                    secs = by / t.rate + (n - 1) * t.latency
+                fast_s += secs
+            elif isinstance(leg, sched.ReduceScatter):
                 secs = ring_reduce_scatter_time(payload, n, t.rate, t.latency)
                 by = (n - 1) / n * payload if n > 1 else 0.0
                 payload /= max(n, 1)
@@ -330,13 +353,13 @@ class CostModel:
                 if n <= 1:
                     secs = by = 0.0
                 else:
-                    by = 2.0 * (n - 1) / n * (payload / n_chunks) / ratio
+                    by = xfer * (n - 1) / n * (payload / n_chunks) / ratio
                     # ring latency once on the FIRST ISSUED sub-flow (the
                     # lane_offset rotation must not change the total),
                     # then a launch overhead per extra sub-flow (matches
                     # the retired ntier_striped total)
-                    lat = 2.0 * (n - 1) * t.latency if first_slow \
-                        else 2.0 * t.latency
+                    lat = xfer * (n - 1) * t.latency if first_slow \
+                        else xfer * t.latency
                     secs = by / rate + lat
                     if granted_lanes is not None:
                         secs *= max(t.lanes, 1e-30) / granted_lanes

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core.cost_model import CostModel, dtype_itemsize
 from repro.core.nicpool import NicPool
-from repro.core.schedule import CommSchedule, SyncConfig, build_schedule
+from repro.core.schedule import (CommSchedule, SyncConfig, build_all_to_all,
+                                 build_schedule)
 from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
 
 
@@ -94,7 +95,7 @@ class SyncPlan:
         one)::
 
             {"legs": [{"kind": "reduce_scatter" | "psum" | "slow_chunk"
-                               | "all_gather",
+                               | "all_gather" | "all_to_all",
                        "tier": "<tier name>", "axis": "<mesh axis>",
                        "size": <int>,
                        // slow_chunk only:
@@ -107,6 +108,7 @@ class SyncPlan:
              "pipelined": <bool>, "strategy": "<strategy>",
              "lane_offset": <int>,
              "staging": "local" | "pool" | null,
+             "collective": "all_reduce" | "all_to_all",
              "cfg": {<SyncConfig fields>}}
 
         Legs appear in lowering order: reduce-scatters down the fast
@@ -122,6 +124,11 @@ class SyncPlan:
         the slow leg's staging buffers ("local" DRAM channels vs the
         "pool" device interleave — see ``repro.core.mempool``); numerics-
         free like ``lane_offset``, absent/null in pre-mempool plans.
+        ``collective`` is the schedule kind (``CommSchedule.kind``):
+        "all_to_all" schedules (``Planner.plan_all_to_all`` — shuffle /
+        MoE-dispatch exchanges) carry "all_to_all" legs plus slow_chunk
+        sub-flows that split the per-destination payload; absent in
+        pre-all-to-all plans (defaults to "all_reduce" on load).
         ``CommSchedule.from_json`` round-trips this exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
@@ -191,6 +198,18 @@ class Planner:
     def n_fast_tiers(self) -> int:
         return len(self.fast_sizes)
 
+    @property
+    def domain_size(self) -> int:
+        """Member count of the DP domain THIS planner plans for: the
+        product of the ACTIVE (size > 1) fast-tier extents — honoring the
+        ``fast_axis_sizes`` mesh override — times the slow tier's.  This
+        is the row count ``plan_all_to_all`` payloads must carry."""
+        n = int(np.prod([s for s in self.fast_sizes if s > 1])) \
+            if any(s > 1 for s in self.fast_sizes) else 1
+        if self.fabric.depth > 1 and self.fabric.slowest.size > 1:
+            n *= self.fabric.slowest.size
+        return n
+
     def _prefix_prod(self, depth: int) -> int:
         return int(np.prod(self.fast_sizes[:depth])) if depth > 0 else 1
 
@@ -217,14 +236,16 @@ class Planner:
                 return best_dim, depth
         return -1, 0
 
-    def _mem_chunk_cap(self, shard_numel: int) -> int:
+    def _mem_chunk_cap(self, shard_numel: int, xfer: float = 2.0) -> int:
         """Largest slow-leg chunk count worth pricing under the memory
         model.  When memory (not lanes) is the binding slow-leg
         constraint, extra sub-flows cannot speed the leg up — they only
         add one staging-latency tail each — so candidates are clamped to
         keep the summed tails under ~10% of the memory-bound slow time.
         With no memory model (or when lanes bind) the NIC-pool search
-        rules are unchanged."""
+        rules are unchanged.  ``xfer`` is the per-member traffic factor of
+        the slow leg: 2 for the all-reduce walk (down + up), 1 for an
+        all-to-all exchange."""
         spec = self.fabric.mem
         fab = self.fabric
         if spec is None or fab.depth <= 1 or fab.slowest.size <= 1:
@@ -238,10 +259,22 @@ class Planner:
         tail = spec.staging_latency("pool")
         if tail <= 0:
             return self.max_chunks
-        wire = 2.0 * (slow.size - 1) / slow.size * shard_numel \
+        wire = xfer * (slow.size - 1) / slow.size * shard_numel \
             * dtype_itemsize("float32")  # the wire dtype (see _search_section)
         return max(1, min(self.max_chunks,
                           int(0.1 * (wire / mem_rate) / tail)))
+
+    def _staging_candidates(self) -> List[Optional[str]]:
+        """Memory-pool staging placements worth pricing (ordered: "pool"
+        first — the tie-break; see ``_search_section``)."""
+        mem = self.fabric.mem
+        if mem is None:
+            return [None]
+        if mem.placement("pool") == mem.placement("local"):
+            # degenerate pool (e.g. local channels only): both stagings
+            # resolve to the same device set — price once, label honestly
+            return ["pool" if mem.pooled_devices else "local"]
+        return ["pool", "local"]
 
     def _candidate_chunks(self, shard_numel: int,
                           cap: Optional[int] = None) -> List[int]:
@@ -287,15 +320,7 @@ class Planner:
         nbytes = numel * dtype_itemsize(dtype)
         sd, dmax = self._pick_scatter_dim(lshape, avoid)
         strat = self.strategy
-        mem = self.fabric.mem
-        if mem is None:
-            stagings: List[Optional[str]] = [None]
-        elif mem.placement("pool") == mem.placement("local"):
-            # degenerate pool (e.g. local channels only): both stagings
-            # resolve to the same device set — price once, label honestly
-            stagings = ["pool" if mem.pooled_devices else "local"]
-        else:
-            stagings = ["pool", "local"]
+        stagings = self._staging_candidates()
 
         def price(s: CommSchedule) -> float:
             return self.cost.from_schedule(s, mem=True).total_s
@@ -349,6 +374,43 @@ class Planner:
         if s.strategy == "flat" and cfg.strategy != "flat":
             cfg = replace(cfg, strategy="flat", chunks=1)
         return cfg, sd, s
+
+    def plan_all_to_all(self, shape: Tuple[int, ...],
+                        dtype: str = "float32") -> CommSchedule:
+        """Search slow-leg chunk count x staging placement for ONE
+        all-to-all exchange over the DP domain (the §6.2 shuffle / MoE
+        dispatch), pricing each candidate with
+        ``CostModel.from_schedule(mem=True)`` — the ``kind="all_to_all"``
+        twin of ``_search_section``.
+
+        ``shape`` is the per-member payload ``(n_total, per_dest...)``:
+        one row per DP member, rows slow-major (what
+        ``collectives.lower_all_to_all`` lowers).  Chunk feasibility uses
+        the per-slow-row payload the sub-flows actually split; the
+        memory-bound chunk clamp applies with the all-to-all's single-
+        direction wire factor.  The winner carries the staging placement
+        (``CommSchedule.staging``); concurrent exchanges can still be
+        staggered with ``CommSchedule.with_lane_offset`` /
+        ``NicPool.stagger`` like any slow leg."""
+        fab = self.fabric
+        shape = tuple(int(s) for s in shape)
+        numel = int(np.prod(shape))
+        n_slow = fab.slowest.size if fab.depth > 1 else 1
+        row = numel // n_slow if n_slow > 1 else numel
+        cap = self._mem_chunk_cap(numel, xfer=1.0)
+        cands: List[Tuple[float, CommSchedule]] = []
+        for c in self._candidate_chunks(row, cap):
+            cfg = SyncConfig(strategy="hier_striped", chunks=c,
+                             pipeline=False)
+            s0 = build_all_to_all(fab, cfg, shape, dtype,
+                                  fast_sizes=self.fast_sizes)
+            for stg in self._staging_candidates():
+                s = s0.with_staging(stg)
+                cands.append((self.cost.from_schedule(s, mem=True).total_s,
+                              s))
+        # first candidate at the minimum wins: more chunks only when
+        # strictly cheaper, "pool" staging over "local" on ties
+        return min(cands, key=lambda t: t[0])[1]
 
     def _section_estimate(self, sec: Section):
         """Cost estimate of one section under its chosen schedule; returns

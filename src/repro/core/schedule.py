@@ -14,7 +14,16 @@ list of **legs** built once from ``(FabricSpec, SyncConfig, shape)``:
                               or one leg of a flat plan); may carry a
                               mid-tier codec,
   * ``SlowChunk(i, codec)`` — one sub-flow of the slowest (NIC-pool) leg,
-  * ``AllGather(tier)``     — gather one fast tier back (up phase).
+  * ``AllGather(tier)``     — gather one fast tier back (up phase),
+  * ``AllToAll(tier)``      — exchange one tier's own sub-index (one stage
+                              of a hierarchical all-to-all; only appears
+                              in ``kind="all_to_all"`` schedules).
+
+A schedule has a ``kind``: ``"all_reduce"`` (the gradient-sync walk above)
+or ``"all_to_all"`` (the §6.2 shuffle / MoE-dispatch exchange built by
+:func:`build_all_to_all` — ``AllToAll`` stages down the fast tiers, the
+slow tier's exchange chunked into ``SlowChunk`` sub-flows that carry
+``lane_offset`` / ``staging`` exactly like the all-reduce slow leg).
 
 Three consumers walk the SAME leg list:
 
@@ -135,9 +144,25 @@ class AllGather:
     kind = "all_gather"
 
 
-Leg = Union[ReduceScatter, Psum, SlowChunk, AllGather]
+@dataclass(frozen=True)
+class AllToAll:
+    """Exchange one tier's OWN sub-index — one stage of the hierarchical
+    all-to-all (``kind="all_to_all"`` schedules only).  Stages run fastest
+    tier first, so a stripe crossing a slower tier is one contiguous block
+    and every member below carries its 1/members_below share; the local
+    payload size never changes (an all-to-all is a permutation)."""
 
-_LEG_KINDS = {cls.kind: cls for cls in (ReduceScatter, Psum, SlowChunk, AllGather)}
+    tier: str
+    axis: str
+    size: int
+
+    kind = "all_to_all"
+
+
+Leg = Union[ReduceScatter, Psum, SlowChunk, AllGather, AllToAll]
+
+_LEG_KINDS = {cls.kind: cls for cls in (ReduceScatter, Psum, SlowChunk,
+                                        AllGather, AllToAll)}
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +204,12 @@ class CommSchedule:
     model place the flow's memory traffic by it, the executor treats it
     as an annotation (JAX memory-kind offload is gated in
     ``repro.core.memory_pool``).
+
+    ``kind`` selects the collective the legs describe: ``"all_reduce"``
+    (lowered by ``collectives.lower_all_reduce``) or ``"all_to_all"``
+    (``collectives.lower_all_to_all`` — ``shape[0]`` is the DP-domain row
+    count, rows ordered slow-major, and ``SlowChunk`` legs split the
+    per-destination payload instead of the reduced shard).
     """
 
     legs: Tuple[Leg, ...]
@@ -191,6 +222,7 @@ class CommSchedule:
     cfg: SyncConfig = field(default_factory=SyncConfig)
     lane_offset: int = 0
     staging: Optional[str] = None
+    kind: str = "all_reduce"
 
     def __post_init__(self):
         # validated HERE (not only in with_staging) so a hand-edited /
@@ -199,6 +231,15 @@ class CommSchedule:
         if self.staging not in (None, "local", "pool"):
             raise ValueError(
                 f"staging must be local|pool|None: {self.staging!r}")
+        if self.kind not in ("all_reduce", "all_to_all"):
+            raise ValueError(
+                f"kind must be all_reduce|all_to_all: {self.kind!r}")
+        if self.kind == "all_to_all" and self.pipelined:
+            # no executor implements an overlapped all-to-all (there is
+            # no fast up-phase to hide slow chunks behind), so a
+            # pipelined flag here would make the cost model and the
+            # simulator credit an overlap the lowering never delivers
+            raise ValueError("all_to_all schedules cannot be pipelined")
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -282,6 +323,8 @@ class CommSchedule:
             elif isinstance(l, SlowChunk):
                 c = f",{l.codec}" if l.codec else ""
                 parts.append(f"slow[{l.index}/{l.chunks}{c}]")
+            elif isinstance(l, AllToAll):
+                parts.append(f"a2a[{l.axis}x{l.size}]")
             else:
                 parts.append(f"ag[{l.axis}x{l.size}]")
         mode = "pipelined" if self.pipelined else "sequential"
@@ -315,6 +358,7 @@ class CommSchedule:
             "pipelined": self.pipelined, "strategy": self.strategy,
             "lane_offset": self.lane_offset,
             "staging": self.staging,
+            "collective": self.kind,
             "cfg": {"strategy": c.strategy, "chunks": c.chunks,
                     "codec": c.codec, "codec_block": c.codec_block,
                     "codec_k_frac": c.codec_k_frac,
@@ -346,7 +390,8 @@ class CommSchedule:
                    chunks=d["chunks"], pipelined=d["pipelined"],
                    strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]),
                    lane_offset=int(d.get("lane_offset", 0)),
-                   staging=d.get("staging"))
+                   staging=d.get("staging"),
+                   kind=d.get("collective", "all_reduce"))
 
 
 # ---------------------------------------------------------------------------
@@ -520,3 +565,101 @@ def build_schedule(fabric: FabricSpec, cfg: SyncConfig,
         names[slow_axis] = fabric.slowest.name
     return schedule_from_axes(axes, slow_axis, cfg, shape, scatter_dim,
                               sizes, dtype, tier_names=names)
+
+
+# ---------------------------------------------------------------------------
+# All-to-all builder (kind="all_to_all": shuffle / MoE-dispatch traffic)
+# ---------------------------------------------------------------------------
+
+
+def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
+                         cfg: SyncConfig, shape: Sequence[int],
+                         sizes: Mapping[str, int], dtype: str = "float32",
+                         tier_names: Optional[Mapping[str, str]] = None
+                         ) -> CommSchedule:
+    """Build the all-to-all :class:`CommSchedule` from raw axis names +
+    sizes (the generic core behind :func:`build_all_to_all`, fed live
+    ``lax.axis_size`` results by the in-trace entry point).
+
+    ``shape`` is the LOCAL payload ``(n_total, ...)``: row *r* holds the
+    sub-payload destined for member *r* of the DP domain, rows ordered
+    slow-major (the slowest tier's sub-index is the most significant
+    digit).  One ``AllToAll`` leg per active fast tier (fastest first),
+    then the slow tier's exchange chunked into ``cfg.chunks``
+    ``SlowChunk`` sub-flows — each sub-flow carries an equal slice of
+    every destination's payload, so chunking is a pure split of the wire
+    transfer (the builder clamps ``chunks`` to divide the per-slow-row
+    payload).  Unlike the all-reduce walk there is no down/up phase and
+    the payload never shrinks; schedules are never pipelined.
+
+    Codecs do not apply: an all-to-all moves payload verbatim (there is
+    no reduction for error feedback to absorb quantization into), so a
+    ``cfg`` carrying a codec is rejected."""
+    if cfg.codec is not None or cfg.mid_codec is not None:
+        raise ValueError(
+            "all-to-all schedules cannot carry a codec (no reduction to "
+            f"absorb quantization error): codec={cfg.codec!r} "
+            f"mid_codec={cfg.mid_codec!r}")
+    names = dict(tier_names or {})
+    shape = tuple(int(s) for s in shape)
+    numel = 1
+    for s in shape:
+        numel *= s
+
+    def tname(axis: str) -> str:
+        return names.get(axis, axis)
+
+    active = [(a, int(sizes.get(a, 1))) for a in tuple(fast_axes)
+              if int(sizes.get(a, 1)) > 1]
+    n_slow = int(sizes.get(slow_axis, 1)) if slow_axis is not None else 1
+    n_total = n_slow if n_slow > 1 else 1
+    for _, n in active:
+        n_total *= n
+    if n_total > 1 and (not shape or shape[0] != n_total):
+        raise ValueError(
+            f"all-to-all payload must carry one row per DP member: "
+            f"shape {shape} vs {n_total} members")
+
+    legs: list = [AllToAll(tname(a), a, n) for a, n in active]
+    chunks = 1
+    if n_slow > 1:
+        row = numel // n_slow  # per-slow-sub-index payload the chunks split
+        chunks = max(int(cfg.chunks), 1)
+        while chunks > 1 and row % chunks != 0:
+            chunks -= 1
+        legs += [SlowChunk(i, chunks, None, tname(slow_axis), slow_axis,
+                           n_slow) for i in range(chunks)]
+    return CommSchedule(tuple(legs), shape, dtype, 0, chunks, False,
+                        "all_to_all", cfg, kind="all_to_all")
+
+
+def build_all_to_all(fabric: FabricSpec, cfg: SyncConfig,
+                     shape: Sequence[int], dtype: str = "float32",
+                     fast_axes: Optional[Sequence[str]] = None,
+                     fast_sizes: Optional[Sequence[int]] = None
+                     ) -> CommSchedule:
+    """Build the all-to-all schedule for one exchange from ``(FabricSpec,
+    SyncConfig, shape)`` — the ``kind="all_to_all"`` twin of
+    :func:`build_schedule`; same ``fast_axes`` / ``fast_sizes`` escape
+    hatch for meshes that differ from the hardware description."""
+    fab_fast = list(fabric.fast_tiers)
+    axes = list(fast_axes) if fast_axes is not None \
+        else [t.axis for t in fab_fast]
+    if fast_sizes is not None:
+        sizes_list = [int(s) for s in fast_sizes]
+    else:
+        sizes_list = [t.size for t in fab_fast]
+    if len(axes) != len(sizes_list):
+        while len(axes) < len(sizes_list):
+            axes.append(f"fast{len(axes)}")
+        axes = axes[:len(sizes_list)]
+    sizes = dict(zip(axes, sizes_list))
+    names = {}
+    for i, a in enumerate(axes):
+        names[a] = fab_fast[i].name if i < len(fab_fast) else a
+    slow_axis = fabric.slow_axis
+    if slow_axis is not None:
+        sizes[slow_axis] = fabric.slowest.size
+        names[slow_axis] = fabric.slowest.name
+    return all_to_all_from_axes(axes, slow_axis, cfg, shape, sizes, dtype,
+                                tier_names=names)

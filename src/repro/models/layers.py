@@ -376,6 +376,52 @@ def apply_mlp(arch: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def moe_capacity(tokens: int, top_k: int, num_experts: int,
+                 capacity_factor: float) -> int:
+    """Per-group expert capacity ``C`` — THE formula the dispatch pads
+    to, shared with the dispatch planner (``moe_dispatch_schedule``) so
+    the planned per-expert flow sizes are exactly what ``_moe_dispatch``
+    moves."""
+    C = int(max(8, math.ceil(tokens * top_k / num_experts
+                             * capacity_factor)))
+    return min(C, tokens)
+
+
+def moe_dispatch_schedule(arch: ArchConfig, tokens_per_member: int,
+                          planner, groups: int = 1):
+    """Planner-searched all-to-all schedule for the MoE dispatch — the
+    §Perf cell C traffic as per-expert NIC-pool / memory-pool flows.
+
+    The dispatch buffer is ``(G, E, C, d)`` with ``C`` from
+    :func:`moe_capacity`; with the experts spread over the ``n`` members
+    of the planner's DP domain (expert parallelism), member *r* owns
+    ``E // n`` expert slabs and every member sends it ``C * d`` elements
+    per owned expert per group — so row *r* of the exchange payload is
+    ``groups * (E // n) * C * d`` elements and the slow-tier sub-flows
+    the simulator replays are exactly the per-expert (per-destination)
+    flows.  ``planner`` is a :class:`repro.core.planner.Planner`; the
+    result is a ``kind="all_to_all"`` :class:`CommSchedule` with the
+    chunk count and staging placement searched per
+    ``Planner.plan_all_to_all``, and ``apply_moe(dispatch_schedule=...)``
+    guards against capacity drift."""
+    moe = arch.moe
+    tokens_per_group = tokens_per_member // max(groups, 1)
+    C = moe_capacity(tokens_per_group, moe.top_k, moe.num_experts,
+                     moe.capacity_factor)
+    n = planner.domain_size  # the domain the planner actually plans for
+    if n > 1 and moe.num_experts % n != 0:
+        # a floored E//n would silently drop part of the dispatch
+        # traffic from the plan (and the drift guard, built from the
+        # same division, could never catch it)
+        raise ValueError(
+            f"num_experts={moe.num_experts} does not divide over the "
+            f"{n}-member DP domain — expert parallelism needs "
+            f"E % members == 0 to plan per-expert flows")
+    experts_per_member = max(moe.num_experts // max(n, 1), 1)
+    shape = (n, max(groups, 1) * experts_per_member * C * arch.d_model)
+    return planner.plan_all_to_all(shape)
+
+
 def init_moe(arch: ArchConfig, key, dtype) -> Params:
     moe = arch.moe
     d, f, E = arch.d_model, moe.expert_d_ff, moe.num_experts
@@ -394,7 +440,8 @@ def init_moe(arch: ArchConfig, key, dtype) -> Params:
 
 
 def apply_moe(arch: ArchConfig, p: Params, x: jax.Array, groups: int = 1,
-              dispatch_spec=None) -> Tuple[jax.Array, jax.Array]:
+              dispatch_spec=None,
+              dispatch_schedule=None) -> Tuple[jax.Array, jax.Array]:
     """Returns (output, aux_load_balance_loss). x: (B, S, d).
 
     ``groups`` > 1 splits the tokens into independent dispatch groups
@@ -403,12 +450,46 @@ def apply_moe(arch: ArchConfig, p: Params, x: jax.Array, groups: int = 1,
     each DP shard — no cross-pod incast from global-cumsum dependencies
     (§Perf, the MoE NIC-pool fix).  ``dispatch_spec``: optional
     (dp_spec_entry, tp_axis) used to pin the dispatched (G, E, C, d)
-    buffers to group-x-expert sharding."""
+    buffers to group-x-expert sharding.
+
+    ``dispatch_schedule``: the planner-searched ``kind="all_to_all"``
+    :class:`~repro.core.schedule.CommSchedule` for this layer's dispatch
+    (:func:`moe_dispatch_schedule` — per-expert flow sizes from the
+    capacity ``C``), the cell C plan the cost model prices and
+    ``repro.sim.fabric_sim`` replays through the NIC/memory pools.  The
+    lowering itself is placement-free on this backend (the vmapped
+    per-group dispatch — see the NOTE below), so here the schedule is a
+    verified annotation: a schedule whose payload does not match the
+    dispatch buffer actually built (capacity drift — tokens, top-k or
+    capacity_factor changed after planning) is rejected loudly instead of
+    silently mispricing cell C."""
     moe = arch.moe
     B, S, d = x.shape
     T = B * S
     xt = x.reshape(T, d)
     G = groups if (groups > 1 and T % groups == 0) else 1
+    if dispatch_schedule is not None:
+        if dispatch_schedule.kind != "all_to_all":
+            raise ValueError(
+                f"dispatch_schedule must be an all_to_all schedule, got "
+                f"kind={dispatch_schedule.kind!r}")
+        C = moe_capacity(T // G, moe.top_k, moe.num_experts,
+                         moe.capacity_factor)
+        n = int(dispatch_schedule.shape[0])
+        if n > 1 and moe.num_experts % n != 0:
+            raise ValueError(
+                f"num_experts={moe.num_experts} does not divide over the "
+                f"schedule's {n}-member domain — per-expert flows need "
+                f"E % members == 0")
+        epm = max(moe.num_experts // max(n, 1), 1)
+        want = n * G * epm * C * d
+        if dispatch_schedule.numel != want:
+            raise ValueError(
+                f"dispatch_schedule planned for a different dispatch "
+                f"buffer: schedule carries {dispatch_schedule.numel} "
+                f"elements, this layer dispatches {want} "
+                f"(G={G}, E={moe.num_experts}, C={C}, d={d}, "
+                f"members={n}) — rebuild with moe_dispatch_schedule()")
     # NOTE (§Perf): the vmapped per-group dispatch partitions better than
     # both a flat group-global gather and explicitly-constrained dispatch
     # buffers (2.5x vs 0.4x / 0.65x on deepseek prefill_32k) — XLA keeps
@@ -448,9 +529,9 @@ def _moe_dispatch(arch: ArchConfig, p: Params, xg: jax.Array,
     ce = jnp.mean(jax.nn.one_hot(topk_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
     aux = E * jnp.sum(me * ce)
 
-    # capacity per group
-    C = int(max(8, math.ceil(Tl * k / E * moe.capacity_factor)))
-    C = min(C, Tl)
+    # capacity per group (the shared formula the dispatch planner sizes
+    # per-expert flows from)
+    C = moe_capacity(Tl, k, E, moe.capacity_factor)
 
     flat_e = topk_idx.reshape(G, Tl * k)
     flat_g = gate_vals.reshape(G, Tl * k)

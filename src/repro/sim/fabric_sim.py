@@ -34,6 +34,18 @@ flows** to the shared NIC pool:
     so a single tenant on an uncontended pool matches
     ``ScheduleEstimate.total`` (the sim/cost parity contract).
 
+All-to-all schedules (``CommSchedule.kind == "all_to_all"``, the §6.2
+shuffle / MoE-dispatch traffic) replay their fast ``AllToAll`` stages on
+the private engine like any fast leg, but each slow ``SlowChunk``
+sub-flow expands into **per-destination flows**: one
+:class:`~repro.core.nicpool.LaneRequest` (and, under a memory model, one
+:class:`~repro.core.mempool.MemRequest`) per remote slow-tier member —
+the per-expert flows of the MoE dispatch.  The destinations split the
+leg's priced work and caps evenly, so one uncontended tenant still
+matches ``CostModel.from_schedule`` exactly, while θ-way shuffle
+contention, lane pinning/stagger and staging placement are arbitrated by
+the pools instead of assumed.
+
 Memory co-simulation (the paper's §4.1 pillar)
 ----------------------------------------------
 When a memory pool is modeled (``fabric.mem`` or an explicit ``mem=``),
@@ -163,11 +175,11 @@ class _Task:
     __slots__ = ("kind", "dur", "work", "deps", "legs", "round", "chunk",
                  "lane", "state", "start", "finish", "flow_id",
                  "mem_bytes", "mem_cap", "staging", "mem_flow_id",
-                 "wire_done", "mem_done", "nic_lanes")
+                 "wire_done", "mem_done", "nic_lanes", "lane_share")
 
     def __init__(self, kind, *, dur=0.0, work=0.0, deps=(), legs=(),
                  rnd=0, chunk=-1, lane=None, mem_bytes=0.0, mem_cap=None,
-                 staging=None):
+                 staging=None, lane_share=1.0):
         self.kind = kind  # "local" | "pool"
         self.dur = dur
         self.work = work
@@ -189,6 +201,11 @@ class _Task:
         self.wire_done = False
         self.mem_done = mem_bytes <= 0.0
         self.nic_lanes = 0.0  # mean granted lanes of the completed flow
+        # a per-destination sub-flow's fraction of its leg's lane budget
+        # (1/ndest for all-to-all slow legs, 1.0 otherwise): nominal and
+        # max_lanes caps are scaled by it at submit time so the ndest
+        # flows together never exceed what the ONE leg was entitled to
+        self.lane_share = lane_share
 
 
 def _is_pool_leg(leg, fab: FabricSpec) -> bool:
@@ -250,6 +267,7 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
             tail = head
             continue
         charges = est.leg_charges
+        a2a = sched.kind == "all_to_all"
         slow = [lc for lc in charges if _is_pool_leg(lc.leg, fab)]
         if sched.pipelined and sched.chunks > 1 and slow:
             # the two-stage chunk pipeline the cost model credits
@@ -280,14 +298,33 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
             for lc in charges:
                 if _is_pool_leg(lc.leg, fab):
                     chunk = getattr(lc.leg, "index", 0)
-                    tasks.append(_Task(
-                        "pool", work=lc.seconds * nominal, deps=prev,
-                        legs=[(lc.leg, lc.seconds)], rnd=r, chunk=chunk,
-                        lane=lane_of(chunk), **mem_of(lc)))
+                    # an all-to-all slow sub-flow is REALLY (n-1)
+                    # point-to-point transfers, one per destination
+                    # member (per-expert flows in the MoE dispatch):
+                    # replay each as its own lane/memory flow so θ-way
+                    # shuffle contention is arbitrated, not analytic.
+                    # The destinations split the leg's work and caps
+                    # evenly, so an uncontended leg still completes in
+                    # exactly its priced time (sim/cost parity).
+                    ndest = max(int(getattr(lc.leg, "size", 1)) - 1, 1) \
+                        if a2a else 1
+                    mk = mem_of(lc)
+                    if mk and ndest > 1:
+                        mk = dict(mk, mem_bytes=mk["mem_bytes"] / ndest,
+                                  mem_cap=mk["mem_cap"] / ndest)
+                    ids = []
+                    for _ in range(ndest):
+                        tasks.append(_Task(
+                            "pool", work=lc.seconds * nominal / ndest,
+                            deps=prev, legs=[(lc.leg, lc.seconds / ndest)],
+                            rnd=r, chunk=chunk, lane=lane_of(chunk),
+                            lane_share=1.0 / ndest, **mk))
+                        ids.append(len(tasks) - 1)
+                    prev = ids
                 else:
                     tasks.append(_Task("local", dur=lc.seconds, deps=prev,
                                        legs=[(lc.leg, lc.seconds)], rnd=r))
-                prev = [len(tasks) - 1]
+                    prev = [len(tasks) - 1]
             tail = prev
     return tasks
 
@@ -425,10 +462,14 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                         and deps_done(ti, task):
                     task.state = "running"
                     task.start = t
+                    share = task.lane_share
                     task.flow_id = pool.submit(LaneRequest(
                         tenant=tn.name, work=task.work, arrive=t,
-                        lanes=(fab.slowest.lanes if fab.depth > 1 else 1.0),
-                        max_lanes=tn.max_lanes, priority=tn.priority,
+                        lanes=(fab.slowest.lanes if fab.depth > 1
+                               else 1.0) * share,
+                        max_lanes=(tn.max_lanes * share
+                                   if tn.max_lanes is not None else None),
+                        priority=tn.priority,
                         lane=task.lane, tag=task.legs[0][0]), t)
                     flows[task.flow_id] = (ti, idx)
                     submit_mem(ti, idx, task, t)

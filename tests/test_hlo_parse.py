@@ -1,0 +1,131 @@
+"""Units for ``repro.roofline.hlo_parse`` — the collective-bytes parser.
+
+Canned (SPMD-partitioned-style) HLO text exercises the whole pipeline:
+computation splitting, replica-group parsing (explicit and iota formats),
+ici/dcn tier classification, ring wire-byte factors, and — the
+EXPERIMENTS.md §Roofline caveat — the while-body trip-count correction
+that undoes ``cost_analysis``'s scan undercount (a loop body is counted
+ONCE by XLA's analysis; the parser multiplies by the recovered trip
+count).
+"""
+import pytest
+
+from repro.roofline.hlo_parse import (CollectiveOp, _parse_replica_groups,
+                                      _shape_bytes, classify_groups,
+                                      parse_collectives)
+
+# A scan-of-8-steps module: the all-gather lives in the while BODY (so a
+# naive reader — or cost_analysis — sees it once), the all-reduce in the
+# entry.  chips_per_pod=2: devices {0,1} are pod 0, {2,3} pod 1.
+HLO = """\
+HloModule canned
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[64])) -> (s32[], f32[256]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[64] get-tuple-element(%p), index=1
+  %ag = f32[256]{0} all-gather(%x), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %cp = f32[64]{0} collective-permute(%x), source_target_pairs={{0,2},{1,3}}, replica_groups={{0,2},{1,3}}
+  ROOT %t = (s32[], f32[256]) tuple(%iv, %ag)
+}
+
+%cond (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(8)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024] parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %a2a = f32[1024]{0} all-to-all(%ar), replica_groups={{0,2},{1,3}}, dimensions={0}
+  %w = (s32[], f32[256]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"8"}}
+  ROOT %out = f32[1024] get-tuple-element(%w), index=1
+}
+"""
+
+
+@pytest.fixture(scope="module")
+def summary():
+    return parse_collectives(HLO, chips_per_pod=2)
+
+
+def test_finds_all_collectives(summary):
+    kinds = sorted(o.kind for o in summary.ops)
+    assert kinds == ["all-gather", "all-reduce", "all-to-all",
+                     "collective-permute"]
+
+
+def test_while_trip_count_corrects_scan_undercount(summary):
+    """The §Roofline caveat: a scan body is counted once by
+    cost_analysis; ops inside the while body must be multiplied by the
+    known_trip_count (8), entry ops by 1."""
+    by_kind = {o.kind: o for o in summary.ops}
+    assert by_kind["all-gather"].multiplier == 8
+    assert by_kind["collective-permute"].multiplier == 8
+    assert by_kind["all-reduce"].multiplier == 1
+    # wire bytes scale with the multiplier: AG moves (n-1)/n of the
+    # gathered 1 KiB buffer, 8 times
+    ag = by_kind["all-gather"]
+    assert ag.bytes_payload == 256 * 4
+    assert ag.wire_bytes == pytest.approx(0.5 * 1024 * 8)
+
+
+def test_trip_count_fallback_from_condition_constant():
+    """Without backend_config the trip count falls back to the largest
+    constant compared against in the loop condition."""
+    hlo = HLO.replace(', backend_config={"known_trip_count":{"n":"8"}}', "")
+    s = parse_collectives(hlo, chips_per_pod=2)
+    ag = next(o for o in s.ops if o.kind == "all-gather")
+    assert ag.multiplier == 8
+
+
+def test_tier_classification(summary):
+    by_kind = {o.kind: o for o in summary.ops}
+    assert by_kind["all-gather"].tier == "ici"     # {{0,1},{2,3}} in-pod
+    assert by_kind["all-reduce"].tier == "dcn"     # {{0,1,2,3}} crosses
+    assert by_kind["all-to-all"].tier == "dcn"     # {{0,2},{1,3}} crosses
+    assert summary.count("ici") == 8               # the 8 unrolled AGs
+    # per-tier wire-byte accounting only sums that tier
+    assert summary.wire_bytes("ici") == pytest.approx(0.5 * 1024 * 8)
+    assert summary.wire_bytes() > summary.wire_bytes("ici")
+
+
+def test_wire_byte_factors(summary):
+    """Ring factors: AR 2(n-1)/n, AG/A2A (n-1)/n, permute 1."""
+    by_kind = {o.kind: o for o in summary.ops}
+    assert by_kind["all-reduce"].wire_bytes == \
+        pytest.approx(2.0 * 3 / 4 * 4096)
+    assert by_kind["all-to-all"].wire_bytes == pytest.approx(0.5 * 4096)
+    assert by_kind["collective-permute"].wire_bytes == \
+        pytest.approx(64 * 4 * 8)
+
+
+def test_replica_group_iota_format():
+    groups = _parse_replica_groups("[2,2]<=[4]")
+    assert groups == [[0, 1], [2, 3]]
+    groups = _parse_replica_groups("[2,2]<=[2,2]T(1,0)")
+    assert groups == [[0, 2], [1, 3]]
+    assert classify_groups([[0, 1], [2, 3]], chips_per_pod=2) == "ici"
+    assert classify_groups([[0, 2], [1, 3]], chips_per_pod=2) == "dcn"
+    assert classify_groups([[0, 1], [0, 2]], chips_per_pod=2) == "both"
+
+
+def test_shape_bytes_tuples_and_unknown_dtypes():
+    assert _shape_bytes("f32[128]") == 512
+    assert _shape_bytes("(s32[], f32[64])") == 4 + 256
+    assert _shape_bytes("bf16[8,8]") == 128
+    assert _shape_bytes("token[]") == 0  # unknown dtype ignored
+
+
+def test_by_kind_rollup(summary):
+    rolled = summary.by_kind()
+    assert rolled["all-gather:ici"] == pytest.approx(0.5 * 1024 * 8)
+    assert sum(rolled.values()) == pytest.approx(summary.wire_bytes())

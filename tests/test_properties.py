@@ -12,6 +12,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.compression import Int8Codec, TopKCodec
 from repro.core.cost_model import CostModel
 from repro.core.planner import Planner
+from repro.core.schedule import (AllToAll, SlowChunk, SyncConfig,
+                                 all_to_all_from_axes)
 from repro.core.topology import TwoTierTopology
 
 TOPO = TwoTierTopology()
@@ -105,6 +107,122 @@ def test_more_nics_never_slower(nbytes, lanes):
     t1 = CostModel(TOPO.replace(dcn_lanes=1.0)).hierarchical(nbytes).total_s
     t2 = CostModel(TOPO.replace(dcn_lanes=float(lanes))).hierarchical(nbytes).total_s
     assert t2 <= t1 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical all-to-all (dfabric_all_to_all's stage walk)
+# ---------------------------------------------------------------------------
+#
+# A numpy model of lax.all_to_all's global semantics drives the SAME leg
+# list ``collectives.lower_all_to_all`` walks (built by
+# ``all_to_all_from_axes``), so the slow-major row-ordering and stage-dim
+# arithmetic are checked over RANDOM tier sizes — depths/extents no
+# 8-device battery mesh can reach.  State: G[(mesh coords slowest-first)
+# + (row,) + rest] = each member's local payload; one tier's exchange is
+# the block transpose of that tier's member axis with its own row
+# sub-index in the slow-major view.
+
+
+def _np_stage(G, mesh_shape, pos):
+    """all_to_all over mesh axis ``pos`` (slowest-first index), split ==
+    concat == that axis's own sub-index of the row dim."""
+    k = len(mesh_shape)
+    rest = G.shape[k + 1:]
+    H = G.reshape(*mesh_shape, *mesh_shape, *rest)  # rows slow-major
+    return np.swapaxes(H, pos, k + pos).reshape(G.shape)
+
+
+def _np_flat(G, mesh_shape):
+    """One all_to_all over the JOINT (slowest, ..., fastest) domain."""
+    k = len(mesh_shape)
+    rest = G.shape[k + 1:]
+    H = G.reshape(*mesh_shape, *mesh_shape, *rest)
+    perm = list(range(k, 2 * k)) + list(range(k)) \
+        + list(range(2 * k, H.ndim))
+    return H.transpose(perm).reshape(G.shape)
+
+
+def _np_lower(G, mesh_shape, sched):
+    """Walk the schedule's legs in the numpy model (fastest tier first;
+    every SlowChunk sub-flow exchanges the slow axis once — the chunked
+    lowering is the same permutation per payload slice)."""
+    if not sched.legs:  # fully degenerate domain: identity
+        return G
+    k = len(mesh_shape)
+    fast = [l for l in sched.legs if isinstance(l, AllToAll)]
+    n_stages = len(fast) + (1 if sched.slow_legs else 0)
+    assert n_stages == k, (sched.legs, mesh_shape)
+    for i in range(len(fast)):
+        G = _np_stage(G, mesh_shape, k - 1 - i)
+    if sched.slow_legs:
+        G = _np_stage(G, mesh_shape, 0)
+    return G
+
+
+def _a2a_case(draw_sizes, seed, rest=2):
+    """(mesh_shape slowest-first, schedule, payload G) for random sizes."""
+    fast_sizes = [n for n in draw_sizes[:-1] if n > 1]  # fastest first
+    slow = draw_sizes[-1]
+    sizes = {f"f{i}": n for i, n in enumerate(fast_sizes)}
+    sizes["s"] = slow
+    sched = all_to_all_from_axes(
+        tuple(f"f{i}" for i in range(len(fast_sizes))),
+        "s" if slow > 1 else None,
+        SyncConfig(chunks=1), (int(np.prod([n for n in draw_sizes if n > 1],
+                                           dtype=np.int64)), rest),
+        sizes)
+    mesh_shape = tuple(([slow] if slow > 1 else [])
+                       + [n for n in reversed(fast_sizes)])
+    if not mesh_shape:
+        mesh_shape = (1,)
+    n_total = int(np.prod(mesh_shape))
+    rng = np.random.default_rng(seed)
+    G = rng.integers(0, 1 << 20, size=mesh_shape + (n_total, rest))
+    return mesh_shape, sched, G
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=1, max_size=4),
+       st.integers(0, 2**31 - 1))
+def test_all_to_all_slow_major_matches_flat(sizes, seed):
+    """The hierarchical stage walk == one flat all_to_all over the joint
+    domain — the slow-major row-ordering invariant, at random tier sizes
+    and depths (bitwise: pure index permutation)."""
+    mesh_shape, sched, G = _a2a_case(sizes, seed)
+    np.testing.assert_array_equal(_np_lower(G, mesh_shape, sched),
+                                  _np_flat(G, mesh_shape))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 4), min_size=1, max_size=4),
+       st.integers(0, 2**31 - 1))
+def test_all_to_all_inverse_of_itself(sizes, seed):
+    """With split == concat (dim 0 both ways), an all-to-all is its own
+    inverse — swapping split/concat is the identity transformation, so
+    applying the schedule twice returns every payload home."""
+    mesh_shape, sched, G = _a2a_case(sizes, seed)
+    once = _np_lower(G, mesh_shape, sched)
+    np.testing.assert_array_equal(_np_lower(once, mesh_shape, sched), G)
+    # the flat reference agrees with itself too
+    np.testing.assert_array_equal(_np_flat(_np_flat(G, mesh_shape),
+                                           mesh_shape), G)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(2, 4), min_size=2, max_size=3),
+       st.integers(0, 2**31 - 1))
+def test_all_to_all_legs_cover_domain_once(sizes, seed):
+    """Builder invariants at random sizes: one AllToAll leg per active
+    fast tier (fastest first), slow sub-flow indices a permutation of
+    range(chunks), and the leg sizes multiply to the row count."""
+    mesh_shape, sched, _ = _a2a_case(sizes, seed)
+    fast = [l for l in sched.legs if isinstance(l, AllToAll)]
+    n = int(np.prod([l.size for l in fast], dtype=np.int64))
+    slow = sched.slow_legs
+    if slow:
+        n *= slow[0].size
+        assert sorted(l.index for l in slow) == list(range(len(slow)))
+    assert n == sched.shape[0] or (n == 1 and sched.shape[0] >= 1)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,126 @@
+"""Beyond-paper figure: multi-path slow legs — Ethernet + CXL shortcut.
+
+The paper's title promises a CXL-Ethernet *hybrid*; this figure stripes
+ONE slow-tier transfer across both resource classes at once
+(``SyncConfig.path_split``): a fraction of the slow sub-flows reroutes
+onto a declared CXL shortcut (``FabricSpec.paths``) while the rest stay
+on the Ethernet pool, and the two lane groups drain concurrently.
+
+Four views, all on the paper prototype fabric with the fast tier idle:
+
+  * **split-ratio sweep**: the priced total and the simulated makespan
+    at cxl fractions {0, 1/4, 1/2, 3/4, 1}, sequential and pipelined —
+    sim-vs-price parity is ASSERTED < 1% at every ratio (the per-path
+    ``sim == price`` contract), and the 0%-cxl degenerate is asserted
+    bitwise-identical to the same schedule built and priced on the
+    path-free fabric;
+  * **planner**: the split ratio ``Planner`` actually picks when the
+    fabric declares the shortcut, vs the eth-only plan — the end-to-end
+    all-reduce win (simulated makespans);
+  * **co-arbitration**: θ=2 tenants replaying the SAME split schedule —
+    each route is contended independently, priced with a per-path
+    ``granted_lanes`` mapping;
+  * **all-to-all**: the planner's routed shuffle exchange vs eth-only.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.nicpool import NicPool
+from repro.core.planner import Planner
+from repro.core.schedule import SyncConfig, build_schedule
+from repro.core.topology import (as_fabric, cxl_shortcut_path,
+                                 paper_prototype_topology)
+from repro.sim.fabric_sim import Tenant, simulate
+
+NBYTES = 64 * 2**20
+SMOKE_NBYTES = 1 * 2**20
+RATIOS = (0.0, 0.25, 0.5, 0.75, 1.0)
+CHUNKS = 4
+
+
+def run(smoke: bool = False):
+    rows = []
+    nbytes = SMOKE_NBYTES if smoke else NBYTES
+    numel = nbytes // 4
+    fab0 = as_fabric(paper_prototype_topology())
+    fab = fab0.with_paths(cxl_shortcut_path())
+    cm = CostModel(fab)
+
+    def sched_at(frac: float, pipeline: bool, fabric=fab):
+        split = (("cxl", frac),) if frac > 0 else None
+        cfg = SyncConfig("hier_striped", chunks=CHUNKS, pipeline=pipeline,
+                         path_split=split)
+        return build_schedule(fabric, cfg, (numel,), 0)
+
+    # ---- split-ratio sweep: priced vs simulated, parity asserted ----------
+    for pipeline in (False, True):
+        mode = "pipelined" if pipeline else "sequential"
+        base = None
+        for frac in RATIOS:
+            s = sched_at(frac, pipeline)
+            est = cm.from_schedule(s)
+            res = simulate(fab, [Tenant("t0", s)])
+            err = abs(res.makespan - est.total_s) / est.total_s
+            assert err < 0.01, (mode, frac, err, res.makespan, est.total_s)
+            if frac == 0.0:
+                base = est.total_s
+                # eth-only degenerate: the path-free fabric builds and
+                # prices the SAME schedule, bitwise
+                s0 = sched_at(0.0, pipeline, fabric=fab0)
+                assert s0.legs == s.legs, (s0.legs, s.legs)
+                assert CostModel(fab0).from_schedule(s0).total_s \
+                    == est.total_s, "eth degenerate price diverged"
+            rows.append((f"multipath/{mode}/cxl{int(frac * 100)}pct",
+                         res.makespan * 1e6,
+                         f"{base / res.makespan:.2f}x_vs_eth"
+                         f"_parity_err={err * 100:.2f}%"))
+
+    # ---- planner-picked split vs the eth-only plan (simulated) ------------
+    shapes = {"w": jax.ShapeDtypeStruct((numel,), np.dtype("float32"))}
+    sec0 = Planner(fab0).plan(shapes).sections[0]
+    secm = Planner(fab).plan(shapes).sections[0]
+    mk0 = simulate(fab, [Tenant("t0", sec0.schedule)]).makespan
+    mkm = simulate(fab, [Tenant("t0", secm.schedule)]).makespan
+    win = mk0 / mkm
+    assert win > 1.0, (mk0, mkm)  # the acceptance win, fast tier idle
+    split = dict(secm.sync.path_split or ()).get("cxl", 0.0)
+    rows.append(("multipath/planner/eth_only", mk0 * 1e6, "baseline"))
+    rows.append(("multipath/planner/routed", mkm * 1e6,
+                 f"{win:.2f}x_vs_eth_cxl_frac={split:g}"))
+
+    # ---- co-arbitration: θ=2 tenants, each route contended on its own -----
+    theta = 2
+    s = sched_at(0.5, False)
+    pool = NicPool(lanes=fab.slowest.lanes)
+    cxl = NicPool.for_path(fab, "cxl")
+    res = simulate(fab, [Tenant(f"t{k}", s) for k in range(theta)],
+                   pool=pool, path_pools={"cxl": cxl})
+    est = cm.from_schedule(s, granted_lanes={
+        "eth": pool.fair_share(theta), "cxl": cxl.fair_share(theta)})
+    err = abs(res.makespan - est.total_s) / est.total_s
+    assert err < 0.01, (res.makespan, est.total_s, err)
+    alone = simulate(fab, [Tenant("t0", s)]).makespan
+    rows.append((f"multipath/contention/theta{theta}_split50",
+                 res.makespan * 1e6,
+                 f"{res.makespan / alone:.2f}x_vs_alone"
+                 f"_parity_err={err * 100:.2f}%"))
+
+    # ---- all-to-all: the routed shuffle exchange --------------------------
+    n_dp = Planner(fab).domain_size
+    row_elems = max(numel // max(n_dp, 1), 1)
+    a2a0 = Planner(fab0).plan_all_to_all((n_dp, row_elems))
+    a2am = Planner(fab).plan_all_to_all((n_dp, row_elems))
+    mk0 = simulate(fab, [Tenant("t0", a2a0)]).makespan
+    mkm = simulate(fab, [Tenant("t0", a2am)]).makespan
+    rows.append(("multipath/a2a/eth_only", mk0 * 1e6, "baseline"))
+    rows.append(("multipath/a2a/routed", mkm * 1e6,
+                 f"{mk0 / mkm:.2f}x_vs_eth"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -24,7 +24,8 @@ builds a typed leg list (``ReduceScatter`` / ``Psum`` / ``SlowChunk`` /
 
 Codec / chunking (``SyncConfig``) apply to the slowest leg — DFabric's
 point is that bandwidth is scarce exactly there; an optional ``mid_codec``
-compresses UNSCATTERED mid-tier psum legs in deep hierarchies.  The legacy
+compresses mid-tier legs — unscattered psums AND scattered reduce-scatter
+legs (fastest active tier stays exact) — in deep hierarchies.  The legacy
 entry points (``dfabric_all_reduce`` / ``dfabric_reduce_scatter``, and
 ``dfabric_all_to_all`` for ``kind="all_to_all"`` schedules — shuffle / MoE
 dispatch traffic) survive as thin constructors: given no schedule they
@@ -159,6 +160,18 @@ def _psum_leg(leg: Psum, x: jax.Array, cfg: SyncConfig,
     return out.reshape(shp)
 
 
+def _rs_leg(leg: ReduceScatter, x: jax.Array, dim: int, cfg: SyncConfig,
+            ranks: prims.Ranks) -> jax.Array:
+    """Lower one fast-tier reduce-scatter leg (scattered mid-tier legs may
+    carry the mid codec — int8 without error feedback, like mid psums)."""
+    if leg.codec is None:
+        return prims.reduce_scatter_tiled(x, leg.axis, dim)
+    assert leg.codec == cfg.mid_codec, (leg.codec, cfg.mid_codec)
+    return comp.compressed_reduce_scatter_int8(x, leg.axis,
+                                               cfg.make_mid_codec(), dim,
+                                               ranks=ranks)
+
+
 def _slow_group(legs: Sequence[SlowChunk], x: jax.Array,
                 ef: Optional[jax.Array], cfg: SyncConfig, ranks: prims.Ranks
                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
@@ -210,7 +223,7 @@ def _apply_down(legs: Sequence, x: jax.Array, dim: int, cfg: SyncConfig,
             continue
         flush()
         if isinstance(leg, ReduceScatter):
-            x = prims.reduce_scatter_tiled(x, leg.axis, dim)
+            x = _rs_leg(leg, x, dim, cfg, ranks)
         elif isinstance(leg, Psum):
             x = _psum_leg(leg, x, cfg, ranks)
         else:

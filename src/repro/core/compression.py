@@ -116,6 +116,38 @@ def compressed_psum_int8(x: jax.Array, axis_name: str, codec: Int8Codec,
     return out, new_ef
 
 
+def compressed_reduce_scatter_int8(x: jax.Array, axis_name: str,
+                                   codec: Int8Codec, dim: int,
+                                   ranks: prims.Ranks = None) -> jax.Array:
+    """Reduce-scatter ``x`` over ``axis_name`` along ``dim`` transferring
+    int8 on the wire (tiled: member *i* keeps slice *i* of the sum, the
+    same ownership order as ``lax.psum_scatter(..., tiled=True)``).
+
+    Same wire strategy as :func:`compressed_psum_int8` — quantize the
+    local tensor, all-gather the int8 payloads plus scales, and
+    dequantize-sum locally — then each member keeps only its own 1/n
+    block along ``dim``.  No error feedback: scattered mid-tier legs are
+    stateless (EF state belongs to the slow leg, which re-consumes its
+    own residual every step; a scattered leg's residual would belong to
+    a different shard each step).
+    """
+    n = jax_compat.axis_size(axis_name)
+    shp = x.shape
+    assert shp[dim] % n == 0, (shp, dim, n)
+    xf = x.reshape(-1)
+    n0 = xf.shape[0]
+    pad = (-n0) % codec.block
+    xp = jnp.concatenate([xf, jnp.zeros((pad,), xf.dtype)]) if pad else xf
+    q, s = codec.encode(xp)
+    qg = prims.all_gather_stacked(q, axis_name, ranks)  # (P, n) int8 wire
+    sg = prims.all_gather_stacked(s, axis_name, ranks)  # (P, n/block) f32
+    dec = jax.vmap(lambda qq, ss: codec.decode(qq, ss))(qg, sg)
+    full = jnp.sum(dec, axis=0)[:n0].astype(x.dtype).reshape(shp)
+    blk = shp[dim] // n
+    idx = prims.axis_rank(axis_name, ranks)
+    return lax.dynamic_slice_in_dim(full, idx * blk, blk, axis=dim)
+
+
 def compressed_psum_topk(x: jax.Array, axis_name: str, codec: TopKCodec,
                          ef: Optional[jax.Array] = None,
                          ranks: prims.Ranks = None

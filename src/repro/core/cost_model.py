@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import numpy as np
 
@@ -139,7 +139,15 @@ class LegCharge:
 class ScheduleEstimate:
     """Price of one :class:`~repro.core.schedule.CommSchedule`: per-leg
     charges (``leg_charges[i].leg is schedule.legs[i]``), per-tier
-    aggregates, and the pipelined-overlap total."""
+    aggregates, and the pipelined-overlap total.
+
+    ``path_seconds`` is the per-route breakdown of the slow leg (the sum
+    of each route's sub-flow charges, routes in first-issue order).  With
+    more than one route the routes drain CONCURRENTLY, so the total
+    charges the slowest route (``max``), not the sum — the per-tier
+    ``charges`` keep the arithmetic sum (busy-seconds accounting), which
+    can then exceed the wall-clock contribution, exactly like the
+    pipelined overlap credit already does."""
 
     strategy: str
     total_s: float
@@ -149,10 +157,19 @@ class ScheduleEstimate:
     chunks: int = 1
     pipelined: bool = False
     notes: str = ""
+    path_seconds: Tuple[Tuple[str, float], ...] = ()
 
     @property
     def slow_s(self) -> float:
         return self.charges[-1].seconds if self.charges else 0.0
+
+    @property
+    def slow_effective_s(self) -> float:
+        """Wall-clock slow-leg time: max over concurrent routes (equals
+        ``slow_s`` for single-route schedules)."""
+        if not self.path_seconds:
+            return self.slow_s
+        return max(s for _, s in self.path_seconds)
 
     @property
     def fast_s(self) -> float:
@@ -228,7 +245,8 @@ class CostModel:
     def from_schedule(self, schedule: "sched.CommSchedule", *,
                       mem_bw_limit: Optional[float] = None,
                       cached: bool = True,
-                      granted_lanes: Optional[float] = None,
+                      granted_lanes: Union[float, Mapping[str, float],
+                                           None] = None,
                       mem=None, staging: Optional[str] = None,
                       granted_mem_bw: Optional[float] = None) -> ScheduleEstimate:
         """Price EXACTLY the legs the executor will lower — walk the same
@@ -248,7 +266,19 @@ class CostModel:
         ``nominal / granted``, matching ``repro.sim.fabric_sim``'s
         lane-second flow model (at ``granted == nominal`` the estimate is
         unchanged, and a single uncontended tenant's simulated makespan
-        equals ``total_s``).
+        equals ``total_s``).  A scalar applies to every route; a mapping
+        ``{path: granted}`` sets each route's grant independently (routes
+        absent from the mapping stay uncontended — each declared path is
+        its own lane group, so contention is per path).
+
+        Multi-path slow legs (``SlowChunk.path != "eth"``): each sub-flow
+        is priced at ITS route's bw/latency/lanes
+        (``FabricSpec.path_tier`` — an undeclared route degrades to the
+        Ethernet tier, keeping plans portable), the routes drain
+        concurrently, and the slow leg's wall-clock contribution is the
+        ``max`` over per-route sums (sequential) or the exact pipeline
+        recurrence the simulator replays (pipelined, see below) — the
+        single-route totals are bitwise what they always were.
 
         ``mem`` is the memory-aware mode (the paper's §4.1 pillar): a
         :class:`~repro.core.mempool.MemPoolSpec` (or ``MemPool``, or
@@ -279,8 +309,21 @@ class CostModel:
         hierarchical candidates."""
         fab = self.fabric
         cfg = schedule.cfg
-        if granted_lanes is not None and granted_lanes <= 0:
-            raise ValueError(f"granted_lanes must be positive: {granted_lanes}")
+        if isinstance(granted_lanes, Mapping):
+            for p, g in granted_lanes.items():
+                if g <= 0:
+                    raise ValueError(
+                        f"granted_lanes[{p!r}] must be positive: {g}")
+
+            def _granted(path: str) -> Optional[float]:
+                return granted_lanes.get(path)
+        else:
+            if granted_lanes is not None and granted_lanes <= 0:
+                raise ValueError(
+                    f"granted_lanes must be positive: {granted_lanes}")
+
+            def _granted(path: str) -> Optional[float]:
+                return granted_lanes
         if granted_mem_bw is not None and granted_mem_bw <= 0:
             raise ValueError(
                 f"granted_mem_bw must be positive: {granted_mem_bw}")
@@ -305,6 +348,8 @@ class CostModel:
         xfer = 1.0 if a2a else 2.0
         leg_charges: List[LegCharge] = []
         fast_s = slow_s = 0.0
+        slow_by_path: Dict[str, float] = {}
+        slow_seq: List[Tuple[str, float]] = []  # issue order, for pipelining
         first_slow = True
         for leg in schedule.legs:
             t = tier_for(leg)
@@ -319,8 +364,12 @@ class CostModel:
                     secs = by / t.rate + (n - 1) * t.latency
                 fast_s += secs
             elif isinstance(leg, sched.ReduceScatter):
-                secs = ring_reduce_scatter_time(payload, n, t.rate, t.latency)
-                by = (n - 1) / n * payload if n > 1 else 0.0
+                # a compressed mid-tier scatter sends quantized wire bytes;
+                # the reduced payload itself stays full precision
+                ratio = codec_ratio(leg.codec, cfg)
+                secs = ring_reduce_scatter_time(payload / ratio, n, t.rate,
+                                                t.latency)
+                by = (n - 1) / n * payload / ratio if n > 1 else 0.0
                 payload /= max(n, 1)
                 fast_s += secs
             elif isinstance(leg, sched.Psum):
@@ -334,16 +383,26 @@ class CostModel:
                     # (and the memory pool behind it) too: both
                     # contention-aware modes treat it like SlowChunk legs
                     if fab.depth > 1 and t.name == fab.slowest.name:
-                        if granted_lanes is not None:
-                            secs *= max(t.lanes, 1e-30) / granted_lanes
+                        g = _granted("eth")
+                        if g is not None:
+                            secs *= max(t.lanes, 1e-30) / g
                         if mem_spec is not None:
                             secs = max(secs, self._mem_leg_seconds(
-                                by, t,
-                                granted_lanes if granted_lanes is not None
-                                else t.lanes,
+                                by, t, g if g is not None else t.lanes,
                                 mem_spec, mem_staging, granted_mem_bw))
                 fast_s += secs
             elif isinstance(leg, sched.SlowChunk):
+                # the sub-flow is priced at ITS route's tier; a route this
+                # fabric does not declare degrades to "eth" ENTIRELY —
+                # rate, contention grant and concurrency group — because
+                # its flows physically ride (and queue on) the Ethernet
+                # pool there
+                p_eff = leg.path
+                if p_eff != "eth":
+                    if fab.path_named(p_eff) is None:
+                        p_eff = "eth"
+                    else:
+                        t = fab.path_tier(p_eff, leg.axis, leg.size)
                 rate = t.rate
                 if mem_bw_limit is not None:
                     rate = min(rate, mem_bw_limit / max(fab.n_fast, 1))
@@ -361,16 +420,19 @@ class CostModel:
                     lat = xfer * (n - 1) * t.latency if first_slow \
                         else xfer * t.latency
                     secs = by / rate + lat
-                    if granted_lanes is not None:
-                        secs *= max(t.lanes, 1e-30) / granted_lanes
+                    g = _granted(p_eff)
+                    if g is not None:
+                        secs *= max(t.lanes, 1e-30) / g
                     if mem_spec is not None:
                         secs = max(secs, self._mem_leg_seconds(
-                            by, t,
-                            granted_lanes if granted_lanes is not None
-                            else t.lanes,
+                            by, t, g if g is not None else t.lanes,
                             mem_spec, mem_staging, granted_mem_bw))
                 first_slow = False
                 slow_s += secs
+                if p_eff not in slow_by_path:
+                    slow_by_path[p_eff] = 0.0
+                slow_by_path[p_eff] += secs
+                slow_seq.append((p_eff, secs))
             else:  # AllGather — mirrors its ReduceScatter's payload level
                 payload *= n
                 secs = all_gather_time(payload, n, t.rate, t.latency)
@@ -378,11 +440,34 @@ class CostModel:
                 fast_s += secs
             leg_charges.append(LegCharge(leg, secs, by))
 
+        multipath = len(slow_by_path) > 1
         if schedule.pipelined and schedule.chunks > 1:
-            total = max(slow_s, fast_s) \
-                + min(slow_s / schedule.chunks, fast_s / schedule.chunks)
+            if multipath:
+                # exact replay of the simulator's per-route chained
+                # pipeline: fast stage j finishes at F_j = (j+1)*fast/C
+                # (stages are chained), sub-flow j starts at
+                # max(F_j, its route's previous sub-flow) and its route's
+                # chain tail advances by its charge; the makespan is the
+                # latest tail (or the last fast stage).  The single-route
+                # closed form below is NOT exact here because the routes
+                # drain concurrently against a shared fast stage sequence.
+                C = max(len(slow_seq), 1)
+                fast_per = fast_s / C
+                F = 0.0
+                tails: Dict[str, float] = {}
+                for p, secs in slow_seq:
+                    F += fast_per
+                    tails[p] = max(F, tails.get(p, 0.0)) + secs
+                total = max([fast_s] + list(tails.values()))
+            else:
+                total = max(slow_s, fast_s) \
+                    + min(slow_s / schedule.chunks, fast_s / schedule.chunks)
         else:
-            total = fast_s + slow_s
+            # concurrent routes: the slow phase ends when the SLOWEST
+            # route's chain drains (single-route: the plain sum, bitwise
+            # as before)
+            slow_eff = max(slow_by_path.values()) if multipath else slow_s
+            total = fast_s + slow_eff
 
         # per-tier aggregates (slow tier LAST, for the slow_s accessors)
         agg: Dict[str, List] = {}
@@ -412,7 +497,8 @@ class CostModel:
             name, total, charges, tuple(leg_charges),
             scatter_depth=len(schedule.scattered_axes),
             chunks=schedule.chunks, pipelined=schedule.pipelined,
-            notes=schedule.describe())
+            notes=schedule.describe(),
+            path_seconds=tuple(slow_by_path.items()))
 
     # ---- N-tier strategies --------------------------------------------------
     def ntier_striped(self, nbytes: float, scatter_depth: int = -1,

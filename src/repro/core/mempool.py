@@ -5,7 +5,7 @@ as the memory behind it: once the CNs drive the consolidated NICs at
 their aggregate rate, *local memory bandwidth* becomes the bottleneck
 (the C1 "memory wall"), and DFabric fixes it by disaggregating host
 memory behind the CXL switch and ADDING memory devices.  Until this
-module, memory was invisible to the model: ``repro.core.memory_pool``
+module, memory was invisible to the model: ``repro.core.staging_utils``
 maps the pool onto JAX donation/offload idioms, and the cost model's
 ``mem_bw_limit`` was a single scalar clamp.  This module makes memory a
 simulated, priced and planned resource, symmetric to

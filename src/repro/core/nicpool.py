@@ -186,6 +186,21 @@ class NicPool:
         per = fab.slowest.lanes if fab.depth > 1 else 1.0
         return cls(lanes=per * max(int(tenants), 1))
 
+    @classmethod
+    def for_path(cls, fabric, path: str, tenants: int = 1) -> "NicPool":
+        """The SECOND lane group of a multi-path fabric: a pool arbitrating
+        one alternative slow-leg route (``PathSpec.lanes`` per tenant — a
+        route the fabric does not declare falls back to the Ethernet
+        lanes, mirroring how pricing degrades undeclared routes)."""
+        from repro.core.topology import as_fabric
+        fab = as_fabric(fabric)
+        spec = fab.path_named(path)
+        if spec is not None:
+            per = spec.lanes
+        else:
+            per = fab.slowest.lanes if fab.depth > 1 else 1.0
+        return cls(lanes=per * max(int(tenants), 1))
+
     # ---- planner hook ------------------------------------------------------
     def stagger(self, schedules: Sequence) -> List[int]:
         """Sub-flow phase offsets for concurrent Sections.

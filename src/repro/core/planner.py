@@ -100,7 +100,11 @@ class SyncPlan:
                        "size": <int>,
                        // slow_chunk only:
                        "index": <int>, "chunks": <int>,
-                       // psum / slow_chunk, only when compressed:
+                       // slow_chunk only, when routed off the Ethernet
+                       // pool ("cxl" | "loop"; absent == "eth"):
+                       "path": "<route>",
+                       // psum / reduce_scatter / slow_chunk, only when
+                       // compressed:
                        "codec": "int8" | "topk"},
                       ...],
              "shape": [<local block shape>], "dtype": "<dtype>",
@@ -129,7 +133,13 @@ class SyncPlan:
         MoE-dispatch exchanges) carry "all_to_all" legs plus slow_chunk
         sub-flows that split the per-destination payload; absent in
         pre-all-to-all plans (defaults to "all_reduce" on load).
-        ``CommSchedule.from_json`` round-trips this exactly."""
+        ``"path"`` on a slow_chunk leg is the planner's multi-path
+        routing (``SyncConfig.path_split``, also under ``"cfg"``): the
+        sub-flow rides that declared route ("cxl" / "loop") instead of
+        the Ethernet pool.  Emitted only when != "eth", so pre-multipath
+        plans are byte-identical and old JSON loads with every sub-flow
+        defaulting to "eth".  ``CommSchedule.from_json`` round-trips
+        this exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
@@ -150,10 +160,19 @@ class Planner:
     truth differs from the fabric description; ``fast_axis_size`` is the
     legacy single-tier override.  ``pipeline`` enables the overlapped
     slow-leg pipeline for chunked sections; ``mid_codec`` adds candidates
-    that int8-compress UNSCATTERED mid-tier psum legs (deep hierarchies);
+    that int8-compress mid-tier legs (unscattered psums AND scattered
+    reduce-scatters — the fastest active tier stays exact);
     ``stagger_lanes`` asks the NIC-pool arbiter for per-Section sub-flow
     phase offsets (``CommSchedule.lane_offset``) so concurrent Sections'
     slow legs interleave across pool lanes instead of colliding.
+
+    When the fabric declares alternative slow-leg routes
+    (``FabricSpec.paths`` — e.g. a CXL shortcut), every candidate is
+    additionally priced per path split (``SyncConfig.path_split``): a
+    fraction of the slow sub-flows rides each declared route while the
+    rest stay on the Ethernet pool, and a split is kept only when
+    STRICTLY cheaper than the eth-only degenerate (which therefore
+    reproduces path-free plans exactly).
 
     When the fabric carries a memory model (``FabricSpec.mem``), every
     candidate is additionally priced per staging placement — slow-leg
@@ -276,6 +295,24 @@ class Planner:
             return ["pool" if mem.pooled_devices else "local"]
         return ["pool", "local"]
 
+    def _path_split_candidates(self, chunks: int
+                               ) -> List[Optional[Tuple[Tuple[str, float], ...]]]:
+        """Slow-leg path splits worth pricing for a ``chunks``-sub-flow
+        leg: no split FIRST (the eth-only degenerate — the tie-break that
+        keeps today's plans on path-free fabrics and whenever striping an
+        alternative route is not strictly cheaper), then, for each route
+        the fabric declares (``FabricSpec.paths``), the fractions
+        ``k/chunks`` (k = 1..chunks) of the sub-flows rerouted onto it —
+        every split ``assign_paths`` can realize at this chunk count."""
+        cands: List[Optional[Tuple[Tuple[str, float], ...]]] = [None]
+        fab = self.fabric
+        if not fab.paths or fab.depth <= 1 or fab.slowest.size <= 1:
+            return cands
+        for spec in fab.paths:
+            for k in range(1, chunks + 1):
+                cands.append(((spec.name, k / chunks),))
+        return cands
+
     def _candidate_chunks(self, shard_numel: int,
                           cap: Optional[int] = None) -> List[int]:
         """Slow-leg sub-flow counts worth pricing: 1 plus powers of two up
@@ -299,8 +336,9 @@ class Planner:
     def _search_section(self, lshape: Tuple[int, ...],
                         avoid: frozenset = frozenset()
                         ) -> Tuple[SyncConfig, int, Optional[CommSchedule]]:
-        """Search candidate schedules (depth x chunks x per-tier codec),
-        pricing each with ``CostModel.from_schedule``; returns the winner's
+        """Search candidate schedules (depth x chunks x per-tier codec x
+        slow-leg path split), pricing each with
+        ``CostModel.from_schedule``; returns the winner's
         (SyncConfig, scatter_dim, CommSchedule).
 
         Schedules are priced at the fp32 WIRE dtype (grad_sync upcasts
@@ -337,20 +375,25 @@ class Planner:
                 depth_val = -1 if d >= self.n_fast_tiers else d
                 shard_numel = numel // self._prefix_prod(d)
                 mids: List[Optional[str]] = [None]
-                if self.mid_codec and d < self.n_fast_tiers:
+                # mid tiers exist when some tier is neither the fastest
+                # scattered one (d >= 2: scattered-RS mid tiers) nor the
+                # slow leg (d < n_fast_tiers: unscattered-psum mid tiers)
+                if self.mid_codec and (d >= 2 or d < self.n_fast_tiers):
                     mids.append(self.mid_codec)
                 cap = self._mem_chunk_cap(shard_numel)
                 for c in self._candidate_chunks(shard_numel, cap):
                     for mid in mids:
-                        cfg = SyncConfig(strategy="hier_striped", chunks=c,
-                                         codec=self.codec,
-                                         scatter_depth=depth_val,
-                                         pipeline=self.pipeline,
-                                         mid_codec=mid)
-                        s0 = self._build(cfg, lshape, sd, dtype)
-                        for stg in stagings:
-                            s = s0.with_staging(stg)
-                            cands.append((price(s), cfg, s))
+                        for split in self._path_split_candidates(c):
+                            cfg = SyncConfig(strategy="hier_striped",
+                                             chunks=c, codec=self.codec,
+                                             scatter_depth=depth_val,
+                                             pipeline=self.pipeline,
+                                             mid_codec=mid,
+                                             path_split=split)
+                            s0 = self._build(cfg, lshape, sd, dtype)
+                            for stg in stagings:
+                                s = s0.with_staging(stg)
+                                cands.append((price(s), cfg, s))
         if strat in ("auto", "hier_root"):
             cfg = SyncConfig(strategy="hier_root", chunks=1, codec=self.codec,
                              pipeline=self.pipeline)
@@ -400,14 +443,15 @@ class Planner:
         cap = self._mem_chunk_cap(numel, xfer=1.0)
         cands: List[Tuple[float, CommSchedule]] = []
         for c in self._candidate_chunks(row, cap):
-            cfg = SyncConfig(strategy="hier_striped", chunks=c,
-                             pipeline=False)
-            s0 = build_all_to_all(fab, cfg, shape, dtype,
-                                  fast_sizes=self.fast_sizes)
-            for stg in self._staging_candidates():
-                s = s0.with_staging(stg)
-                cands.append((self.cost.from_schedule(s, mem=True).total_s,
-                              s))
+            for split in self._path_split_candidates(c):
+                cfg = SyncConfig(strategy="hier_striped", chunks=c,
+                                 pipeline=False, path_split=split)
+                s0 = build_all_to_all(fab, cfg, shape, dtype,
+                                      fast_sizes=self.fast_sizes)
+                for stg in self._staging_candidates():
+                    s = s0.with_staging(stg)
+                    cands.append(
+                        (self.cost.from_schedule(s, mem=True).total_s, s))
         # first candidate at the minimum wins: more chunks only when
         # strictly cheaper, "pool" staging over "local" on ties
         return min(cands, key=lambda t: t[0])[1]

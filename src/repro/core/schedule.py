@@ -48,7 +48,7 @@ from dataclasses import dataclass, field, replace
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 from repro.core import compression as comp
-from repro.core.topology import FabricSpec, Tier
+from repro.core.topology import FabricSpec, SLOW_PATHS, Tier
 
 # ---------------------------------------------------------------------------
 # SyncConfig (the per-Section knob set; thin constructor over the IR)
@@ -67,9 +67,16 @@ class SyncConfig:
 
     ``pipeline``: when chunks > 1, software-pipeline the slow leg against
     the fast-tier all-gathers (chunk *i*'s slow psum is issued while chunk
-    *i−1* gathers).  ``mid_codec``: optional int8 codec on UNSCATTERED
-    mid-tier psum legs (deep hierarchies where a full payload crosses a
+    *i−1* gathers).  ``mid_codec``: optional int8 codec on mid-tier legs —
+    UNSCATTERED psums AND mid-tier reduce-scatters (any fast tier past the
+    fastest; deep hierarchies where a full or striped payload crosses a
     mid tier).
+
+    ``path_split``: optional multi-path routing of the slow sub-flows,
+    ``((path_name, fraction), ...)`` for the NON-eth routes (see
+    ``repro.core.topology.PathSpec``); the Ethernet pool keeps the
+    remaining fraction.  ``None`` (or all-zero fractions) is the
+    eth-only degenerate: exactly today's single-path schedules.
     """
 
     strategy: str = "hier_striped"  # flat | hier_root | hier_striped
@@ -80,7 +87,28 @@ class SyncConfig:
     error_feedback: bool = True
     scatter_depth: int = -1  # fast tiers to scatter over (-1 = all)
     pipeline: bool = True  # overlap slow chunks with fast all-gathers
-    mid_codec: Optional[str] = None  # codec on unscattered mid-tier legs
+    mid_codec: Optional[str] = None  # codec on mid-tier (psum + rs) legs
+    path_split: Optional[Tuple[Tuple[str, float], ...]] = None
+
+    def __post_init__(self):
+        if self.path_split is None:
+            return
+        # canonicalize (JSON hands back lists) so round-tripped configs
+        # compare equal, then validate the split
+        ps = tuple((str(n), float(f)) for n, f in self.path_split)
+        object.__setattr__(self, "path_split", ps)
+        total = 0.0
+        for name, frac in ps:
+            if name == "eth" or name not in SLOW_PATHS:
+                raise ValueError(
+                    f"path_split names the non-eth routes "
+                    f"{[n for n in SLOW_PATHS if n != 'eth']}; got {name!r}")
+            if not 0.0 <= frac <= 1.0:
+                raise ValueError(f"path_split fraction for {name!r} "
+                                 f"must be in [0, 1]: {frac}")
+            total += frac
+        if total > 1.0 + 1e-12:
+            raise ValueError(f"path_split fractions sum to {total} > 1")
 
     def make_codec(self):
         return comp.make_codec(self.codec, block=self.codec_block,
@@ -97,11 +125,15 @@ class SyncConfig:
 
 @dataclass(frozen=True)
 class ReduceScatter:
-    """Reduce-scatter one fast tier (down phase)."""
+    """Reduce-scatter one fast tier (down phase).  ``codec`` is the
+    optional mid-tier compressor (int8) on SCATTERED mid-tier legs: the
+    wire payload is quantized, the reduction runs on dequantized values
+    (no error-feedback state — mid tiers are stateless, like ``Psum``)."""
 
     tier: str  # Tier.name
     axis: str  # mesh axis
     size: int
+    codec: Optional[str] = None
 
     kind = "reduce_scatter"
 
@@ -121,7 +153,16 @@ class Psum:
 
 @dataclass(frozen=True)
 class SlowChunk:
-    """One sub-flow of the slowest (NIC-pool striped) leg."""
+    """One sub-flow of the slowest (NIC-pool striped) leg.
+
+    ``path`` is the ROUTE the sub-flow rides: ``"eth"`` (the slowest
+    tier's own Ethernet pool lanes — the default, and the only route
+    before multi-path), ``"cxl"`` (a CXL-fabric shortcut through an
+    otherwise-idle fast-tier/expander route) or ``"loop"`` (loopback via
+    a peer rack).  Routing is numerics-free: the executor splits and
+    reassembles the payload by ``index`` regardless of path, so any
+    split ratio lowers bitwise-identically; only pricing and the
+    simulator's lane arbitration see the route."""
 
     index: int
     chunks: int
@@ -129,6 +170,7 @@ class SlowChunk:
     tier: str
     axis: str
     size: int
+    path: str = "eth"
 
     kind = "slow_chunk"
 
@@ -203,7 +245,7 @@ class CommSchedule:
     Like ``lane_offset`` it is numerics-free: the simulator and the cost
     model place the flow's memory traffic by it, the executor treats it
     as an annotation (JAX memory-kind offload is gated in
-    ``repro.core.memory_pool``).
+    ``repro.core.staging_utils``).
 
     ``kind`` selects the collective the legs describe: ``"all_reduce"``
     (lowered by ``collectives.lower_all_reduce``) or ``"all_to_all"``
@@ -240,6 +282,11 @@ class CommSchedule:
             # pipelined flag here would make the cost model and the
             # simulator credit an overlap the lowering never delivers
             raise ValueError("all_to_all schedules cannot be pipelined")
+        for l in self.legs:
+            if isinstance(l, SlowChunk) and l.path not in SLOW_PATHS:
+                raise ValueError(
+                    f"slow chunk {l.index}: path must be one of "
+                    f"{list(SLOW_PATHS)}: {l.path!r}")
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -316,13 +363,15 @@ class CommSchedule:
         parts = []
         for l in self.legs:
             if isinstance(l, ReduceScatter):
-                parts.append(f"rs[{l.axis}x{l.size}]")
+                c = f",{l.codec}" if l.codec else ""
+                parts.append(f"rs[{l.axis}x{l.size}{c}]")
             elif isinstance(l, Psum):
                 c = f",{l.codec}" if l.codec else ""
                 parts.append(f"psum[{l.axis}x{l.size}{c}]")
             elif isinstance(l, SlowChunk):
                 c = f",{l.codec}" if l.codec else ""
-                parts.append(f"slow[{l.index}/{l.chunks}{c}]")
+                p = f"@{l.path}" if l.path != "eth" else ""
+                parts.append(f"slow[{l.index}/{l.chunks}{c}{p}]")
             elif isinstance(l, AllToAll):
                 parts.append(f"a2a[{l.axis}x{l.size}]")
             else:
@@ -343,11 +392,13 @@ class CommSchedule:
         def leg_dict(l: Leg) -> dict:
             d = {"kind": l.kind, "tier": l.tier, "axis": l.axis,
                  "size": l.size}
-            if isinstance(l, (Psum, SlowChunk)) and l.codec:
+            if isinstance(l, (ReduceScatter, Psum, SlowChunk)) and l.codec:
                 d["codec"] = l.codec
             if isinstance(l, SlowChunk):
                 d["index"] = l.index
                 d["chunks"] = l.chunks
+                if l.path != "eth":  # old-plan JSON stays byte-identical
+                    d["path"] = l.path
             return d
 
         c = self.cfg
@@ -364,7 +415,9 @@ class CommSchedule:
                     "codec_k_frac": c.codec_k_frac,
                     "error_feedback": c.error_feedback,
                     "scatter_depth": c.scatter_depth,
-                    "pipeline": c.pipeline, "mid_codec": c.mid_codec},
+                    "pipeline": c.pipeline, "mid_codec": c.mid_codec,
+                    "path_split": [list(p) for p in c.path_split]
+                    if c.path_split else None},
         }
 
     @classmethod
@@ -379,16 +432,24 @@ class CommSchedule:
             if k is SlowChunk:
                 legs.append(SlowChunk(ld["index"], ld["chunks"],
                                       ld.get("codec"), ld["tier"],
-                                      ld["axis"], ld["size"]))
+                                      ld["axis"], ld["size"],
+                                      ld.get("path", "eth")))
             elif k is Psum:
                 legs.append(Psum(ld["tier"], ld["axis"], ld["size"],
                                  ld.get("codec")))
+            elif k is ReduceScatter:
+                legs.append(ReduceScatter(ld["tier"], ld["axis"],
+                                          ld["size"], ld.get("codec")))
             else:
                 legs.append(k(ld["tier"], ld["axis"], ld["size"]))
+        c = dict(d["cfg"])
+        ps = c.pop("path_split", None)
+        cfg = SyncConfig(**c, path_split=tuple(
+            (n, f) for n, f in ps) if ps else None)
         return cls(legs=tuple(legs), shape=tuple(d["shape"]),
                    dtype=d["dtype"], scatter_dim=d["scatter_dim"],
                    chunks=d["chunks"], pipelined=d["pipelined"],
-                   strategy=d["strategy"], cfg=SyncConfig(**d["cfg"]),
+                   strategy=d["strategy"], cfg=cfg,
                    lane_offset=int(d.get("lane_offset", 0)),
                    staging=d.get("staging"),
                    kind=d.get("collective", "all_reduce"))
@@ -397,6 +458,27 @@ class CommSchedule:
 # ---------------------------------------------------------------------------
 # Builder — the ONLY place tier-walk / divisibility decisions are made
 # ---------------------------------------------------------------------------
+
+
+def assign_paths(chunks: int,
+                 path_split: Optional[Tuple[Tuple[str, float], ...]]
+                 ) -> Tuple[str, ...]:
+    """Route each slow sub-flow index: non-eth paths take the TRAILING
+    ``round(frac * chunks)`` indices (in declaration order, from the
+    end), Ethernet keeps the leading remainder — so the first ISSUED
+    sub-flow (which carries the ring-latency charge) stays on eth
+    whenever eth carries anything.  Half-up rounding, clamped so the
+    assignment never oversubscribes."""
+    paths = ["eth"] * chunks
+    if not path_split:
+        return tuple(paths)
+    pos = chunks
+    for name, frac in path_split:
+        n_p = min(int(frac * chunks + 0.5), pos)
+        for i in range(pos - n_p, pos):
+            paths[i] = name
+        pos -= n_p
+    return tuple(paths)
 
 
 def _clamp_chunks(cfg: SyncConfig, dim_extent: int, scattered: int,
@@ -446,8 +528,9 @@ def schedule_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
         if slow_axis is None or sizes.get(slow_axis, 1) <= 1:
             return []
         n = int(sizes[slow_axis])
+        paths = assign_paths(chunks, cfg.path_split)
         return [SlowChunk(i, chunks, cfg.codec, tname(slow_axis),
-                          slow_axis, n) for i in range(chunks)]
+                          slow_axis, n, paths[i]) for i in range(chunks)]
 
     strategy = cfg.strategy
     dim = scatter_dim if scatter_dim >= 0 else 0
@@ -519,9 +602,14 @@ def schedule_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
 
     mid = cfg.mid_codec
     legs = []
-    for op, a, n in decisions:
+    for i_d, (op, a, n) in enumerate(decisions):
         if op == "rs":
-            legs.append(ReduceScatter(tname(a), a, n))
+            # mid codec also compresses SCATTERED mid-tier legs (any
+            # active fast tier past the fastest); the fastest tier's
+            # scatter stays exact — it dominates the reduction's
+            # precision and its wire time is already cheap
+            legs.append(ReduceScatter(tname(a), a, n,
+                                      mid if i_d > 0 else None))
         else:
             legs.append(Psum(tname(a), a, n, mid if n > 1 else None))
     legs += mk_slow_legs(chunks)
@@ -627,8 +715,9 @@ def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
         chunks = max(int(cfg.chunks), 1)
         while chunks > 1 and row % chunks != 0:
             chunks -= 1
+        paths = assign_paths(chunks, cfg.path_split)
         legs += [SlowChunk(i, chunks, None, tname(slow_axis), slow_axis,
-                           n_slow) for i in range(chunks)]
+                           n_slow, paths[i]) for i in range(chunks)]
     return CommSchedule(tuple(legs), shape, dtype, 0, chunks, False,
                         "all_to_all", cfg, kind="all_to_all")
 

@@ -48,6 +48,45 @@ class HardwareSpec:
 # N-tier fabric
 # ---------------------------------------------------------------------------
 
+# slow-leg routing vocabulary: "eth" is the implicit default (the slowest
+# tier's own Ethernet pool lanes); the rest are alternative PathSpec routes
+SLOW_PATHS = ("eth", "cxl", "loop")
+
+
+@dataclass(frozen=True)
+class PathSpec:
+    """One ALTERNATIVE route for slow-tier traffic (multi-path striping).
+
+    The default route for every slow sub-flow is the slowest tier itself
+    (path ``"eth"``); a :class:`FabricSpec` may additionally declare
+
+      * ``"cxl"`` — a CXL-fabric shortcut: an otherwise-idle fast-tier /
+        expander route that can carry cross-group bytes while the fast
+        tiers sit idle during the slow leg;
+      * ``"loop"`` — loopback through a peer rack's switch.
+
+    ``bw``/``latency``/``lanes`` are per-chip, exactly like :class:`Tier`;
+    each declared path is arbitrated as its OWN lane group (a second
+    ``NicPool``), so concurrent tenants contend per path independently.
+    """
+
+    name: str  # "cxl" | "loop"
+    bw: float
+    latency: float
+    lanes: float = 1.0
+
+    @property
+    def rate(self) -> float:
+        return self.bw * self.lanes
+
+
+def cxl_shortcut_path(hw: Optional[HardwareSpec] = None,
+                      lanes: float = 1.0) -> PathSpec:
+    """The canonical CXL shortcut: the hardware's rack-level CXL switch
+    numbers, usable as a second slow-leg route when the fast tier is idle."""
+    hw = hw or HardwareSpec()
+    return PathSpec("cxl", bw=hw.cxl_bw, latency=hw.cxl_latency, lanes=lanes)
+
 
 @dataclass(frozen=True)
 class Tier:
@@ -92,6 +131,7 @@ class FabricSpec:
     tiers: Tuple[Tier, ...]
     hw: HardwareSpec = field(default_factory=HardwareSpec)
     mem: Optional[MemPoolSpec] = None
+    paths: Tuple[PathSpec, ...] = ()
 
     def __post_init__(self):
         if not self.tiers:
@@ -102,6 +142,17 @@ class FabricSpec:
         for t in self.tiers:
             if t.size < 1:
                 raise ValueError(f"tier {t.name}: size must be >= 1")
+        names = [p.name for p in self.paths]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate path names: {names}")
+        for p in self.paths:
+            if p.name not in SLOW_PATHS or p.name == "eth":
+                raise ValueError(
+                    f"path {p.name!r}: must be one of "
+                    f"{[n for n in SLOW_PATHS if n != 'eth']} "
+                    "('eth' is the implicit slowest-tier route)")
+            if p.bw <= 0 or p.lanes <= 0:
+                raise ValueError(f"path {p.name}: bw and lanes must be > 0")
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -175,6 +226,44 @@ class FabricSpec:
             if t.axis == axis:
                 return t
         return None
+
+    # ---- multi-path slow-leg routes ----------------------------------------
+    @property
+    def path_names(self) -> Tuple[str, ...]:
+        """All slow-leg routes, "eth" (the slowest tier itself) first."""
+        return ("eth",) + tuple(p.name for p in self.paths)
+
+    def path_named(self, name: str) -> Optional[PathSpec]:
+        for p in self.paths:
+            if p.name == name:
+                return p
+        return None
+
+    def path_tier(self, name: str, leg_axis: Optional[str] = None,
+                  leg_size: Optional[int] = None) -> Tier:
+        """The effective :class:`Tier` a slow sub-flow on route ``name``
+        is priced at: the slowest tier for ``"eth"`` (or any route this
+        fabric does not declare — undeclared routes degrade to Ethernet
+        so plans stay portable across fabrics), else a Tier with the
+        path's bw/latency/lanes over the slow axis."""
+        spec = self.path_named(name)
+        if name == "eth" or spec is None:
+            return self.slowest
+        return Tier(spec.name,
+                    leg_axis if leg_axis is not None else self.slowest.axis,
+                    leg_size if leg_size is not None else self.slowest.size,
+                    spec.bw, spec.latency, spec.lanes)
+
+    def path_pool_lanes(self, name: str) -> float:
+        """Total lanes of one slow-tier group on route ``name`` (the
+        twin of :attr:`pool_lanes` for an alternative path)."""
+        spec = self.path_named(name)
+        per = self.slowest.lanes if spec is None else spec.lanes
+        return self.members_below(self.depth - 1) * per
+
+    def with_paths(self, *paths: PathSpec) -> "FabricSpec":
+        """Fabric with the given alternative slow-leg routes declared."""
+        return replace(self, paths=tuple(paths))
 
     # ---- conversions -------------------------------------------------------
     def as_two_tier(self) -> "TwoTierTopology":

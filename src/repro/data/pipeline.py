@@ -10,7 +10,7 @@ The pipeline is *step-indexed*: batch(step) is a pure function of
 stream without persisting cursors — the deterministic-resume property the
 fault-tolerance tests assert.  Host sharding: each data-parallel host
 materializes only its slice (``host_slice``), double-buffered onto device
-via :class:`repro.core.memory_pool.StagingBuffers`.
+via :class:`repro.core.staging_utils.StagingBuffers`.
 """
 from __future__ import annotations
 

@@ -74,7 +74,7 @@ allocation, and the timeline shows who got which lanes when.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core.cost_model import CostModel, ScheduleEstimate
@@ -144,6 +144,9 @@ class SimResult:
     finish: Dict[str, float]  # per-tenant completion time
     pool: NicPool
     mem: Optional[MemPool] = None
+    # one extra arbitrated lane group per declared PathSpec route
+    # (name -> its NicPool); empty when the fabric declares no paths
+    path_pools: Dict[str, NicPool] = field(default_factory=dict)
 
     def tenant_events(self, name: str) -> Tuple[LegEvent, ...]:
         return tuple(e for e in self.events if e.tenant == name)
@@ -175,11 +178,11 @@ class _Task:
     __slots__ = ("kind", "dur", "work", "deps", "legs", "round", "chunk",
                  "lane", "state", "start", "finish", "flow_id",
                  "mem_bytes", "mem_cap", "staging", "mem_flow_id",
-                 "wire_done", "mem_done", "nic_lanes", "lane_share")
+                 "wire_done", "mem_done", "nic_lanes", "lane_share", "path")
 
     def __init__(self, kind, *, dur=0.0, work=0.0, deps=(), legs=(),
                  rnd=0, chunk=-1, lane=None, mem_bytes=0.0, mem_cap=None,
-                 staging=None, lane_share=1.0):
+                 staging=None, lane_share=1.0, path="eth"):
         self.kind = kind  # "local" | "pool"
         self.dur = dur
         self.work = work
@@ -206,6 +209,9 @@ class _Task:
         # max_lanes caps are scaled by it at submit time so the ndest
         # flows together never exceed what the ONE leg was entitled to
         self.lane_share = lane_share
+        # which lane group ("eth" = the main NicPool, else a declared
+        # PathSpec's own pool) a pool task is arbitrated on
+        self.path = path
 
 
 def _is_pool_leg(leg, fab: FabricSpec) -> bool:
@@ -221,32 +227,55 @@ def _is_pool_leg(leg, fab: FabricSpec) -> bool:
 
 
 def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
-             fab: FabricSpec, pool_lanes: float,
-             mem_spec) -> List[_Task]:
+             fab: FabricSpec, pool_lanes: float, mem_spec,
+             path_pool_lanes: Optional[Dict[str, float]] = None
+             ) -> List[_Task]:
     """Expand one tenant into its task DAG (see module docstring)."""
     nominal = fab.slowest.lanes if fab.depth > 1 else 1.0
     grp = max(fab.n_fast, 1)
     sched = tenant.schedule
     tasks: List[_Task] = []
     tail: List[int] = []  # tasks the next round waits on
+    path_pool_lanes = path_pool_lanes or {}
 
-    def lane_of(chunk_index: int) -> Optional[int]:
+    def route_of(leg) -> str:
+        # a route the fabric does not declare rides (and queues on) the
+        # Ethernet pool — the exact degradation pricing applies
+        p = getattr(leg, "path", "eth")
+        if p != "eth" and fab.path_named(p) is None:
+            p = "eth"
+        return p
+
+    def nominal_of(path: str) -> float:
+        if path != "eth":
+            return fab.path_named(path).lanes
+        return nominal
+
+    def lane_of(chunk_index: int, path: str = "eth") -> Optional[int]:
         if not tenant.pin_lanes:
             return None
-        return chunk_index % max(int(math.ceil(pool_lanes)), 1)
+        cap = path_pool_lanes.get(path, pool_lanes)
+        return chunk_index % max(int(math.ceil(cap)), 1)
 
-    def mem_of(lc) -> dict:
+    def mem_of(lc, path: str = "eth") -> dict:
         """Memory-flow kwargs of one slow leg: its wire bytes hit the
         pool ``traffic_factor`` times aggregated over the group, capped
         at the flow's own max draw (wire rate at its lane cap) — the
-        exact twin of ``CostModel._mem_leg_seconds``."""
+        exact twin of ``CostModel._mem_leg_seconds``.  Alternative-route
+        flows cap at THEIR route's bw/lanes (``max_lanes`` bursts the
+        Ethernet pool only — each path is its own lane group)."""
         if mem_spec is None:
             return {}
-        cap_lanes = tenant.max_lanes if tenant.max_lanes is not None \
-            else nominal
+        if path != "eth":
+            spec = fab.path_named(path)
+            cap_lanes, wire_bw = spec.lanes, spec.bw
+        else:
+            cap_lanes = tenant.max_lanes if tenant.max_lanes is not None \
+                else nominal
+            wire_bw = fab.slowest.bw
         return dict(
             mem_bytes=mem_spec.traffic_factor * grp * lc.bytes_per_chip,
-            mem_cap=mem_spec.traffic_factor * grp * fab.slowest.bw
+            mem_cap=mem_spec.traffic_factor * grp * wire_bw
             * max(cap_lanes, _EPS),
             staging=sched.staging if sched is not None else None)
 
@@ -278,25 +307,41 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
             C = len(slow)
             fast_total = sum(lc.seconds for lc in fast)
             prev_local = head
-            prev_flow: List[int] = []
+            # one FIFO chain PER ROUTE: routes drain concurrently, flows
+            # within a route stay ordered (single-route schedules get
+            # exactly the old single prev_flow chain)
+            flow_tail: Dict[str, List[int]] = {}
             for j, slc in enumerate(slow):
                 tasks.append(_Task(
                     "local", dur=fast_total / C, deps=prev_local,
                     legs=[(lc.leg, lc.seconds) for lc in fast], rnd=r,
                     chunk=slc.leg.index))
                 prev_local = [len(tasks) - 1]
+                p = route_of(slc.leg)
                 tasks.append(_Task(
-                    "pool", work=slc.seconds * nominal,
-                    deps=prev_local + prev_flow,
+                    "pool", work=slc.seconds * nominal_of(p),
+                    deps=prev_local + flow_tail.get(p, []),
                     legs=[(slc.leg, slc.seconds)], rnd=r,
-                    chunk=slc.leg.index, lane=lane_of(slc.leg.index),
-                    **mem_of(slc)))
-                prev_flow = [len(tasks) - 1]
-            tail = prev_local + prev_flow
+                    chunk=slc.leg.index, lane=lane_of(slc.leg.index, p),
+                    path=p, **mem_of(slc, p)))
+                flow_tail[p] = [len(tasks) - 1]
+            tail = prev_local + [i for ids in flow_tail.values()
+                                 for i in ids]
         else:
             prev = head
+            # within one contiguous slow group, sub-flows FIFO-chain PER
+            # ROUTE (each route is its own lane group, so the chains
+            # drain concurrently); whatever follows the group waits on
+            # every route's tail.  Single-route schedules reproduce the
+            # old single chain event-for-event.
+            slow_entry: Optional[List[int]] = None
+            path_tails: Dict[str, List[int]] = {}
             for lc in charges:
                 if _is_pool_leg(lc.leg, fab):
+                    if slow_entry is None:
+                        slow_entry = list(prev)
+                        path_tails = {}
+                    p = route_of(lc.leg)
                     chunk = getattr(lc.leg, "index", 0)
                     # an all-to-all slow sub-flow is REALLY (n-1)
                     # point-to-point transfers, one per destination
@@ -308,20 +353,24 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
                     # exactly its priced time (sim/cost parity).
                     ndest = max(int(getattr(lc.leg, "size", 1)) - 1, 1) \
                         if a2a else 1
-                    mk = mem_of(lc)
+                    mk = mem_of(lc, p)
                     if mk and ndest > 1:
                         mk = dict(mk, mem_bytes=mk["mem_bytes"] / ndest,
                                   mem_cap=mk["mem_cap"] / ndest)
                     ids = []
                     for _ in range(ndest):
                         tasks.append(_Task(
-                            "pool", work=lc.seconds * nominal / ndest,
-                            deps=prev, legs=[(lc.leg, lc.seconds / ndest)],
-                            rnd=r, chunk=chunk, lane=lane_of(chunk),
-                            lane_share=1.0 / ndest, **mk))
+                            "pool", work=lc.seconds * nominal_of(p) / ndest,
+                            deps=slow_entry + path_tails.get(p, []),
+                            legs=[(lc.leg, lc.seconds / ndest)],
+                            rnd=r, chunk=chunk, lane=lane_of(chunk, p),
+                            lane_share=1.0 / ndest, path=p, **mk))
                         ids.append(len(tasks) - 1)
-                    prev = ids
+                    path_tails[p] = ids
+                    prev = slow_entry + [i for t_ in path_tails.values()
+                                         for i in t_]
                 else:
+                    slow_entry = None
                     tasks.append(_Task("local", dur=lc.seconds, deps=prev,
                                        legs=[(lc.leg, lc.seconds)], rnd=r))
                     prev = [len(tasks) - 1]
@@ -337,24 +386,37 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
 def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
              pool: Optional[NicPool] = None,
              cost: Optional[CostModel] = None,
-             mem: Optional[MemPool] = None) -> SimResult:
+             mem: Optional[MemPool] = None,
+             path_pools: Optional[Dict[str, NicPool]] = None) -> SimResult:
     """Replay ``tenants`` concurrently against ``pool`` (and ``mem``).
 
     ``pool`` defaults to ``NicPool.from_fabric(fabric, len(tenants))`` —
-    every tenant contributes its nominal lanes (the rack pool).  ``mem``
-    defaults to ``fabric.mem.make_pool()`` when the fabric carries a
-    memory model, else memory is unmodeled.  Fast legs are charged per
-    :meth:`CostModel.from_schedule`; slow legs go through the arbiters
-    (wire AND memory — see the module docstring).  Returns per-leg
-    events, per-tenant finish times, and the makespan."""
+    every tenant contributes its nominal lanes (the rack pool).  Each
+    declared ``PathSpec`` route gets its OWN lane group: ``path_pools``
+    maps route name -> pool, defaulting to
+    ``NicPool.for_path(fabric, name, len(tenants))`` per declared route —
+    concurrent tenants contend on each route independently, and a
+    tenant's ``max_lanes`` burst applies to the Ethernet pool only.
+    ``mem`` defaults to ``fabric.mem.make_pool()`` when the fabric
+    carries a memory model, else memory is unmodeled.  Fast legs are
+    charged per :meth:`CostModel.from_schedule`; slow legs go through
+    the arbiters (wire AND memory — see the module docstring).  Returns
+    per-leg events, per-tenant finish times, and the makespan."""
     fab = as_fabric(fabric)
     cm = cost or CostModel(fab)
     pool = pool or NicPool.from_fabric(fab, tenants=len(tenants))
-    if pool.active or pool.segments:
-        # a reused pool would merge allocation traces across runs and
-        # silently corrupt peak_lanes / busy_lane_seconds
-        raise ValueError("pool already has flows or a recorded trace; "
-                         "pass a fresh NicPool per simulate() run")
+    path_pools = dict(path_pools or {})
+    for p in fab.paths:
+        if p.name not in path_pools:
+            path_pools[p.name] = NicPool.for_path(fab, p.name,
+                                                  tenants=len(tenants))
+    for pname, pl in [("eth", pool)] + list(path_pools.items()):
+        if pl.active or pl.segments:
+            # a reused pool would merge allocation traces across runs and
+            # silently corrupt peak_lanes / busy_lane_seconds
+            raise ValueError(
+                f"pool {pname!r} already has flows or a recorded trace; "
+                "pass fresh pools per simulate() run")
     if mem is None and fab.mem is not None:
         mem = fab.mem.make_pool()
     if mem is not None and (mem.active or mem.segments):
@@ -362,10 +424,12 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                          "pass a fresh MemPool per simulate() run")
     mem_spec = mem.spec if mem is not None else None
 
+    ppl = {name: pl.lanes for name, pl in path_pools.items()}
     progs: List[List[_Task]] = []
     for tn in tenants:
         est = cm.from_schedule(tn.schedule) if tn.schedule is not None else None
-        progs.append(_compile(tn, est, fab, pool.lanes, mem_spec))
+        progs.append(_compile(tn, est, fab, pool.lanes, mem_spec,
+                              path_pool_lanes=ppl))
 
     if mem is not None:
         # ∞-bandwidth fast path: when EVERY device is faster than the sum
@@ -398,7 +462,9 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         raise ValueError(f"duplicate tenant names: {names}")
 
     engine_task: List[Optional[int]] = [None] * len(tenants)  # running local
-    flows: Dict[int, Tuple[int, int]] = {}  # nic flow id -> (tenant, task)
+    pools = {"eth": pool, **path_pools}  # lane group name -> arbiter
+    # flow ids are per-pool counters, so key by (lane group, flow id)
+    flows: Dict[Tuple[str, int], Tuple[int, int]] = {}
     mem_flows: Dict[int, Tuple[int, int]] = {}  # mem flow id -> (tenant, task)
     events: List[LegEvent] = []
     finish = {tn.name: 0.0 for tn in tenants}
@@ -463,15 +529,22 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                     task.state = "running"
                     task.start = t
                     share = task.lane_share
-                    task.flow_id = pool.submit(LaneRequest(
+                    if task.path != "eth":
+                        # alternative route: its own lane group, nominal
+                        # grant = the PathSpec lanes (max_lanes bursts
+                        # the Ethernet pool only)
+                        nom = fab.path_named(task.path).lanes
+                        maxl = None
+                    else:
+                        nom = fab.slowest.lanes if fab.depth > 1 else 1.0
+                        maxl = tn.max_lanes * share \
+                            if tn.max_lanes is not None else None
+                    task.flow_id = pools[task.path].submit(LaneRequest(
                         tenant=tn.name, work=task.work, arrive=t,
-                        lanes=(fab.slowest.lanes if fab.depth > 1
-                               else 1.0) * share,
-                        max_lanes=(tn.max_lanes * share
-                                   if tn.max_lanes is not None else None),
+                        lanes=nom * share, max_lanes=maxl,
                         priority=tn.priority,
                         lane=task.lane, tag=task.legs[0][0]), t)
-                    flows[task.flow_id] = (ti, idx)
+                    flows[(task.path, task.flow_id)] = (ti, idx)
                     submit_mem(ti, idx, task, t)
             # the serial fast engine: first waiting local task, in order
             if engine_task[ti] is None:
@@ -493,7 +566,8 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
             idx = engine_task[ti]
             if idx is not None and not prog[idx].wire_done:
                 t_next = min(t_next, prog[idx].finish)
-        t_next = min(t_next, pool.earliest_finish(t))
+        for pl in pools.values():
+            t_next = min(t_next, pl.earliest_finish(t))
         if mem is not None:
             t_next = min(t_next, mem.earliest_finish(t))
         for tn in tenants:  # tenants not yet started
@@ -505,13 +579,14 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                      for i, task in enumerate(prog) if task.state != "done"]
             raise RuntimeError(f"fabric_sim deadlock at t={t}: {stuck}")
         # ---- advance -------------------------------------------------------
-        for fid, grant in pool.advance(t, t_next):
-            ti, idx = flows.pop(fid)
-            task = progs[ti][idx]
-            task.wire_done = True
-            task.nic_lanes = grant.mean_lanes
-            if task.mem_done:
-                complete_pool_task(ti, idx, t_next)
+        for pname, pl in pools.items():
+            for fid, grant in pl.advance(t, t_next):
+                ti, idx = flows.pop((pname, fid))
+                task = progs[ti][idx]
+                task.wire_done = True
+                task.nic_lanes = grant.mean_lanes
+                if task.mem_done:
+                    complete_pool_task(ti, idx, t_next)
         if mem is not None:
             for mfid, _grant in mem.advance(t, t_next):
                 ti, idx = mem_flows.pop(mfid)
@@ -537,4 +612,5 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
 
     events.sort(key=lambda e: (e.start, e.finish, e.tenant))
     makespan = max(finish.values(), default=0.0)
-    return SimResult(makespan, tuple(events), finish, pool, result_mem)
+    return SimResult(makespan, tuple(events), finish, pool, result_mem,
+                     path_pools)

@@ -12,7 +12,11 @@ subprocess like the other batteries for log isolation).
     contention-aware ``granted_lanes`` pricing;
   * a 2-tenant pinned-lane contention case where the arbiter's staggered
     ``lane_offset`` assignment beats synchronized issue by the analytic
-    ``(fast + 2*slow) / (fast + slow)`` ratio.
+    ``(fast + 2*slow) / (fast + slow)`` ratio;
+  * multi-path slow legs: ``sim == price`` per route (split ratios x
+    sequential/pipelined, the eth degenerate exact), θ-way contention on
+    each route's OWN lane group matching the per-path ``granted_lanes``
+    mapping, and an undeclared route degrading to the Ethernet pool.
 """
 import itertools
 import math
@@ -183,5 +187,79 @@ assert abs(ratio - analytic) / analytic < 1e-9, (ratio, analytic)
 assert abs(stag.makespan - (fast + slow)) / (fast + slow) < 1e-9
 print(f"stagger: lane_offset beats synchronized {ratio:.3f}x "
       f"(analytic {analytic:.3f}x) OK")
+
+# ---------------------------------------------------------------------------
+# 5. multi-path slow legs: per-path sim == price, per-path contention
+# ---------------------------------------------------------------------------
+
+from repro.core.topology import cxl_shortcut_path
+
+fab_mp = fab3.with_paths(cxl_shortcut_path())
+cm_mp = CostModel(fab_mp)
+SZ = {"data": 2, "host": 2, "pod": 2}
+
+# single tenant, split ratios x sequential/pipelined: the simulator's
+# per-route lane groups reproduce the cost model's per-path totals
+checked = 0
+for pipe in (False, True):
+    base = None
+    for frac in (0.0, 0.25, 0.5, 1.0):
+        split = (("cxl", frac),) if frac > 0 else None
+        cfg = SyncConfig("hier_striped", chunks=4, pipeline=pipe,
+                         path_split=split)
+        s = schedule_from_axes(("data", "host"), "pod", cfg, (1 << 18,), 0,
+                               SZ, tier_names=NAMES)
+        est = cm_mp.from_schedule(s)
+        res = simulate(fab_mp, [Tenant("solo", s)])
+        rel = abs(res.makespan - est.total_s) / est.total_s
+        assert rel < 1e-2, (pipe, frac, res.makespan, est.total_s)
+        if frac == 0.0:
+            base = est.total_s
+            # eth degenerate: the path-free fabric prices it identically
+            assert CostModel(fab3).from_schedule(s).total_s == est.total_s
+        else:
+            assert est.total_s < base, (pipe, frac)  # striping always wins
+        checked += 1
+print(f"multi-path: sim == price for {checked} split schedules, "
+      "eth degenerate exact OK")
+
+# θ-way contention per route: both lane groups contended independently,
+# priced with a per-path granted_lanes mapping
+s_half = schedule_from_axes(
+    ("data", "host"), "pod",
+    SyncConfig("hier_striped", chunks=4, pipeline=False,
+               path_split=(("cxl", 0.5),)),
+    (1 << 18,), 0, SZ, tier_names=NAMES)
+for theta in (2, 4):
+    pool = NicPool(lanes=fab_mp.slowest.lanes)
+    cxl_pool = NicPool.for_path(fab_mp, "cxl")
+    res = simulate(fab_mp, [Tenant(f"t{k}", s_half) for k in range(theta)],
+                   pool=pool, path_pools={"cxl": cxl_pool})
+    est = cm_mp.from_schedule(s_half, granted_lanes={
+        "eth": pool.fair_share(theta), "cxl": cxl_pool.fair_share(theta)})
+    rel = abs(res.makespan - est.total_s) / est.total_s
+    assert rel < 1e-9, (theta, res.makespan, est.total_s)
+print("multi-path contention: sim == per-path granted-lanes pricing "
+      "for theta in 2/4 OK")
+
+# an UNDECLARED route degrades to the Ethernet pool entirely: same rate,
+# same lane group — priced and simulated as if every sub-flow said "eth"
+s_loop = schedule_from_axes(
+    ("data", "host"), "pod",
+    SyncConfig("hier_striped", chunks=4, pipeline=False,
+               path_split=(("loop", 0.5),)),
+    (1 << 18,), 0, SZ, tier_names=NAMES)
+assert [l.path for l in s_loop.slow_legs] == ["eth", "eth", "loop", "loop"]
+s_eth = schedule_from_axes(
+    ("data", "host"), "pod",
+    SyncConfig("hier_striped", chunks=4, pipeline=False),
+    (1 << 18,), 0, SZ, tier_names=NAMES)
+est_loop = CostModel(fab3).from_schedule(s_loop)  # fab3 declares no paths
+est_eth = CostModel(fab3).from_schedule(s_eth)
+assert est_loop.total_s == est_eth.total_s, (est_loop.total_s, est_eth.total_s)
+res_loop = simulate(fab3, [Tenant("solo", s_loop)])
+assert abs(res_loop.makespan - est_loop.total_s) / est_loop.total_s < 1e-9
+print("multi-path: undeclared route degrades to eth (price == sim == "
+      "eth-only) OK")
 
 print("ALL OK")

@@ -12,7 +12,12 @@ The overlapped-executor acceptance battery:
     results (the schedule JSON round-trip is lossless end-to-end);
   * a ``lane_offset``-rotated schedule (the NIC-pool stagger) lowers
     bitwise-identically to the unrotated one — the sub-flow ISSUE order
-    changes, the payload reassembly by chunk index does not.
+    changes, the payload reassembly by chunk index does not;
+  * multi-path slow legs (``SyncConfig.path_split`` striping sub-flows
+    across eth + the CXL shortcut) lower bitwise-identically at every
+    split ratio — routing, like lane order, never touches the numerics —
+    with the leg log still equal to the priced legs path-for-path, and
+    path JSON round-tripping (old path-free JSON defaults to "eth").
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
@@ -157,5 +162,74 @@ for pipeline in (True, False):
     mode = "pipelined" if pipeline else "sequential"
     print(f"lane_offset 0..3 ({mode}): rotated issue order, bitwise "
           "identical results OK")
+
+# ---- multi-path slow legs: routing is numerics-invariant -------------------
+# (the executor reassembles by SlowChunk.index, so a schedule striping its
+# sub-flows across eth + the CXL shortcut lowers BITWISE identically to the
+# eth-only one at every split ratio, and both match a flat psum)
+
+from repro.core.topology import cxl_shortcut_path
+
+fab_mp = fab3.with_paths(cxl_shortcut_path())
+cm_mp = CostModel(fab_mp)
+for pipeline in (True, False):
+    ref = None
+    for frac in (0.0, 0.25, 0.5, 1.0):
+        split = (("cxl", frac),) if frac > 0 else None
+        cfg = SyncConfig("hier_striped", chunks=4, pipeline=pipeline,
+                         path_split=split)
+        sched = schedule_from_axes(("data", "host"), "pod", cfg, (8192,), 0,
+                                   sizes, tier_names=names)
+        paths = [l.path for l in sched.slow_legs]
+        assert paths.count("cxl") == int(frac * 4 + 0.5), (frac, paths)
+        est = cm_mp.from_schedule(sched)
+        priced = [lc.leg for lc in est.leg_charges]
+        log = []
+
+        def f(xs, s=sched, log=log):
+            out, _ = lower_all_reduce(s, xs.reshape(-1), leg_log=log)
+            return out
+
+        g = jax.jit(jax_compat.shard_map(f, mesh=mesh3, in_specs=P(AXES3),
+                                         out_specs=P(), check_vma=False))
+        out = np.asarray(g(jax.device_put(x, NamedSharding(mesh3, P(AXES3)))))
+        # leg log == priced legs, paths included (same CommSchedule object)
+        assert log == list(sched.legs) == priced, (frac, log, priced)
+        assert [l.path for l in log if type(l).__name__ == "SlowChunk"] \
+            == paths, (frac, paths)
+        if 0.0 < frac < 1.0:  # a genuinely split leg prices BOTH routes
+            assert dict(est.path_seconds).keys() == {"eth", "cxl"}, \
+                est.path_seconds
+        if ref is None:
+            ref = out  # the eth-only baseline
+        else:
+            assert np.array_equal(out, ref), (pipeline, frac)
+    err = np.max(np.abs(ref - expect)) / np.max(np.abs(expect))
+    assert err < 1e-6, err
+    mode = "pipelined" if pipeline else "sequential"
+    print(f"multi-path split 0/.25/.5/1 ({mode}): bitwise identical across "
+          "ratios, == psum, leg log == priced legs per path OK")
+
+# ---- path JSON: round-trip preserves routes; old JSON defaults to eth ------
+
+cfg = SyncConfig("hier_striped", chunks=4, path_split=(("cxl", 0.5),))
+sched = schedule_from_axes(("data", "host"), "pod", cfg, (8192,), 0, sizes,
+                           tier_names=names)
+rt = CommSchedule.from_json(sched.to_json())
+assert rt == sched
+assert [l.path for l in rt.slow_legs] == [l.path for l in sched.slow_legs] \
+    == ["eth", "eth", "cxl", "cxl"]
+# pre-multipath plans: no "path" keys, no "path_split" — every sub-flow
+# must come back as "eth" and the cfg as split-free
+eth = schedule_from_axes(("data", "host"), "pod",
+                         SyncConfig("hier_striped", chunks=4), (8192,), 0,
+                         sizes, tier_names=names)
+d = eth.to_dict()
+assert not any("path" in ld for ld in d["legs"]), d["legs"]
+del d["cfg"]["path_split"]  # what a pre-multipath writer emitted
+old = CommSchedule.from_dict(d)
+assert old == eth
+assert all(l.path == "eth" for l in old.slow_legs)
+print("path JSON: round-trip preserves routes, old JSON defaults to eth OK")
 
 print("ALL OK")

@@ -1,4 +1,5 @@
-"""Coverage for the JAX-side memory-pool analogues (repro.core.memory_pool).
+"""Coverage for the JAX-side memory-pool analogues (repro.core.staging_utils,
+formerly repro.core.memory_pool — the old path survives as a deprecation shim).
 
 These utilities map the paper's §4.1/§4.3 mechanisms onto TPU-native
 idioms; until now they shipped untested:
@@ -19,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def test_donated_jit_reuses_buffers_across_steps():
-    from repro.core.memory_pool import donated_jit
+    from repro.core.staging_utils import donated_jit
 
     @donated_jit
     def step(params, opt, grads):
@@ -46,7 +47,7 @@ def test_donated_jit_reuses_buffers_across_steps():
 
 
 def test_donated_jit_custom_argnums():
-    from repro.core.memory_pool import donated_jit
+    from repro.core.staging_utils import donated_jit
 
     @donated_jit(donate_argnums=(1,))
     def f(x, carry):
@@ -60,7 +61,7 @@ def test_donated_jit_custom_argnums():
 
 
 def test_staging_buffers_round_robin_and_sharding():
-    from repro.core.memory_pool import StagingBuffers
+    from repro.core.staging_utils import StagingBuffers
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
     sharding = NamedSharding(mesh, P())
     staging = StagingBuffers(sharding, n_slots=2)
@@ -77,7 +78,7 @@ def test_staging_buffers_round_robin_and_sharding():
 
 
 def test_offload_sharding_falls_back_without_pinned_host():
-    from repro.core.memory_pool import (host_memory_kind_available,
+    from repro.core.staging_utils import (host_memory_kind_available,
                                         offload_sharding)
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
     plain = offload_sharding(mesh, P(), offload=False)
@@ -90,3 +91,20 @@ def test_offload_sharding_falls_back_without_pinned_host():
     # either way the result must be usable for an actual placement
     x = jax.device_put(np.ones((4,), np.float32), offloaded)
     np.testing.assert_array_equal(np.asarray(x), 1.0)
+
+
+def test_memory_pool_shim_reexports_with_deprecation():
+    # the pre-rename import path must keep working (one release of grace)
+    # but warn: repro.core.memory_pool collided with repro.core.mempool
+    import importlib
+    import sys
+    import warnings
+    sys.modules.pop("repro.core.memory_pool", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        shim = importlib.import_module("repro.core.memory_pool")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.core import staging_utils
+    for name in ("donated_jit", "host_memory_kind_available",
+                 "with_memory_kind", "offload_sharding", "StagingBuffers"):
+        assert getattr(shim, name) is getattr(staging_utils, name)

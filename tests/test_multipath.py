@@ -1,0 +1,229 @@
+"""Multi-path slow legs — pure-Python coverage (no devices).
+
+The device-level contracts (bitwise routing invariance, leg-log parity)
+live in ``tests/batteries/schedule_battery.py`` /
+``nicpool_battery.py``; these tests lock the plumbing: ``PathSpec``
+declaration and validation, ``assign_paths`` rounding, per-path pricing
+(including the split-leg ``max`` and the undeclared-route degradation),
+per-path sim parity, planner split search and its eth-only degenerate.
+"""
+import json
+
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.nicpool import NicPool
+from repro.core.schedule import (CommSchedule, SyncConfig, assign_paths,
+                                 build_schedule, schedule_from_axes)
+from repro.core.topology import (FabricSpec, PathSpec, as_fabric,
+                                 cxl_shortcut_path, paper_prototype_topology,
+                                 three_tier_fabric)
+from repro.sim.fabric_sim import Tenant, simulate
+
+SIZES = {"data": 2, "host": 2, "pod": 2}
+NAMES = {"data": "ici", "host": "cxl", "pod": "dcn"}
+
+
+def _fab():
+    return three_tier_fabric(num_pods=2, hosts_per_pod=2, chips_per_host=2)
+
+
+def _sched(frac, chunks=4, pipeline=False, path="cxl"):
+    split = ((path, frac),) if frac > 0 else None
+    cfg = SyncConfig("hier_striped", chunks=chunks, pipeline=pipeline,
+                     path_split=split)
+    return schedule_from_axes(("data", "host"), "pod", cfg, (1 << 18,), 0,
+                              SIZES, tier_names=NAMES)
+
+
+# ---------------------------------------------------------------------------
+# topology: PathSpec declaration
+# ---------------------------------------------------------------------------
+
+
+def test_pathspec_declaration_and_lookup():
+    fab = _fab().with_paths(cxl_shortcut_path(lanes=2.0))
+    assert fab.path_names == ("eth", "cxl")
+    spec = fab.path_named("cxl")
+    assert spec is not None and spec.lanes == 2.0
+    assert fab.path_named("loop") is None
+    t = fab.path_tier("cxl", leg_axis="pod", leg_size=2)
+    assert (t.axis, t.size, t.bw, t.lanes) == ("pod", 2, spec.bw, 2.0)
+    # eth (and any undeclared route) resolves to the slowest tier
+    assert fab.path_tier("eth") is fab.slowest
+    assert fab.path_tier("loop") is fab.slowest
+
+
+def test_pathspec_validation():
+    with pytest.raises(ValueError):
+        _fab().with_paths(PathSpec("eth", bw=1e9, latency=1e-6))
+    with pytest.raises(ValueError):
+        _fab().with_paths(PathSpec("nvlink", bw=1e9, latency=1e-6))
+    with pytest.raises(ValueError):
+        _fab().with_paths(cxl_shortcut_path(), cxl_shortcut_path())
+    with pytest.raises(ValueError):
+        _fab().with_paths(PathSpec("cxl", bw=0.0, latency=1e-6))
+
+
+# ---------------------------------------------------------------------------
+# schedule: split assignment + serialization
+# ---------------------------------------------------------------------------
+
+
+def test_assign_paths_rounding_and_order():
+    # trailing indices reroute; eth keeps the lead (ring-latency charge)
+    assert assign_paths(4, (("cxl", 0.5),)) == ("eth", "eth", "cxl", "cxl")
+    assert assign_paths(4, (("cxl", 0.25),)) == ("eth", "eth", "eth", "cxl")
+    # half-up rounding: 0.25 of 2 chunks still reroutes one sub-flow
+    assert assign_paths(2, (("cxl", 0.25),)) == ("eth", "cxl")
+    assert assign_paths(4, None) == ("eth",) * 4
+    assert assign_paths(3, (("cxl", 1.0),)) == ("cxl",) * 3
+    # two routes: declaration order fills from the end, never oversubscribes
+    assert assign_paths(4, (("cxl", 0.5), ("loop", 0.5))) \
+        == ("loop", "loop", "cxl", "cxl")
+
+
+def test_path_split_config_validation():
+    with pytest.raises(ValueError):
+        SyncConfig(path_split=(("nvlink", 0.5),))
+    with pytest.raises(ValueError):
+        SyncConfig(path_split=(("cxl", 1.5),))
+    with pytest.raises(ValueError):
+        SyncConfig(path_split=(("cxl", 0.7), ("loop", 0.7)))
+    # lists normalize to tuples (JSON round-trip shape)
+    cfg = SyncConfig(path_split=[["cxl", 0.5]])
+    assert cfg.path_split == (("cxl", 0.5),)
+
+
+def test_json_roundtrip_and_old_plan_compat():
+    s = _sched(0.5)
+    rt = CommSchedule.from_json(s.to_json())
+    assert rt == s
+    assert [l.path for l in rt.slow_legs] == ["eth", "eth", "cxl", "cxl"]
+    # eth-only schedules emit NO path keys — pre-multipath readers see
+    # the same leg dicts they always did
+    d = _sched(0.0).to_dict()
+    assert not any("path" in ld for ld in d["legs"])
+    # ... and pre-multipath JSON (no "path", no "path_split") still loads
+    del d["cfg"]["path_split"]
+    old = CommSchedule.from_dict(json.loads(json.dumps(d)))
+    assert old == _sched(0.0)
+    assert all(l.path == "eth" for l in old.slow_legs)
+
+
+# ---------------------------------------------------------------------------
+# cost model: per-path pricing
+# ---------------------------------------------------------------------------
+
+
+def test_split_leg_priced_max_over_paths():
+    fab = _fab().with_paths(cxl_shortcut_path())
+    cm = CostModel(fab)
+    est = cm.from_schedule(_sched(0.5))
+    by_path = dict(est.path_seconds)
+    assert set(by_path) == {"eth", "cxl"}
+    # sequential split leg: the routes drain concurrently — the slow
+    # phase costs the max share, and the total reflects it
+    fast = est.total_s - est.slow_effective_s
+    assert est.slow_effective_s == max(by_path.values())
+    assert est.total_s == pytest.approx(fast + max(by_path.values()))
+    # the eth-only pricing of the same payload is strictly worse
+    assert est.total_s < cm.from_schedule(_sched(0.0)).total_s
+
+
+def test_eth_degenerate_prices_bitwise():
+    fab = _fab()
+    fab_mp = fab.with_paths(cxl_shortcut_path())
+    for pipeline in (False, True):
+        s = _sched(0.0, pipeline=pipeline)
+        assert CostModel(fab_mp).from_schedule(s).total_s \
+            == CostModel(fab).from_schedule(s).total_s
+
+
+def test_undeclared_route_degrades_to_eth():
+    fab = _fab()  # declares no paths
+    est = CostModel(fab).from_schedule(_sched(0.5, path="loop"))
+    ref = CostModel(fab).from_schedule(_sched(0.0))
+    assert est.total_s == ref.total_s
+    assert dict(est.path_seconds).keys() <= {"eth"}
+
+
+def test_per_path_granted_lanes_mapping():
+    fab = _fab().with_paths(cxl_shortcut_path())
+    cm = CostModel(fab)
+    s = _sched(0.5)
+    solo = cm.from_schedule(s)
+    # contending only the eth route slows only the eth share
+    est = cm.from_schedule(s, granted_lanes={"eth": fab.slowest.lanes / 2})
+    assert dict(est.path_seconds)["eth"] \
+        == pytest.approx(2 * dict(solo.path_seconds)["eth"])
+    assert dict(est.path_seconds)["cxl"] \
+        == pytest.approx(dict(solo.path_seconds)["cxl"])
+
+
+# ---------------------------------------------------------------------------
+# sim: per-path lane groups
+# ---------------------------------------------------------------------------
+
+
+def test_sim_price_parity_across_ratios():
+    fab = _fab().with_paths(cxl_shortcut_path())
+    cm = CostModel(fab)
+    for pipeline in (False, True):
+        for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+            s = _sched(frac, pipeline=pipeline)
+            est = cm.from_schedule(s)
+            res = simulate(fab, [Tenant("t0", s)])
+            assert res.makespan == pytest.approx(est.total_s, rel=1e-2), \
+                (pipeline, frac)
+
+
+def test_sim_contention_per_route():
+    fab = _fab().with_paths(cxl_shortcut_path())
+    cm = CostModel(fab)
+    s = _sched(0.5)
+    pool = NicPool(lanes=fab.slowest.lanes)
+    cxl = NicPool.for_path(fab, "cxl")
+    res = simulate(fab, [Tenant("a", s), Tenant("b", s)],
+                   pool=pool, path_pools={"cxl": cxl})
+    est = cm.from_schedule(s, granted_lanes={
+        "eth": pool.fair_share(2), "cxl": cxl.fair_share(2)})
+    assert res.makespan == pytest.approx(est.total_s, rel=1e-9)
+    assert set(res.path_pools) == {"cxl"}
+
+
+# ---------------------------------------------------------------------------
+# planner: split search
+# ---------------------------------------------------------------------------
+
+
+def test_planner_picks_split_and_degenerates_exactly():
+    import jax
+    import numpy as np
+    from repro.core.planner import Planner
+
+    fab0 = as_fabric(paper_prototype_topology())
+    fab = fab0.with_paths(cxl_shortcut_path())
+    shapes = {"w": jax.ShapeDtypeStruct((1 << 20,), np.dtype("float32"))}
+    plan0 = Planner(fab0).plan(shapes)
+    planm = Planner(fab).plan(shapes)
+    sec = planm.sections[0]
+    assert sec.sync.path_split, "shortcut declared but no split searched"
+    assert any(l.path == "cxl" for l in sec.schedule.slow_legs)
+    assert planm.est_total_s < plan0.est_total_s
+    # the same fabric WITHOUT declared paths reproduces today's plan
+    # byte-for-byte (the 100%-eth degenerate)
+    assert Planner(fab.with_paths()).plan(shapes).to_json() == plan0.to_json()
+
+
+def test_planner_all_to_all_split():
+    from repro.core.planner import Planner
+
+    fab0 = as_fabric(paper_prototype_topology())
+    fab = fab0.with_paths(cxl_shortcut_path())
+    n = Planner(fab).domain_size
+    a2a0 = Planner(fab0).plan_all_to_all((n, 1 << 16))
+    a2am = Planner(fab).plan_all_to_all((n, 1 << 16))
+    cm = CostModel(fab)
+    assert cm.from_schedule(a2am).total_s < cm.from_schedule(a2a0).total_s
+    assert Planner(fab.with_paths()).plan_all_to_all((n, 1 << 16)) == a2a0

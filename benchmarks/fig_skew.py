@@ -1,0 +1,128 @@
+"""Beyond-paper figure: skew-aware MoE dispatch scheduling (Zipf sweep).
+
+Real routers are not uniform: expert popularity follows a Zipf-like
+law, so the dispatch all-to-all is an INCAST — the member owning the
+hot experts receives far more bytes than the cold tail.  A
+uniform-assuming plan must still pad every expert slab to the hottest
+expert's capacity ``C_exec = max_e C_e`` (the dispatch buffer is
+rectangular), so it moves ``E * C_exec`` rows on the wire; the
+skew-aware plan (``moe_dispatch_schedule(router_logits=...)``) carries
+per-member ``dest_sizes`` — only the TRUE ``sum_e C_e`` crosses the
+fabric, and the planner's chunking / staging / path split are decided
+from the skewed sizes (hot flows can ride the CXL shortcut while the
+cold tail stays on Ethernet).
+
+Sweep: Zipf exponent alpha in {0, 0.5, 1.0, 1.5}; synthetic router
+logits ``-alpha * log(rank)`` + Gumbel noise (Gumbel-top-k draws each
+token's experts from the Zipf law; alpha=0 degenerates to uniform).
+Two expert placements per alpha:
+
+  * **packed**: experts sorted by popularity, so one member owns the
+    whole hot head — the worst incast;
+  * **rebalanced**: popularity ranks dealt round-robin across members
+    (the hot-expert rebalancing a deployment would do), flattening the
+    per-member row sums.
+
+Assertions: sim-vs-price parity < 1% for every plan; the skew-aware
+plan beats the uniform-assuming plan by a double-digit percentage at
+alpha >= 1.0 (rebalanced placement); at alpha = 0 the win collapses to
+the finite-sample noise floor (the skew machinery degenerates cleanly,
+and never loses).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import MemPoolSpec
+from repro.core.planner import Planner
+from repro.core.topology import as_fabric, cxl_shortcut_path, loopback_path
+from repro.sim.fabric_sim import Tenant, simulate
+
+ALPHAS = (0.0, 0.5, 1.0, 1.5)
+
+
+def zipf_logits(rng, tokens: int, num_experts: int, alpha: float,
+                placement: str, members: int) -> np.ndarray:
+    """(tokens, E) synthetic router logits whose top-k routing follows a
+    Zipf(alpha) expert-popularity law.  ``placement`` maps popularity
+    rank -> expert id: "packed" keeps ranks contiguous (member 0 owns
+    the hot head), "rebalanced" deals ranks round-robin across the
+    ``members`` expert slabs."""
+    ranks = np.arange(num_experts)
+    if placement == "rebalanced":
+        epm = num_experts // members
+        expert_of_rank = (ranks % members) * epm + ranks // members
+    else:
+        expert_of_rank = ranks
+    logp = np.zeros(num_experts)
+    logp[expert_of_rank] = -alpha * np.log1p(ranks)
+    return logp[None, :] + rng.gumbel(size=(tokens, num_experts))
+
+
+def run(smoke: bool = False):
+    from benchmarks.paper_workloads import proto_topo
+    from repro.configs import get_arch, get_smoke_arch
+    from repro.models.layers import moe_dispatch_schedule
+
+    rows = []
+    arch = get_smoke_arch("deepseek-moe-16b") if smoke \
+        else get_arch("deepseek-moe-16b")
+    moe = arch.moe
+    tokens = 512 if smoke else 8192
+
+    mem = MemPoolSpec.build(local_bw=50e9, local_channels=2, device_bw=25e9,
+                            devices=2, device_latency=2e-6)
+    fab = as_fabric(proto_topo(8.0)) \
+        .with_paths(cxl_shortcut_path(), loopback_path()) \
+        .with_mem(mem)
+    planner = Planner(fab, min_chunk_numel=1 << 10)
+    cm = CostModel(fab)
+    n = planner.domain_size
+    rng = np.random.default_rng(0)
+
+    def plan_and_time(logits):
+        """(naive_s, skew_s, parity_errs, skew_sched) — the
+        uniform-assuming plan moves the rectangular E*C_exec buffer the
+        dispatch pads to; the skew-aware plan plans the same buffer
+        with per-member dest_sizes."""
+        skew = moe_dispatch_schedule(arch, tokens, planner,
+                                     router_logits=logits)
+        # same executed payload, planned with the uniform prior
+        naive = planner.plan_all_to_all(skew.shape)
+        out = []
+        for s in (naive, skew):
+            est = cm.from_schedule(s, mem=True)
+            res = simulate(fab, [Tenant("t0", s)], cost=cm)
+            err = abs(res.makespan - est.total_s) / est.total_s
+            assert err < 0.01, (s.describe(), err)
+            out.append((res.makespan, err))
+        (naive_s, e0), (skew_s, e1) = out
+        return naive_s, skew_s, max(e0, e1), skew
+
+    for alpha in ALPHAS:
+        for placement in ("packed", "rebalanced"):
+            logits = zipf_logits(rng, tokens, moe.num_experts, alpha,
+                                 placement, n)
+            naive_s, skew_s, err, sched = plan_and_time(logits)
+            win = (naive_s - skew_s) / naive_s
+            if alpha == 0.0:
+                # finite-sample routing noise still pads the rectangle a
+                # little (C_exec = max_e C_e over noisy counts), so the
+                # honest degenerate check is "small and never negative"
+                assert -1e-9 <= win < 0.10, \
+                    f"alpha=0 must degenerate to ~the uniform plan: {win}"
+            if alpha >= 1.0 and placement == "rebalanced":
+                assert win >= 0.10, \
+                    f"skew-aware plan must win double-digit % at " \
+                    f"alpha={alpha}: {win:.3f}"
+            rows.append((f"skew/alpha{alpha}/{placement}",
+                         skew_s * 1e6,
+                         f"win={win * 100:.1f}%_parity_err={err * 100:.2f}%"
+                         f"_plan={sched.describe().split(': ')[1]}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(smoke=True):
+        print(f"{name},{us:.3f},{derived}")

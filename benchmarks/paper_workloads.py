@@ -11,10 +11,12 @@ Trace assumptions (documented per DESIGN.md §8):
     1/3 of peers are intra-rack (4 CNs, 2 racks).
   * ResNet18 DDP: 11M fp32 params, Gloo ring all-reduce.
   * TinyStories LLM: 1M fp32 params, all-to-all gradient exchange.
-  * WordCount: 3 mappers -> 1 reducer, 256 MB shuffle — since PR 5
-    REPLAYED on the NIC-pool arbiter (the incast flows time-share the
-    reducer's single NIC in the baseline, stripe over the rack pool in
-    DFabric) instead of closed-form division.
+  * WordCount: 3 mappers -> 1 reducer, 256 MB shuffle — since PR 7 a
+    PER-DESTINATION skewed all-to-all (``dest_sizes`` puts the whole
+    shuffle on the reducer's row) priced by the incast bound and
+    replayed through the NIC-pool arbiter by the generic
+    build/price/simulate contract, sim==price asserted; this retires
+    the bespoke ``LaneRequest`` replay PR 5 introduced.
   * Redis: open-loop M/D/1 queueing at the NIC; DFabric spreads load over
     the pool and pays far-memory latency (the paper's B=C crossover).
 
@@ -32,7 +34,6 @@ from dataclasses import dataclass
 from typing import Dict, Tuple
 
 from repro.core.cost_model import CostModel
-from repro.core.nicpool import LaneRequest, NicPool
 from repro.core.topology import HardwareSpec, TwoTierTopology
 
 C_LINK = 50e9  # "CXL" fast-tier link rate in the prototype
@@ -86,29 +87,60 @@ def llm_a2a(theta: float) -> Tuple[float, float]:
 
 
 def wordcount(theta: float) -> Tuple[float, float]:
-    """3 mappers -> 1 reducer shuffle, REPLAYED on the NIC-pool arbiter
-    (paper §6.2 WordCount; EXPERIMENTS.md §Perf cell C).
+    """3 mappers -> 1 reducer shuffle as a PER-DESTINATION skewed
+    all-to-all (paper §6.2 WordCount; EXPERIMENTS.md §Perf cell C and
+    §Skew).
 
-    Baseline: all three mappers' flows incast at the reducer's single
-    ToR-attached NIC and time-share that one lane (processor sharing —
-    the arbiter's makespan is the serialized 3x transfer the paper
-    measures).  DFabric: the two cross-rack mappers' flows stripe over
-    the rack's whole NIC pool, and the intra-rack mapper's shuffle rides
-    the CXL fabric pass-by-reference; the reducer consumes the local leg
-    after the pooled incast drains."""
+    The shuffle is the extreme incast: ``dest_sizes`` puts every byte on
+    the reducer's row and zero on everyone else's, and the generic
+    build/price/simulate contract does the rest — the cost model's
+    incast bound charges ``(n-1) * shuffle`` at the pool rate and
+    ``fabric_sim`` replays the same flows through the NIC-pool arbiter
+    (both are asserted to agree, retiring the bespoke ``LaneRequest``
+    replay this function carried before per-destination flows existed).
+
+    Baseline: a 4-member domain (reducer + 3 mappers) whose pool is the
+    reducer's single ToR-attached NIC lane — the three incast flows
+    time-share it, the serialized 3x transfer the paper measures.
+    DFabric: the two cross-rack mappers incast over the rack's 2-lane
+    NIC pool (a 3-member domain), and the intra-rack mapper's shuffle
+    rides the CXL fabric pass-by-reference (a 2-member domain at the
+    fabric rate); the reducer consumes the local leg after the pooled
+    incast drains."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core.schedule import SyncConfig, build_all_to_all
+    from repro.core.topology import as_fabric
+    from repro.sim.fabric_sim import Tenant, simulate
+
     topo = proto_topo(theta)
     shuffle = 256e6  # bytes per mapper
-    dcn = topo.hw.dcn_bw
-    # baseline incast: 3 equal flows, one lane at NIC rate B
-    base_pool = NicPool(lanes=1.0)
-    t_base = max(g.finish for g in base_pool.run(
-        [LaneRequest(f"mapper{i}", work=shuffle / dcn) for i in range(3)]))
-    # dfabric: 2 cross-rack flows, free to burst over the whole pool
-    pool = NicPool(lanes=topo.chips_per_pod * topo.dcn_lanes)
-    t_cross = max(g.finish for g in pool.run(
-        [LaneRequest(f"mapper{i}", work=shuffle / dcn, max_lanes=pool.lanes)
-         for i in range(2)]))
-    t_df = t_cross + shuffle / topo.hw.ici_bw
+    cfg = SyncConfig(strategy="hier_striped", chunks=1, pipeline=False)
+
+    def incast(n: int, lanes: float, hw: HardwareSpec) -> float:
+        """Simulated makespan of an n-member exchange whose bytes ALL
+        target member 0 (the reducer), sim==price asserted."""
+        fab = as_fabric(TwoTierTopology(num_pods=n, pod_shape=(1,),
+                                        hw=hw, dcn_lanes=lanes))
+        dest = [shuffle] + [0.0] * (n - 1)
+        s = build_all_to_all(fab, cfg, (n, int(shuffle) // 4), "float32",
+                             dest_sizes=dest)
+        cm = CostModel(fab)
+        est = cm.from_schedule(s)
+        res = simulate(fab, [Tenant("shuffle", s)], cost=cm)
+        err = abs(res.makespan - est.total_s) / max(est.total_s, 1e-30)
+        assert err < 1e-9, ("wordcount sim==price", n, lanes, err)
+        return res.makespan
+
+    # baseline: reducer + 3 mappers on ONE NIC lane at rate B
+    t_base = incast(4, 1.0, topo.hw)
+    # dfabric: the 2 cross-rack mappers over the rack's whole pool ...
+    pool_lanes = topo.chips_per_pod * topo.dcn_lanes
+    t_cross = incast(3, pool_lanes, topo.hw)
+    # ... then the intra-rack mapper at the CXL-fabric rate
+    hw_intra = dc_replace(topo.hw, dcn_bw=topo.hw.ici_bw,
+                          dcn_latency=topo.hw.ici_latency)
+    t_df = t_cross + incast(2, 1.0, hw_intra)
     return t_base, t_df
 
 

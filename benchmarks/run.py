@@ -8,9 +8,11 @@ parseable, and the exit code is nonzero when any module failed.  Run:
 ``--smoke`` runs the fast analytic/simulated figure subset (fig_ntier,
 fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention,
 fig_mempool_scaling, fig_multipath — which asserts per-path sim-vs-price
-parity — and fig9_apps, whose wordcount and cell C MoE-dispatch rows go
-through the NIC/memory-pool simulator) at tiny payload sizes — the CI sanity job (the workflow uploads the CSV as an
-artifact and fails on ERROR rows).
+parity — fig_skew — which asserts the skew-aware plan's double-digit
+Zipf win and skewed sim==price parity — and fig9_apps, whose wordcount
+and cell C MoE-dispatch rows go through the NIC/memory-pool simulator)
+at tiny payload sizes — the CI sanity job (the workflow uploads the CSV
+as an artifact and fails on ERROR rows).
 """
 from __future__ import annotations
 
@@ -29,16 +31,17 @@ def main() -> None:
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
                             fig12_nic_scaling, fig13_timesharing,
                             fig_mempool_scaling, fig_multipath, fig_ntier,
-                            fig_overlap, fig_pool_contention, roofline,
-                            table4_breakdown)
+                            fig_overlap, fig_pool_contention, fig_skew,
+                            roofline, table4_breakdown)
     if args.smoke:
         modules = [fig_ntier, fig_overlap, fig9_apps, fig13_timesharing,
-                   fig_pool_contention, fig_mempool_scaling, fig_multipath]
+                   fig_pool_contention, fig_mempool_scaling, fig_multipath,
+                   fig_skew]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
                    fig12_nic_scaling, fig13_timesharing, fig_mempool_scaling,
                    fig_multipath, fig_ntier, fig_overlap,
-                   fig_pool_contention, table4_breakdown, roofline]
+                   fig_pool_contention, fig_skew, table4_breakdown, roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -241,6 +241,36 @@ class CostModel:
         return (spec.traffic_factor * grp * wire_bytes / eff
                 + spec.staging_latency(staging))
 
+    def _mem_leg_seconds_skewed(self, dest_bytes: Sequence[float],
+                                tier: Tier, granted_lanes: float, spec,
+                                staging: Optional[str],
+                                granted_mem_bw: Optional[float]) -> float:
+        """Skewed twin of :meth:`_mem_leg_seconds`: a skewed slow leg's
+        memory traffic is its (n-1) per-destination flows at their TRUE
+        bytes (``dest_bytes``, hottest row included once — NOT the
+        incast bound, which is a wire-receiver property), each capped at
+        an equal share of the leg's wire draw, all sharing the pool by
+        max-min — exactly the flow set ``repro.sim.fabric_sim`` submits.
+        Equal caps and equal priorities reduce the waterfill to a
+        progressive fill: every active flow drains at the same rate, so
+        flows complete smallest-first and the pool share rises (up to
+        the cap) as they do."""
+        grp = max(self.fabric.n_fast, 1)
+        tf = spec.traffic_factor
+        pool_bw = granted_mem_bw if granted_mem_bw is not None \
+            else spec.deliverable_bw(staging)
+        ndest = max(len(dest_bytes), 1)
+        cap = tf * grp * tier.bw * max(granted_lanes, 1e-30) / ndest
+        rem = sorted(tf * grp * float(b) for b in dest_bytes if b > 0)
+        t = 0.0
+        while rem:
+            share = max(min(pool_bw / len(rem), cap), 1e-30)
+            dt = rem[0] / share
+            t += dt
+            drained = share * dt
+            rem = [b - drained for b in rem[1:]]
+        return t + spec.staging_latency(staging)
+
     # ---- schedule pricing ---------------------------------------------------
     def from_schedule(self, schedule: "sched.CommSchedule", *,
                       mem_bw_limit: Optional[float] = None,
@@ -350,15 +380,32 @@ class CostModel:
         fast_s = slow_s = 0.0
         slow_by_path: Dict[str, float] = {}
         slow_seq: List[Tuple[str, float]] = []  # issue order, for pipelining
+        # memory-pool serialization across CONCURRENT routes: the pool is
+        # one resource, so sub-flows riding different paths still queue
+        # their staged bytes behind each other.  Accumulate each slow
+        # leg's pure pool-drain time (bytes / pool grant, no per-flow
+        # cap, no latency tail) plus per-route tail sums; the multipath
+        # combine floors the slow phase at drain-total + slowest route's
+        # tails, which is exactly when the co-simulated pool empties.
+        pool_drain_s = 0.0
+        pool_tails: Dict[str, float] = {}
         first_slow = True
         for leg in schedule.legs:
             t = tier_for(leg)
             n = leg.size
             if isinstance(leg, sched.AllToAll):
                 # one hierarchical all-to-all stage: exchanges this tier's
-                # own sub-index — (n-1)/n of the (never-shrinking) payload
+                # own sub-index — (n-1)/n of the (never-shrinking) payload.
+                # Skewed stages (dest_sizes) charge the INCAST bound
+                # instead: the stage drains when the hottest sub-index has
+                # received its (n-1) incoming copies, so the wire time is
+                # (n-1) * max over destination rows, not the mean — on a
+                # uniform profile (each row payload/n) the two coincide.
                 if n <= 1:
                     secs = by = 0.0
+                elif leg.dest_sizes is not None:
+                    by = (n - 1) * max(leg.dest_sizes)
+                    secs = by / t.rate + (n - 1) * t.latency
                 else:
                     by = (n - 1) / n * payload
                     secs = by / t.rate + (n - 1) * t.latency
@@ -412,7 +459,23 @@ class CostModel:
                 if n <= 1:
                     secs = by = 0.0
                 else:
-                    by = xfer * (n - 1) / n * (payload / n_chunks) / ratio
+                    sel = None
+                    if leg.dest_sizes is not None:
+                        # incast bound on the skewed sub-flow: the slow
+                        # exchange drains when the hottest destination has
+                        # its (n-1) incoming per-destination flows — max
+                        # over rows, not the mean (dest_sizes are already
+                        # this chunk's share; uniform rows coincide with
+                        # the payload/n_chunks formula below).  ``sel``
+                        # keeps the (n-1) wire rows (the self row — no
+                        # wire — drops as the smallest), the TRUE bytes
+                        # the memory pool stages.
+                        sel = sorted(leg.dest_sizes,
+                                     reverse=True)[:max(n - 1, 1)]
+                        by = xfer * (n - 1) * sel[0] / ratio
+                    else:
+                        by = xfer * (n - 1) / n * (payload / n_chunks) \
+                            / ratio
                     # ring latency once on the FIRST ISSUED sub-flow (the
                     # lane_offset rotation must not change the total),
                     # then a launch overhead per extra sub-flow (matches
@@ -424,9 +487,26 @@ class CostModel:
                     if g is not None:
                         secs *= max(t.lanes, 1e-30) / g
                     if mem_spec is not None:
-                        secs = max(secs, self._mem_leg_seconds(
-                            by, t, g if g is not None else t.lanes,
-                            mem_spec, mem_staging, granted_mem_bw))
+                        g_lanes = g if g is not None else t.lanes
+                        if sel is not None:
+                            mem_secs = self._mem_leg_seconds_skewed(
+                                [xfer * b / ratio for b in sel], t,
+                                g_lanes, mem_spec, mem_staging,
+                                granted_mem_bw)
+                            by_pool = xfer * sum(sel) / ratio
+                        else:
+                            mem_secs = self._mem_leg_seconds(
+                                by, t, g_lanes, mem_spec, mem_staging,
+                                granted_mem_bw)
+                            by_pool = by
+                        secs = max(secs, mem_secs)
+                        grp = max(self.fabric.n_fast, 1)
+                        pbw = granted_mem_bw if granted_mem_bw is not None \
+                            else mem_spec.deliverable_bw(mem_staging)
+                        pool_drain_s += (mem_spec.traffic_factor * grp
+                                         * by_pool / max(pbw, 1e-30))
+                        pool_tails[p_eff] = pool_tails.get(p_eff, 0.0) \
+                            + mem_spec.staging_latency(mem_staging)
                 first_slow = False
                 slow_s += secs
                 if p_eff not in slow_by_path:
@@ -441,6 +521,11 @@ class CostModel:
             leg_charges.append(LegCharge(leg, secs, by))
 
         multipath = len(slow_by_path) > 1
+        # pool-serialization floor for concurrent routes: total drain
+        # plus the slowest route's latency tails (tails on different
+        # routes overlap; tails behind each other on one route add up)
+        pool_floor = pool_drain_s + max(pool_tails.values(), default=0.0) \
+            if multipath and pool_drain_s > 0.0 else 0.0
         if schedule.pipelined and schedule.chunks > 1:
             if multipath:
                 # exact replay of the simulator's per-route chained
@@ -459,6 +544,9 @@ class CostModel:
                     F += fast_per
                     tails[p] = max(F, tails.get(p, 0.0)) + secs
                 total = max([fast_s] + list(tails.values()))
+                if pool_floor > 0.0:
+                    # first sub-flow cannot stage before its fast stage
+                    total = max(total, fast_per + pool_floor)
             else:
                 total = max(slow_s, fast_s) \
                     + min(slow_s / schedule.chunks, fast_s / schedule.chunks)
@@ -467,7 +555,7 @@ class CostModel:
             # route's chain drains (single-route: the plain sum, bitwise
             # as before)
             slow_eff = max(slow_by_path.values()) if multipath else slow_s
-            total = fast_s + slow_eff
+            total = fast_s + max(slow_eff, pool_floor)
 
         # per-tier aggregates (slow tier LAST, for the slow_s accessors)
         agg: Dict[str, List] = {}

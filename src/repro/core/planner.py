@@ -103,6 +103,11 @@ class SyncPlan:
                        // slow_chunk only, when routed off the Ethernet
                        // pool ("cxl" | "loop"; absent == "eth"):
                        "path": "<route>",
+                       // slow_chunk / all_to_all only, when the exchange
+                       // is NON-UNIFORM (absent == uniform): per-
+                       // destination wire bytes, one per member of the
+                       // leg's tier (slow_chunk: this chunk's share):
+                       "dest_sizes": [<float>, ...],
                        // psum / reduce_scatter / slow_chunk, only when
                        // compressed:
                        "codec": "int8" | "topk"},
@@ -138,8 +143,13 @@ class SyncPlan:
         sub-flow rides that declared route ("cxl" / "loop") instead of
         the Ethernet pool.  Emitted only when != "eth", so pre-multipath
         plans are byte-identical and old JSON loads with every sub-flow
-        defaulting to "eth".  ``CommSchedule.from_json`` round-trips
-        this exactly."""
+        defaulting to "eth".  ``"dest_sizes"`` is likewise emitted only
+        on skewed legs (``Planner.plan_all_to_all(dest_sizes=...)`` —
+        hot-expert MoE dispatch / incast shuffles), so uniform plans
+        stay byte-identical; the executor never reads it (the executed
+        payload is the rectangular ``shape``), only the cost model's
+        incast bound and the simulator's per-destination flows do.
+        ``CommSchedule.from_json`` round-trips this exactly."""
         return json.dumps([
             dict(name=s.name, numel=s.numel, dtype=s.dtype,
                  strategy=s.sync.strategy, chunks=s.sync.chunks,
@@ -419,10 +429,12 @@ class Planner:
         return cfg, sd, s
 
     def plan_all_to_all(self, shape: Tuple[int, ...],
-                        dtype: str = "float32") -> CommSchedule:
-        """Search slow-leg chunk count x staging placement for ONE
-        all-to-all exchange over the DP domain (the §6.2 shuffle / MoE
-        dispatch), pricing each candidate with
+                        dtype: str = "float32",
+                        dest_sizes: Optional[Sequence[float]] = None
+                        ) -> CommSchedule:
+        """Search slow-leg chunk count x path split x staging placement
+        for ONE all-to-all exchange over the DP domain (the §6.2 shuffle
+        / MoE dispatch), pricing each candidate with
         ``CostModel.from_schedule(mem=True)`` — the ``kind="all_to_all"``
         twin of ``_search_section``.
 
@@ -434,20 +446,49 @@ class Planner:
         direction wire factor.  The winner carries the staging placement
         (``CommSchedule.staging``); concurrent exchanges can still be
         staggered with ``CommSchedule.with_lane_offset`` /
-        ``NicPool.stagger`` like any slow leg."""
+        ``NicPool.stagger`` (or, skew-aware, ``stagger_exchanges``).
+
+        ``dest_sizes`` (per-member wire bytes, slow-major — see
+        ``schedule.all_to_all_from_axes``) makes the search SKEW-AWARE:
+        every candidate carries the sizes, so the incast bound (max over
+        destination rows, not the mean) is what chunk counts, path
+        splits and staging placements are judged by — a hot destination
+        inflates the Ethernet pool's per-chunk charge until rerouting
+        sub-flows onto a declared shortcut ("cxl" / "loop") or flipping
+        the staging placement is strictly cheaper, decisions the
+        uniform-assuming search cannot reach.  The memory-bound chunk
+        clamp is likewise taken at the incast-equivalent volume
+        (``n_slow * max`` per-destination bytes), not the mean."""
         fab = self.fabric
         shape = tuple(int(s) for s in shape)
         numel = int(np.prod(shape))
         n_slow = fab.slowest.size if fab.depth > 1 else 1
         row = numel // n_slow if n_slow > 1 else numel
-        cap = self._mem_chunk_cap(numel, xfer=1.0)
+        cap_numel = numel
+        if dest_sizes is not None and n_slow > 1:
+            # chunk-clamp at the incast bound: the volume that actually
+            # gates the memory pool is (n-1) * max per-slow-destination
+            # bytes, i.e. the uniform-formula volume of an exchange
+            # n_slow * max(B_s) bytes big
+            probe = build_all_to_all(
+                fab, SyncConfig(strategy="hier_striped", chunks=1,
+                                pipeline=False),
+                shape, dtype, fast_sizes=self.fast_sizes,
+                dest_sizes=dest_sizes)
+            slow = probe.slow_legs
+            if slow and slow[0].dest_sizes:
+                cap_numel = max(1, int(
+                    n_slow * max(slow[0].dest_sizes)
+                    / dtype_itemsize("float32")))
+        cap = self._mem_chunk_cap(cap_numel, xfer=1.0)
         cands: List[Tuple[float, CommSchedule]] = []
         for c in self._candidate_chunks(row, cap):
             for split in self._path_split_candidates(c):
                 cfg = SyncConfig(strategy="hier_striped", chunks=c,
                                  pipeline=False, path_split=split)
                 s0 = build_all_to_all(fab, cfg, shape, dtype,
-                                      fast_sizes=self.fast_sizes)
+                                      fast_sizes=self.fast_sizes,
+                                      dest_sizes=dest_sizes)
                 for stg in self._staging_candidates():
                     s = s0.with_staging(stg)
                     cands.append(
@@ -455,6 +496,29 @@ class Planner:
         # first candidate at the minimum wins: more chunks only when
         # strictly cheaper, "pool" staging over "local" on ties
         return min(cands, key=lambda t: t[0])[1]
+
+    def stagger_exchanges(self, schedules: Sequence[Optional[CommSchedule]]
+                          ) -> List[CommSchedule]:
+        """Skew-aware NIC-pool stagger for CONCURRENT all-to-all
+        exchanges: offsets are assigned hottest exchange first (largest
+        max per-destination slow bytes — the incast bound that decides
+        who waits), so the skewed flows grab lane 0's head-of-line slot
+        and the cold tail interleaves behind them; uniform exchanges
+        keep ``NicPool.stagger``'s plain round-robin (list order)."""
+        def heat(s: Optional[CommSchedule]) -> float:
+            if s is None:
+                return 0.0
+            return max((max(l.dest_sizes) for l in s.slow_legs
+                        if l.dest_sizes), default=0.0)
+
+        order = sorted(range(len(schedules)),
+                       key=lambda i: -heat(schedules[i]))
+        offs = self.nic_pool.stagger([schedules[i] for i in order])
+        out: List[Optional[CommSchedule]] = [None] * len(schedules)
+        for k, i in enumerate(order):
+            s = schedules[i]
+            out[i] = s if s is None else s.with_lane_offset(offs[k])
+        return out
 
     def _section_estimate(self, sec: Section):
         """Cost estimate of one section under its chosen schedule; returns

@@ -162,7 +162,18 @@ class SlowChunk:
     a peer rack).  Routing is numerics-free: the executor splits and
     reassembles the payload by ``index`` regardless of path, so any
     split ratio lowers bitwise-identically; only pricing and the
-    simulator's lane arbitration see the route."""
+    simulator's lane arbitration see the route.
+
+    ``dest_sizes`` makes the sub-flow's per-destination traffic
+    NON-UNIFORM: ``dest_sizes[r]`` is the wire bytes THIS sub-flow
+    carries to slow-tier destination ``r`` (length ``size``, from a
+    symmetric per-member profile — every member sends the same sizes,
+    the MoE hot-expert / WordCount incast shape).  ``None`` (the
+    default) keeps the uniform ``payload / (size * chunks)`` split and
+    prices/simulates bitwise as before.  Like ``path`` it is
+    numerics-free: the executed exchange stays the rectangular
+    (capacity-padded) payload, only the cost model's incast bound and
+    the simulator's per-destination flow sizes see the skew."""
 
     index: int
     chunks: int
@@ -171,8 +182,14 @@ class SlowChunk:
     axis: str
     size: int
     path: str = "eth"
+    dest_sizes: Optional[Tuple[float, ...]] = None
 
     kind = "slow_chunk"
+
+    def __post_init__(self):
+        if self.dest_sizes is not None:
+            object.__setattr__(self, "dest_sizes",
+                               tuple(float(b) for b in self.dest_sizes))
 
 
 @dataclass(frozen=True)
@@ -192,13 +209,24 @@ class AllToAll:
     all-to-all (``kind="all_to_all"`` schedules only).  Stages run fastest
     tier first, so a stripe crossing a slower tier is one contiguous block
     and every member below carries its 1/members_below share; the local
-    payload size never changes (an all-to-all is a permutation)."""
+    payload size never changes (an all-to-all is a permutation).
+
+    ``dest_sizes[j]`` is the wire bytes this stage moves to the tier's
+    own sub-index ``j`` (length ``size``; the per-member row sizes
+    aggregated over this tier's digit — see ``all_to_all_from_axes``).
+    ``None`` keeps the uniform ``payload / size`` split."""
 
     tier: str
     axis: str
     size: int
+    dest_sizes: Optional[Tuple[float, ...]] = None
 
     kind = "all_to_all"
+
+    def __post_init__(self):
+        if self.dest_sizes is not None:
+            object.__setattr__(self, "dest_sizes",
+                               tuple(float(b) for b in self.dest_sizes))
 
 
 Leg = Union[ReduceScatter, Psum, SlowChunk, AllGather, AllToAll]
@@ -287,6 +315,24 @@ class CommSchedule:
                 raise ValueError(
                     f"slow chunk {l.index}: path must be one of "
                     f"{list(SLOW_PATHS)}: {l.path!r}")
+            ds = getattr(l, "dest_sizes", None)
+            if ds is not None:
+                if self.kind != "all_to_all":
+                    # a reduction has no per-destination rows — skewed
+                    # sizes on an all-reduce leg would be priced as an
+                    # exchange the executor never performs
+                    raise ValueError(
+                        "dest_sizes only apply to all_to_all schedules: "
+                        f"{l.kind} leg carries {len(ds)} sizes on a "
+                        f"kind={self.kind!r} schedule")
+                if len(ds) != l.size:
+                    raise ValueError(
+                        f"{l.kind} leg needs one dest size per member: "
+                        f"{len(ds)} sizes for size={l.size}")
+                if any(b < 0 for b in ds) or max(ds) <= 0:
+                    raise ValueError(
+                        f"dest_sizes must be non-negative with a positive "
+                        f"max: {ds}")
 
     # ---- structure ---------------------------------------------------------
     @property
@@ -371,9 +417,11 @@ class CommSchedule:
             elif isinstance(l, SlowChunk):
                 c = f",{l.codec}" if l.codec else ""
                 p = f"@{l.path}" if l.path != "eth" else ""
-                parts.append(f"slow[{l.index}/{l.chunks}{c}{p}]")
+                sk = "~" if l.dest_sizes is not None else ""
+                parts.append(f"slow[{l.index}/{l.chunks}{c}{p}{sk}]")
             elif isinstance(l, AllToAll):
-                parts.append(f"a2a[{l.axis}x{l.size}]")
+                sk = "~" if l.dest_sizes is not None else ""
+                parts.append(f"a2a[{l.axis}x{l.size}{sk}]")
             else:
                 parts.append(f"ag[{l.axis}x{l.size}]")
         mode = "pipelined" if self.pipelined else "sequential"
@@ -399,6 +447,9 @@ class CommSchedule:
                 d["chunks"] = l.chunks
                 if l.path != "eth":  # old-plan JSON stays byte-identical
                     d["path"] = l.path
+            if isinstance(l, (SlowChunk, AllToAll)) \
+                    and l.dest_sizes is not None:  # uniform stays bare
+                d["dest_sizes"] = list(l.dest_sizes)
             return d
 
         c = self.cfg
@@ -430,10 +481,16 @@ class CommSchedule:
         for ld in d["legs"]:
             k = _LEG_KINDS[ld["kind"]]
             if k is SlowChunk:
+                ds = ld.get("dest_sizes")
                 legs.append(SlowChunk(ld["index"], ld["chunks"],
                                       ld.get("codec"), ld["tier"],
                                       ld["axis"], ld["size"],
-                                      ld.get("path", "eth")))
+                                      ld.get("path", "eth"),
+                                      tuple(ds) if ds else None))
+            elif k is AllToAll:
+                ds = ld.get("dest_sizes")
+                legs.append(AllToAll(ld["tier"], ld["axis"], ld["size"],
+                                     tuple(ds) if ds else None))
             elif k is Psum:
                 legs.append(Psum(ld["tier"], ld["axis"], ld["size"],
                                  ld.get("codec")))
@@ -663,7 +720,8 @@ def build_schedule(fabric: FabricSpec, cfg: SyncConfig,
 def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
                          cfg: SyncConfig, shape: Sequence[int],
                          sizes: Mapping[str, int], dtype: str = "float32",
-                         tier_names: Optional[Mapping[str, str]] = None
+                         tier_names: Optional[Mapping[str, str]] = None,
+                         dest_sizes: Optional[Sequence[float]] = None
                          ) -> CommSchedule:
     """Build the all-to-all :class:`CommSchedule` from raw axis names +
     sizes (the generic core behind :func:`build_all_to_all`, fed live
@@ -679,6 +737,19 @@ def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
     transfer (the builder clamps ``chunks`` to divide the per-slow-row
     payload).  Unlike the all-reduce walk there is no down/up phase and
     the payload never shrinks; schedules are never pipelined.
+
+    ``dest_sizes`` makes the exchange NON-UNIFORM: ``dest_sizes[m]`` is
+    the wire bytes each member sends to DP member *m* (length
+    ``n_total``, slow-major like the payload rows; a symmetric profile —
+    every member sends the same sizes, e.g. per-expert MoE flows).  The
+    builder aggregates it per tier digit: each fast ``AllToAll`` leg
+    gets the row sizes summed over ITS sub-index, and each ``SlowChunk``
+    gets the per-slow-destination sums split evenly over the chunk
+    count.  ``None`` (the default) builds exactly the uniform schedule —
+    byte-identical ``to_json``.  The skew is an annotation (the executed
+    payload stays ``shape``); the cost model charges the incast bound
+    over the sizes and the simulator expands the per-destination flows
+    at them.
 
     Codecs do not apply: an all-to-all moves payload verbatim (there is
     no reduction for error feedback to absorb quantization into), so a
@@ -708,7 +779,28 @@ def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
             f"all-to-all payload must carry one row per DP member: "
             f"shape {shape} vs {n_total} members")
 
-    legs: list = [AllToAll(tname(a), a, n) for a, n in active]
+    ds = None
+    if dest_sizes is not None:
+        ds = [float(b) for b in dest_sizes]
+        if len(ds) != n_total:
+            raise ValueError(
+                f"dest_sizes needs one wire size per DP member: "
+                f"{len(ds)} sizes for {n_total} members")
+
+    def digit_sums(stride: int, n: int) -> Tuple[float, ...]:
+        """Row sizes summed over one tier's digit (rows are slow-major:
+        the fastest tier's digit is the least significant)."""
+        out = [0.0] * n
+        for m, b in enumerate(ds):
+            out[(m // stride) % n] += b
+        return tuple(out)
+
+    legs: list = []
+    stride = 1
+    for a, n in active:  # fastest first, so strides grow left to right
+        legs.append(AllToAll(tname(a), a, n,
+                             digit_sums(stride, n) if ds else None))
+        stride *= n
     chunks = 1
     if n_slow > 1:
         row = numel // n_slow  # per-slow-sub-index payload the chunks split
@@ -716,8 +808,15 @@ def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
         while chunks > 1 and row % chunks != 0:
             chunks -= 1
         paths = assign_paths(chunks, cfg.path_split)
+        slow_ds = None
+        if ds:
+            # per-slow-destination totals, split evenly over the chunks
+            # (every chunk slices an equal share of EVERY destination's
+            # payload — see lower_all_to_all)
+            slow_ds = tuple(b / chunks for b in digit_sums(stride, n_slow))
         legs += [SlowChunk(i, chunks, None, tname(slow_axis), slow_axis,
-                           n_slow, paths[i]) for i in range(chunks)]
+                           n_slow, paths[i], slow_ds)
+                 for i in range(chunks)]
     return CommSchedule(tuple(legs), shape, dtype, 0, chunks, False,
                         "all_to_all", cfg, kind="all_to_all")
 
@@ -725,12 +824,15 @@ def all_to_all_from_axes(fast_axes: Sequence[str], slow_axis: Optional[str],
 def build_all_to_all(fabric: FabricSpec, cfg: SyncConfig,
                      shape: Sequence[int], dtype: str = "float32",
                      fast_axes: Optional[Sequence[str]] = None,
-                     fast_sizes: Optional[Sequence[int]] = None
+                     fast_sizes: Optional[Sequence[int]] = None,
+                     dest_sizes: Optional[Sequence[float]] = None
                      ) -> CommSchedule:
     """Build the all-to-all schedule for one exchange from ``(FabricSpec,
     SyncConfig, shape)`` — the ``kind="all_to_all"`` twin of
     :func:`build_schedule`; same ``fast_axes`` / ``fast_sizes`` escape
-    hatch for meshes that differ from the hardware description."""
+    hatch for meshes that differ from the hardware description.
+    ``dest_sizes`` (per-member wire bytes, slow-major) makes the
+    exchange non-uniform — see :func:`all_to_all_from_axes`."""
     fab_fast = list(fabric.fast_tiers)
     axes = list(fast_axes) if fast_axes is not None \
         else [t.axis for t in fab_fast]
@@ -751,4 +853,4 @@ def build_all_to_all(fabric: FabricSpec, cfg: SyncConfig,
         sizes[slow_axis] = fabric.slowest.size
         names[slow_axis] = fabric.slowest.name
     return all_to_all_from_axes(axes, slow_axis, cfg, shape, sizes, dtype,
-                                tier_names=names)
+                                tier_names=names, dest_sizes=dest_sizes)

@@ -88,6 +88,26 @@ def cxl_shortcut_path(hw: Optional[HardwareSpec] = None,
     return PathSpec("cxl", bw=hw.cxl_bw, latency=hw.cxl_latency, lanes=lanes)
 
 
+def loopback_path(peer: Optional[HardwareSpec] = None,
+                  lanes: float = 1.0, hops: int = 2) -> PathSpec:
+    """The ``"loop"`` route: bounce slow-tier bytes off a PEER rack's
+    switch and back (detour load balancing — a flow rides the peer's
+    otherwise-idle uplink when its own rack's pool is hot).
+
+    ``peer`` is the peer rack's hardware description (its Ethernet /
+    DCN numbers are what the detour actually rides); the loop's
+    bandwidth is the peer's per-chip DCN rate and its latency pays the
+    DCN hop ``hops`` times (out to the peer switch and back — the
+    detour's extra traversal, 2 by default).  PR 6 priced and simulated
+    ``"loop"`` sub-flows but left the route underivable from a hardware
+    spec; this is the constructor the planner's fabric builders use."""
+    peer = peer or HardwareSpec()
+    if hops < 1:
+        raise ValueError(f"a loopback detour needs at least 1 hop: {hops}")
+    return PathSpec("loop", bw=peer.dcn_bw,
+                    latency=float(hops) * peer.dcn_latency, lanes=lanes)
+
+
 @dataclass(frozen=True)
 class Tier:
     """One interconnect tier.

@@ -387,8 +387,21 @@ def moe_capacity(tokens: int, top_k: int, num_experts: int,
     return min(C, tokens)
 
 
+def moe_expert_capacities(counts, tokens: int,
+                          capacity_factor: float) -> Tuple[int, ...]:
+    """Per-expert capacity twin of :func:`moe_capacity` — size expert
+    ``e``'s slab from its MEASURED routed-token count instead of the
+    uniform ``tokens * top_k / num_experts`` prior.  Under uniform
+    counts (``cnt_e == tokens * top_k / E``) this reduces to exactly
+    ``moe_capacity`` for every expert, so skew-aware planning is a
+    strict generalization, not a fork of the formula."""
+    return tuple(min(int(max(8, math.ceil(float(c) * capacity_factor))),
+                     tokens) for c in counts)
+
+
 def moe_dispatch_schedule(arch: ArchConfig, tokens_per_member: int,
-                          planner, groups: int = 1):
+                          planner, groups: int = 1,
+                          router_logits=None):
     """Planner-searched all-to-all schedule for the MoE dispatch — the
     §Perf cell C traffic as per-expert NIC-pool / memory-pool flows.
 
@@ -403,11 +416,22 @@ def moe_dispatch_schedule(arch: ArchConfig, tokens_per_member: int,
     result is a ``kind="all_to_all"`` :class:`CommSchedule` with the
     chunk count and staging placement searched per
     ``Planner.plan_all_to_all``, and ``apply_moe(dispatch_schedule=...)``
-    guards against capacity drift."""
+    guards against capacity drift.
+
+    ``router_logits`` (optional, shape ``(tokens_per_member, E)`` or
+    ``(G, tokens_per_group, E)``): MEASURED router logits from a
+    profiling step.  When given, each expert's slab is sized from its
+    own routed-token count (:func:`moe_expert_capacities`, max over
+    groups), the dispatch buffer pads to ``C_exec = max_e C_e``, and
+    the schedule carries per-MEMBER ``dest_sizes`` — member *r*
+    receives ``G * sum(C_e for e in r's slab) * d`` elements, so hot
+    experts become hot per-destination flows the cost model's incast
+    bound, the simulator and the planner's path split all see.  Cold
+    experts' padding (``C_exec - C_e``) stays off the wire.  ``None``
+    keeps the uniform-prior path bit-for-bit."""
     moe = arch.moe
-    tokens_per_group = tokens_per_member // max(groups, 1)
-    C = moe_capacity(tokens_per_group, moe.top_k, moe.num_experts,
-                     moe.capacity_factor)
+    G = max(groups, 1)
+    tokens_per_group = tokens_per_member // G
     n = planner.domain_size  # the domain the planner actually plans for
     if n > 1 and moe.num_experts % n != 0:
         # a floored E//n would silently drop part of the dispatch
@@ -418,8 +442,39 @@ def moe_dispatch_schedule(arch: ArchConfig, tokens_per_member: int,
             f"{n}-member DP domain — expert parallelism needs "
             f"E % members == 0 to plan per-expert flows")
     experts_per_member = max(moe.num_experts // max(n, 1), 1)
-    shape = (n, max(groups, 1) * experts_per_member * C * arch.d_model)
-    return planner.plan_all_to_all(shape)
+    if router_logits is None:
+        C = moe_capacity(tokens_per_group, moe.top_k, moe.num_experts,
+                         moe.capacity_factor)
+        shape = (n, G * experts_per_member * C * arch.d_model)
+        return planner.plan_all_to_all(shape)
+    import numpy as np
+    lg = np.asarray(router_logits, dtype=np.float32)
+    if lg.ndim == 2:
+        lg = lg.reshape(G, tokens_per_group, -1)
+    if lg.shape != (G, tokens_per_group, moe.num_experts):
+        raise ValueError(
+            f"router_logits shape {np.asarray(router_logits).shape} does "
+            f"not cover ({tokens_per_member}, {moe.num_experts}) tokens x "
+            f"experts in {G} group(s)")
+    # per-group top-k routing counts (top-k of logits == top-k of the
+    # softmax'd probs the layer routes on — softmax is monotonic)
+    k = moe.top_k
+    top = np.argpartition(-lg, k - 1, axis=-1)[..., :k]  # (G, Tl, k)
+    caps = np.zeros(moe.num_experts, dtype=np.int64)
+    for g in range(G):
+        cnt = np.bincount(top[g].ravel(), minlength=moe.num_experts)
+        caps = np.maximum(caps, moe_expert_capacities(
+            cnt, tokens_per_group, moe.capacity_factor))
+    c_exec = int(caps.max())
+    shape = (n, G * experts_per_member * c_exec * arch.d_model)
+    from repro.core.cost_model import dtype_itemsize
+    esz = dtype_itemsize("float32")
+    dest_sizes = [
+        float(G * int(caps[r * experts_per_member:
+                           (r + 1) * experts_per_member].sum())
+              * arch.d_model * esz)
+        for r in range(n)]
+    return planner.plan_all_to_all(shape, dest_sizes=dest_sizes)
 
 
 def init_moe(arch: ArchConfig, key, dtype) -> Params:
@@ -457,24 +512,30 @@ def apply_moe(arch: ArchConfig, p: Params, x: jax.Array, groups: int = 1,
     (:func:`moe_dispatch_schedule` — per-expert flow sizes from the
     capacity ``C``), the cell C plan the cost model prices and
     ``repro.sim.fabric_sim`` replays through the NIC/memory pools.  The
-    lowering itself is placement-free on this backend (the vmapped
-    per-group dispatch — see the NOTE below), so here the schedule is a
-    verified annotation: a schedule whose payload does not match the
-    dispatch buffer actually built (capacity drift — tokens, top-k or
-    capacity_factor changed after planning) is rejected loudly instead of
-    silently mispricing cell C."""
+    schedule is EXECUTED: the dispatch buffer is routed through the
+    plan's slow-leg chunk split / issue order / reassembly
+    (:func:`_execute_dispatch` inside :func:`_moe_dispatch`), so the
+    numbers the plan is priced at are the numbers the layer runs —
+    bitwise-identical to the unscheduled dispatch because the walk is a
+    pure slice/concat identity.  A skew-planned schedule (per-member
+    ``dest_sizes`` from measured router logits) also carries the
+    per-expert capacity: the layer pads to the schedule's
+    ``C_exec = max_e C_e`` instead of the uniform prior.  A schedule
+    whose payload does not match the dispatch buffer actually built
+    (capacity drift — tokens, top-k or capacity_factor changed after
+    planning) is rejected loudly instead of silently mispricing cell
+    C."""
     moe = arch.moe
     B, S, d = x.shape
     T = B * S
     xt = x.reshape(T, d)
     G = groups if (groups > 1 and T % groups == 0) else 1
+    sched_capacity = None
     if dispatch_schedule is not None:
         if dispatch_schedule.kind != "all_to_all":
             raise ValueError(
                 f"dispatch_schedule must be an all_to_all schedule, got "
                 f"kind={dispatch_schedule.kind!r}")
-        C = moe_capacity(T // G, moe.top_k, moe.num_experts,
-                         moe.capacity_factor)
         n = int(dispatch_schedule.shape[0])
         if n > 1 and moe.num_experts % n != 0:
             raise ValueError(
@@ -482,24 +543,47 @@ def apply_moe(arch: ArchConfig, p: Params, x: jax.Array, groups: int = 1,
                 f"schedule's {n}-member domain — per-expert flows need "
                 f"E % members == 0")
         epm = max(moe.num_experts // max(n, 1), 1)
-        want = n * G * epm * C * d
-        if dispatch_schedule.numel != want:
-            raise ValueError(
-                f"dispatch_schedule planned for a different dispatch "
-                f"buffer: schedule carries {dispatch_schedule.numel} "
-                f"elements, this layer dispatches {want} "
-                f"(G={G}, E={moe.num_experts}, C={C}, d={d}, "
-                f"members={n}) — rebuild with moe_dispatch_schedule()")
+        skewed = any(getattr(l, "dest_sizes", None) is not None
+                     for l in dispatch_schedule.legs)
+        if skewed:
+            # skew-planned: the schedule OWNS the capacity (C_exec =
+            # max_e C_e from measured routing) — recover it from the
+            # payload and dispatch at it
+            denom = n * G * epm * d
+            c_exec = dispatch_schedule.numel // denom
+            if c_exec < 1 or c_exec * denom != dispatch_schedule.numel:
+                raise ValueError(
+                    f"dispatch_schedule planned for a different dispatch "
+                    f"buffer: schedule carries {dispatch_schedule.numel} "
+                    f"elements, not divisible into (G={G}, "
+                    f"E={moe.num_experts}, d={d}, members={n}) expert "
+                    f"slabs — rebuild with moe_dispatch_schedule()")
+            sched_capacity = int(c_exec)
+        else:
+            C = moe_capacity(T // G, moe.top_k, moe.num_experts,
+                             moe.capacity_factor)
+            want = n * G * epm * C * d
+            if dispatch_schedule.numel != want:
+                raise ValueError(
+                    f"dispatch_schedule planned for a different dispatch "
+                    f"buffer: schedule carries {dispatch_schedule.numel} "
+                    f"elements, this layer dispatches {want} "
+                    f"(G={G}, E={moe.num_experts}, C={C}, d={d}, "
+                    f"members={n}) — rebuild with moe_dispatch_schedule()")
     # NOTE (§Perf): the vmapped per-group dispatch partitions better than
     # both a flat group-global gather and explicitly-constrained dispatch
     # buffers (2.5x vs 0.4x / 0.65x on deepseek prefill_32k) — XLA keeps
     # vmapped gathers group-local.
     if G > 1:
         yg, auxg = jax.vmap(
-            lambda xx: _moe_dispatch(arch, p, xx[None]))(xt.reshape(G, T // G, d))
+            lambda xx: _moe_dispatch(arch, p, xx[None],
+                                     capacity=sched_capacity,
+                                     dispatch_schedule=dispatch_schedule)
+        )(xt.reshape(G, T // G, d))
         y, aux = yg.reshape(T, d), jnp.mean(auxg)
     else:
-        y1, aux = _moe_dispatch(arch, p, xt[None])
+        y1, aux = _moe_dispatch(arch, p, xt[None], capacity=sched_capacity,
+                                dispatch_schedule=dispatch_schedule)
         y = y1.reshape(T, d)
     if moe.num_shared_experts:
         shared = arch.replace(d_ff=moe.expert_d_ff * moe.num_shared_experts)
@@ -507,14 +591,53 @@ def apply_moe(arch: ArchConfig, p: Params, x: jax.Array, groups: int = 1,
     return y.reshape(B, S, d), aux
 
 
+def _execute_dispatch(schedule, xe: jax.Array) -> jax.Array:
+    """Run the (G, E, C, d) dispatch buffer through ``schedule``'s
+    slow-leg walk — the member-major view split at the plan's chunk
+    boundaries, sub-flows taken in the plan's ISSUE order (lane-offset
+    rotation included, since ``with_lane_offset`` reorders the legs),
+    then reassembled by chunk index, exactly like
+    ``collectives.lower_all_to_all``'s slow stage.  The walk is a pure
+    slice/concat identity (the member exchange itself is the rectangular
+    capacity-padded payload), so the output is bitwise ``xe`` — but the
+    plan's chunking now IS the executed dataflow, not an annotation.
+
+    Chunk bounds are proportional (``(j * cols) // chunks``) rather than
+    ``cols // chunks`` blocks so a per-group buffer that does not divide
+    evenly still reassembles exactly."""
+    G, E, C, d = xe.shape
+    n = int(schedule.shape[0])
+    slow = schedule.slow_legs
+    if n <= 1 or E % n != 0 or not slow:
+        return xe
+    # member-major rows: member r's slab = experts [r*epm, (r+1)*epm)
+    buf = jnp.transpose(xe, (1, 0, 2, 3)).reshape(n, -1)
+    cols = buf.shape[1]
+    k = len(slow)
+    bounds = [(j * cols) // k for j in range(k + 1)]
+    outs: list = [None] * k
+    for leg in slow:  # issue order; payload slice picked by index
+        j = leg.index
+        outs[j] = lax.slice_in_dim(buf, bounds[j], bounds[j + 1], axis=1)
+    buf = jnp.concatenate(outs, axis=1) if k > 1 else outs[0]
+    return jnp.transpose(buf.reshape(n, E // n, G, C, d),
+                         (2, 0, 1, 3, 4)).reshape(G, E, C, d)
+
+
 def _moe_dispatch(arch: ArchConfig, p: Params, xg: jax.Array,
-                  dispatch_spec=None) -> Tuple[jax.Array, jax.Array]:
+                  dispatch_spec=None, capacity: Optional[int] = None,
+                  dispatch_schedule=None) -> Tuple[jax.Array, jax.Array]:
     """Capacity-based top-k dispatch on grouped (G, Tl, d) token slabs.
 
     All routing math is per-group (cumsum over the group's own tokens), so
     a group never depends on another group's tokens; gathers/scatters use
     group-global flat indices so the whole pipeline keeps the group dim
-    sharded over DP and the expert dim sharded over TP."""
+    sharded over DP and the expert dim sharded over TP.
+
+    ``capacity`` overrides the uniform-prior :func:`moe_capacity` with a
+    planned per-expert ``C_exec`` (skew-aware scheduling);
+    ``dispatch_schedule`` routes the dispatch buffer through the
+    planned chunk walk (:func:`_execute_dispatch`)."""
     moe = arch.moe
     G, Tl, d = xg.shape
     E, k = moe.num_experts, moe.top_k
@@ -530,8 +653,10 @@ def _moe_dispatch(arch: ArchConfig, p: Params, xg: jax.Array,
     aux = E * jnp.sum(me * ce)
 
     # capacity per group (the shared formula the dispatch planner sizes
-    # per-expert flows from)
-    C = moe_capacity(Tl, k, E, moe.capacity_factor)
+    # per-expert flows from); a skew-planned schedule overrides it with
+    # its own C_exec = max_e C_e
+    C = capacity if capacity is not None \
+        else moe_capacity(Tl, k, E, moe.capacity_factor)
 
     flat_e = topk_idx.reshape(G, Tl * k)
     flat_g = gate_vals.reshape(G, Tl * k)
@@ -554,6 +679,10 @@ def _moe_dispatch(arch: ArchConfig, p: Params, xg: jax.Array,
     xf = x_pad.reshape(G * (Tl + 1), d)
     gidx = dis + (jnp.arange(G) * (Tl + 1))[:, None, None]
     xe = xf[gidx]  # (G, E, C, d)
+    if dispatch_schedule is not None:
+        # execute the planned dispatch: the buffer rides the schedule's
+        # chunk split / issue order / reassembly (bitwise identity)
+        xe = _execute_dispatch(dispatch_schedule, xe)
     if dispatch_spec is not None:
         from jax.sharding import PartitionSpec as P
         dp, tp = dispatch_spec

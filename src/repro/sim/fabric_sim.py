@@ -357,14 +357,33 @@ def _compile(tenant: Tenant, est: Optional[ScheduleEstimate],
                     if mk and ndest > 1:
                         mk = dict(mk, mem_bytes=mk["mem_bytes"] / ndest,
                                   mem_cap=mk["mem_cap"] / ndest)
+                    # a SKEWED sub-flow (dest_sizes) expands at its TRUE
+                    # per-destination sizes: flow r's share of the
+                    # incast-priced leg is dest_sizes[r] / max(dest_sizes)
+                    # (the self row — no wire — drops as the smallest),
+                    # so the hottest flow takes exactly the priced leg
+                    # seconds, colder flows finish earlier, and the
+                    # arbiter sees each flow's real lane-seconds under
+                    # contention.  Uniform legs keep weights of 1 — the
+                    # expansion is unchanged bit for bit.
+                    ds = getattr(lc.leg, "dest_sizes", None) if a2a else None
+                    if ds is not None and ndest > 1:
+                        sel = sorted(ds, reverse=True)[:ndest]
+                        wts = [b / max(sel[0], _EPS) for b in sel]
+                    else:
+                        wts = [1.0] * ndest
                     ids = []
-                    for _ in range(ndest):
+                    for w in wts:
+                        wmk = mk
+                        if mk and w != 1.0:
+                            wmk = dict(mk, mem_bytes=mk["mem_bytes"] * w)
                         tasks.append(_Task(
-                            "pool", work=lc.seconds * nominal_of(p) / ndest,
+                            "pool",
+                            work=lc.seconds * nominal_of(p) * w / ndest,
                             deps=slow_entry + path_tails.get(p, []),
-                            legs=[(lc.leg, lc.seconds / ndest)],
+                            legs=[(lc.leg, lc.seconds * w / ndest)],
                             rnd=r, chunk=chunk, lane=lane_of(chunk, p),
-                            lane_share=1.0 / ndest, path=p, **mk))
+                            lane_share=1.0 / ndest, path=p, **wmk))
                         ids.append(len(tasks) - 1)
                     path_tails[p] = ids
                     prev = slow_entry + [i for t_ in path_tails.values()

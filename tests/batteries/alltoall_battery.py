@@ -215,4 +215,80 @@ for stg in ("local", "pool"):
         assert rel < EPS, (stg, theta, res.makespan, est.total_s)
 print("contention: sim == granted-mem pricing for both stagings OK")
 
+# ---------------------------------------------------------------------------
+# 5. skewed (dest_sizes) schedules: the skew is a wire/pricing annotation,
+#    so the lowering stays BITWISE the flat all_to_all; sim == price holds
+#    at the true per-destination sizes; the annotation rides SyncPlan JSON
+# ---------------------------------------------------------------------------
+
+skew_w = rng.uniform(0.0, 8.0, size=8)
+skew_w[0] = 24.0  # one hot destination row
+
+for shape, axes, fast, slow, fab0 in GRID:
+    mesh = jax_compat.make_mesh(shape, axes)
+    sizes = dict(zip(axes, shape))
+
+    def a2a_flat(xl):
+        return lax.all_to_all(xl[0], axes, split_axis=0, concat_axis=0,
+                              tiled=True)[None]
+
+    g = jax.jit(jax_compat.shard_map(a2a_flat, mesh=mesh,
+                                     in_specs=P(axes, None, None),
+                                     out_specs=P(axes, None, None),
+                                     check_vma=False))
+    flat = np.asarray(g(jax.device_put(
+        xa, NamedSharding(mesh, P(axes, None, None)))))
+    for chunks in (1, 2):
+        ds = [float(8 * 3 * 4) * w / skew_w.sum() for w in skew_w]
+        s = all_to_all_from_axes(fast, slow, SyncConfig(chunks=chunks),
+                                 (8, 3), sizes, tier_names=NAMES,
+                                 dest_sizes=ds)
+        out = lower_on_mesh(mesh, axes, s)
+        assert np.array_equal(out, flat), ("skewed lowering", axes, chunks)
+print("skewed schedules lower bitwise == flat on every mesh OK")
+
+checked = 0
+for (shape, axes, fast, slow, fab0), chunks, stg in itertools.product(
+        GRID, (1, 2), ("local", "pool")):
+    sizes = dict(zip(axes, shape))
+    payload = float(8 * (1 << 12) * 4)
+    ds = [payload * w / skew_w.sum() for w in skew_w]
+    s = all_to_all_from_axes(fast, slow, SyncConfig(chunks=chunks),
+                             (8, 1 << 12), sizes, tier_names=NAMES,
+                             dest_sizes=ds).with_staging(stg)
+    fab = fab0.with_mem(tight)
+    est = CostModel(fab).from_schedule(s, mem=True)
+    res = simulate(fab, [Tenant("solo", s)])
+    rel = abs(res.makespan - est.total_s) / max(est.total_s, 1e-30)
+    assert rel < EPS, ("skewed mem", axes, chunks, stg, rel)
+    est0 = CostModel(fab0).from_schedule(s)
+    res0 = simulate(fab0, [Tenant("solo", s)])
+    rel0 = abs(res0.makespan - est0.total_s) / max(est0.total_s, 1e-30)
+    assert rel0 < EPS, ("skewed", axes, chunks, stg, rel0)
+    # the incast bound never prices below the uniform schedule
+    u = all_to_all_from_axes(fast, slow, SyncConfig(chunks=chunks),
+                             (8, 1 << 12), sizes, tier_names=NAMES) \
+        .with_staging(stg)
+    assert est0.total_s >= CostModel(fab0).from_schedule(u).total_s - 1e-30
+    checked += 1
+print(f"skewed sim/price parity: {checked} schedules exact OK")
+
+mesh3 = jax_compat.make_mesh((2, 2, 2), ("pod", "host", "data"))
+ds = [float(8 * 3 * 4) * w / skew_w.sum() for w in skew_w]
+s = all_to_all_from_axes(("data", "host"), "pod", SyncConfig(chunks=2),
+                         (8, 3), sizes3, tier_names=NAMES,
+                         dest_sizes=ds).with_staging("pool")
+sec = Section(name="moe.dispatch", leaf_paths=("moe/dispatch",),
+              numel=s.numel, dtype="float32", scatter_dim=0,
+              sync=s.cfg, schedule=s)
+blob = json.loads(SyncPlan([sec]).to_json())
+rt = CommSchedule.from_dict(blob[0]["schedule"])
+assert rt == s, "skewed SyncPlan round-trip changed the schedule"
+assert all(l.dest_sizes is not None for l in rt.legs)
+a = lower_on_mesh(mesh3, ("pod", "host", "data"), s)
+b = lower_on_mesh(mesh3, ("pod", "host", "data"), rt)
+assert np.array_equal(a, b), "round-tripped skewed schedule lowers differently"
+print("skewed SyncPlan.to_json round-trip: dest_sizes survive, "
+      "lowering bitwise OK")
+
 print("ALL OK")

@@ -41,15 +41,20 @@ def test_dfabric_always_wins_at_worst_case(name):
 
 
 def test_wordcount_simulated_incast_matches_closed_form():
-    """The NIC-pool replay of the 3-mapper -> 1-reducer incast must equal
-    the retired closed form: baseline serializes 3 x shuffle through one
-    NIC, DFabric stripes 2 x shuffle over the rack pool then rides the
-    fabric for the intra-rack mapper."""
+    """The per-destination (dest_sizes) replay of the 3-mapper ->
+    1-reducer incast must equal the closed form: baseline serializes
+    3 x shuffle through one NIC, DFabric stripes 2 x shuffle over the
+    rack pool then rides the fabric for the intra-rack mapper — each
+    incast paying its exchange's ring latency (one hop per incoming
+    mapper, a term the retired bespoke LaneRequest replay dropped)."""
     from benchmarks.paper_workloads import proto_topo
     for theta in (1, 2, 4, 8):
         topo = proto_topo(theta)
         shuffle = 256e6
         tb, td = wordcount(theta)
-        assert tb == pytest.approx(3 * shuffle / topo.hw.dcn_bw)
+        assert tb == pytest.approx(3 * shuffle / topo.hw.dcn_bw
+                                   + 3 * topo.hw.dcn_latency)
         assert td == pytest.approx(2 * shuffle / topo.pool_dcn_bw
-                                   + shuffle / topo.hw.ici_bw)
+                                   + 2 * topo.hw.dcn_latency
+                                   + shuffle / topo.hw.ici_bw
+                                   + topo.hw.ici_latency)

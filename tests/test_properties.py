@@ -12,12 +12,34 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.compression import Int8Codec, TopKCodec
 from repro.core.cost_model import CostModel
 from repro.core.planner import Planner
-from repro.core.schedule import (AllToAll, SlowChunk, SyncConfig,
-                                 all_to_all_from_axes)
-from repro.core.topology import TwoTierTopology
+from repro.core.schedule import (AllToAll, CommSchedule, SlowChunk,
+                                 SyncConfig, all_to_all_from_axes)
+from repro.core.topology import TwoTierTopology, as_fabric
 
 TOPO = TwoTierTopology()
 CM = CostModel(TOPO)
+
+# a 4-rack x 2-CN fabric for the skewed (dest_sizes) properties: joint
+# DP domain of 8 members (data=2 fast, pod=4 slow), tiers named like the
+# prototype
+SKEW_FAB = as_fabric(TwoTierTopology(num_pods=4, pod_shape=(2,)))
+SKEW_CM = CostModel(SKEW_FAB)
+SKEW_NAMES = {"data": "ici", "pod": "dcn"}
+SKEW_SIZES = {"data": 2, "pod": 4}
+SKEW_SHAPE = (8, 1 << 10)
+
+
+def _skew_sched(weights, chunks=1):
+    """Skewed 8-member all-to-all whose per-member wire bytes follow
+    ``weights`` (None -> the uniform schedule of the same payload)."""
+    ds = None
+    if weights is not None:
+        total = SKEW_SHAPE[0] * SKEW_SHAPE[1] * 4.0
+        ds = [total * w / sum(weights) for w in weights]
+    return all_to_all_from_axes(("data",), "pod",
+                                SyncConfig(chunks=chunks), SKEW_SHAPE,
+                                SKEW_SIZES, tier_names=SKEW_NAMES,
+                                dest_sizes=ds)
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +129,58 @@ def test_more_nics_never_slower(nbytes, lanes):
     t1 = CostModel(TOPO.replace(dcn_lanes=1.0)).hierarchical(nbytes).total_s
     t2 = CostModel(TOPO.replace(dcn_lanes=float(lanes))).hierarchical(nbytes).total_s
     assert t2 <= t1 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# skewed (per-destination) all-to-all
+# ---------------------------------------------------------------------------
+
+skew_weights = st.lists(st.floats(0.0, 10.0), min_size=8, max_size=8) \
+    .filter(lambda w: max(w) > 1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(skew_weights, st.integers(1, 4))
+def test_skewed_pricing_never_beats_uniform(weights, chunks):
+    """The incast bound charges the hottest destination row, so a skewed
+    exchange moving the SAME total bytes can never price below the
+    uniform (rectangular) schedule — per leg, (n-1)*max(dest_sizes) >=
+    (n-1)*mean(dest_sizes) == the uniform wire bytes."""
+    uni = SKEW_CM.from_schedule(_skew_sched(None, chunks)).total_s
+    skw = SKEW_CM.from_schedule(_skew_sched(weights, chunks)).total_s
+    assert skw >= uni * (1 - 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(skew_weights, st.integers(1, 4))
+def test_builder_digit_sums_conserve_bytes(weights, chunks):
+    """The builder's per-tier digit aggregation is a partition of the
+    joint-domain profile: every leg's dest_sizes sum to the total wire
+    bytes (SlowChunk sub-flows each carry an equal 1/chunks slice), and
+    each leg carries one size per member of ITS tier."""
+    s = _skew_sched(weights, chunks)
+    total = SKEW_SHAPE[0] * SKEW_SHAPE[1] * 4.0
+    for leg in s.legs:
+        if isinstance(leg, AllToAll):
+            assert len(leg.dest_sizes) == leg.size
+            assert sum(leg.dest_sizes) == pytest.approx(total)
+    slow = s.slow_legs
+    if slow:
+        assert all(len(l.dest_sizes) == l.size for l in slow)
+        assert sum(sum(l.dest_sizes) for l in slow) == pytest.approx(total)
+
+
+@settings(max_examples=40, deadline=None)
+@given(skew_weights, st.integers(1, 4))
+def test_skewed_schedule_json_round_trips(weights, chunks):
+    """dest_sizes survive to_json/from_json exactly, and the uniform
+    schedule's wire format stays byte-identical to the pre-skew one
+    (no dest_sizes key when None)."""
+    skw = _skew_sched(weights, chunks)
+    assert CommSchedule.from_json(skw.to_json()) == skw
+    uni = _skew_sched(None, chunks)
+    assert "dest_sizes" not in uni.to_json()
+    assert CommSchedule.from_json(uni.to_json()) == uni
 
 
 # ---------------------------------------------------------------------------

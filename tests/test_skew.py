@@ -1,0 +1,414 @@
+"""Skew-aware scheduling: per-destination flow sizes across the
+build/price/lower/simulate contract, hot-expert rebalancing, and the
+executed MoE dispatch path (EXPERIMENTS.md §Skew).
+
+Covers: ``dest_sizes`` on ``AllToAll``/``SlowChunk`` legs (validation,
+uniform plans staying byte-identical in JSON, skewed round-trip), the
+cost model's incast bound (uniform coincidence + dominance), sim==price
+parity on skewed schedules (uncontended exact — including staging,
+multi-path and a binding memory pool — and contended vs granted
+pricing), the memory pool serializing concurrent routes (a pre-PR
+mispricing), the planner's skew-aware search + hottest-first staggering,
+``loopback_path``, per-expert capacities, the measured-logits dispatch
+schedule, and the EXECUTED ``apply_moe(dispatch_schedule=...)`` path
+(bitwise identity at every chunking / lane offset / path split)."""
+import itertools
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import MemPoolSpec
+from repro.core.nicpool import NicPool
+from repro.core.planner import Planner
+from repro.core.schedule import (AllToAll, CommSchedule, SlowChunk,
+                                 SyncConfig, all_to_all_from_axes,
+                                 build_all_to_all)
+from repro.core.topology import (HardwareSpec, TwoTierTopology, as_fabric,
+                                 cxl_shortcut_path, loopback_path)
+from repro.sim.fabric_sim import Tenant, simulate
+
+NAMES = {"data": "ici", "host": "cxl", "pod": "dcn"}
+FAB4 = as_fabric(TwoTierTopology(num_pods=4, pod_shape=(2,)))
+SIZES4 = {"data": 2, "pod": 4}
+SHAPE = (8, 1 << 12)
+PAYLOAD = 8 * (1 << 12) * 4.0
+MEM = MemPoolSpec.build(local_bw=12e9, local_channels=2, device_bw=6e9,
+                        devices=2, device_latency=2e-6)
+
+
+def skew_sched(chunks=1, weights=(6.0, 1.0, 1.0, 0.0), **cfg_kw):
+    """8-member two-tier all-to-all whose per-MEMBER wire bytes follow
+    the per-POD ``weights`` profile (each pod's two members share its
+    weight), normalized to the payload."""
+    w = [float(b) for b in weights for _ in range(2)]
+    ds = [PAYLOAD * x / sum(w) for x in w]
+    return all_to_all_from_axes(("data",), "pod",
+                                SyncConfig(chunks=chunks, **cfg_kw),
+                                SHAPE, SIZES4, tier_names=NAMES,
+                                dest_sizes=ds)
+
+
+# ---------------------------------------------------------------------------
+# schedule: validation, serialization
+# ---------------------------------------------------------------------------
+
+
+def test_dest_sizes_validation():
+    # builder: one wire size per DP member
+    with pytest.raises(ValueError, match="dest_sizes"):
+        all_to_all_from_axes(("data",), "pod", SyncConfig(), (8, 64),
+                             SIZES4, tier_names=NAMES, dest_sizes=[1.0] * 3)
+    # negative entries rejected at schedule construction
+    with pytest.raises(ValueError, match="non-negative"):
+        CommSchedule(legs=(AllToAll("dcn", "pod", 4,
+                                    dest_sizes=(1.0, -2.0, 1.0, 1.0)),),
+                     shape=(4, 64), kind="all_to_all")
+    # leg-length mismatch (hand-edited plan JSON must fail at load)
+    with pytest.raises(ValueError, match="one dest size per member"):
+        CommSchedule(legs=(AllToAll("dcn", "pod", 4,
+                                    dest_sizes=(1.0, 1.0)),),
+                     shape=(4, 64), kind="all_to_all")
+    # dest_sizes are an all-to-all concept: no rows on a reduction
+    with pytest.raises(ValueError, match="all_to_all"):
+        CommSchedule(legs=(AllToAll("dcn", "pod", 4,
+                                    dest_sizes=(1.0, 1.0, 1.0, 1.0)),),
+                     shape=(4, 64), kind="all_reduce")
+
+
+def test_uniform_json_byte_identical_and_skew_round_trips():
+    """Uniform schedules serialize WITHOUT any dest_sizes key (old plan
+    JSON stays byte-identical); skewed schedules round-trip losslessly."""
+    uni = all_to_all_from_axes(("data",), "pod", SyncConfig(chunks=2),
+                               SHAPE, SIZES4, tier_names=NAMES)
+    blob = uni.to_json()
+    assert "dest_sizes" not in blob
+    assert CommSchedule.from_json(blob) == uni
+
+    skw = skew_sched(chunks=2)
+    blob2 = skw.to_json()
+    assert "dest_sizes" in blob2
+    rt = CommSchedule.from_json(blob2)
+    assert rt == skw
+    assert rt.slow_legs[0].dest_sizes == skw.slow_legs[0].dest_sizes
+    # ~ markers show up in describe() for skewed legs only
+    assert "~" in skw.describe() and "~" not in uni.describe()
+
+
+def test_builder_digit_sums_conserve_bytes():
+    """Per-tier dest_sizes are digit sums of the per-member profile:
+    every tier's rows recover the total wire bytes, and the slow chunks
+    split each destination's bytes evenly."""
+    ds = [float(b) for b in range(1, 9)]
+    s = all_to_all_from_axes(("data",), "pod", SyncConfig(chunks=2),
+                             SHAPE, SIZES4, tier_names=NAMES,
+                             dest_sizes=ds)
+    total = sum(ds)
+    for leg in s.legs:
+        if isinstance(leg, AllToAll):
+            assert leg.dest_sizes is not None
+            assert sum(leg.dest_sizes) == pytest.approx(total)
+    slow = s.slow_legs
+    assert len(slow) == 2
+    assert all(l.dest_sizes is not None for l in slow)
+    assert sum(sum(l.dest_sizes) for l in slow) == pytest.approx(total)
+    assert slow[0].dest_sizes == slow[1].dest_sizes
+
+
+# ---------------------------------------------------------------------------
+# pricing: the incast bound
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_uniform_dest_sizes_price_identically():
+    cm = CostModel(FAB4)
+    uni = all_to_all_from_axes(("data",), "pod", SyncConfig(chunks=2),
+                               SHAPE, SIZES4, tier_names=NAMES)
+    flat = all_to_all_from_axes(("data",), "pod", SyncConfig(chunks=2),
+                                SHAPE, SIZES4, tier_names=NAMES,
+                                dest_sizes=[PAYLOAD / 8] * 8)
+    assert cm.from_schedule(flat).total_s \
+        == pytest.approx(cm.from_schedule(uni).total_s, rel=1e-12)
+
+
+def test_incast_bound_charges_max_row_and_dominates():
+    cm = CostModel(FAB4)
+    uni = all_to_all_from_axes(("data",), "pod", SyncConfig(), SHAPE,
+                               SIZES4, tier_names=NAMES)
+    # same total volume, concentrated on one pod: the hot row decides
+    skw = skew_sched()
+    e_uni, e_skw = cm.from_schedule(uni), cm.from_schedule(skw)
+    assert e_skw.total_s > e_uni.total_s
+    lc = next(c for c in e_skw.leg_charges
+              if isinstance(c.leg, SlowChunk))
+    assert lc.bytes_per_chip == pytest.approx(
+        (4 - 1) * max(lc.leg.dest_sizes))
+
+
+# ---------------------------------------------------------------------------
+# sim == price on skewed schedules
+# ---------------------------------------------------------------------------
+
+
+def test_sim_price_parity_skewed_uncontended():
+    """Uncontended skewed schedules: sim == price EXACT across chunk
+    counts, staging placements, multi-path splits and a binding memory
+    pool."""
+    fab = FAB4.with_paths(cxl_shortcut_path(), loopback_path())
+    for with_mem, chunks, split, stg in itertools.product(
+            (False, True), (1, 2),
+            (None, (("cxl", 0.5),), (("cxl", 0.25), ("loop", 0.25))),
+            (None, "pool")):
+        f = fab.with_mem(MEM) if with_mem else fab
+        cm = CostModel(f)
+        s = skew_sched(chunks=chunks, path_split=split).with_staging(stg)
+        est = cm.from_schedule(s, mem=with_mem)
+        res = simulate(f, [Tenant("t0", s)], cost=cm)
+        rel = abs(res.makespan - est.total_s) / est.total_s
+        assert rel < 1e-9, (with_mem, chunks, split, stg, rel)
+
+
+def test_mem_pool_serializes_concurrent_routes():
+    """Multi-path legs share ONE memory pool: when the legs are
+    mem-bound the priced slow phase must include the TOTAL pool drain,
+    not the per-route max (pre-PR the estimate took the max and the sim
+    disagreed by ~2x) — for uniform and skewed schedules alike."""
+    tight = MemPoolSpec.build(local_bw=3e9, local_channels=1,
+                              device_bw=1.5e9, devices=2,
+                              device_latency=2e-6)
+    fab = FAB4.with_paths(cxl_shortcut_path()).with_mem(tight)
+    cm = CostModel(fab)
+    w_hot = [PAYLOAD / 2] + [PAYLOAD / 14] * 7
+    for ds in (None, w_hot):
+        s = all_to_all_from_axes(
+            ("data",), "pod",
+            SyncConfig(chunks=2, path_split=(("cxl", 0.5),)),
+            SHAPE, SIZES4, tier_names=NAMES, dest_sizes=ds)
+        est = cm.from_schedule(s, mem=True)
+        res = simulate(fab, [Tenant("t0", s)], cost=cm)
+        rel = abs(res.makespan - est.total_s) / est.total_s
+        assert rel < 1e-9, (ds is not None, rel)
+        # the mem-bound drains make the pool floor BIND: the slow phase
+        # sits strictly between the naive per-route max (the pre-PR
+        # estimate, which the sim refuted) and full serialization
+        slow = [c.seconds for c in est.leg_charges
+                if isinstance(c.leg, SlowChunk)]
+        fast = sum(c.seconds for c in est.leg_charges
+                   if not isinstance(c.leg, SlowChunk))
+        phase = est.total_s - fast
+        assert max(slow) + 1e-12 < phase <= sum(slow) + 1e-12
+
+
+def test_sim_contention_brackets_granted_pricing_skewed():
+    """θ-way contention: uniform exchanges still replay EXACTLY at the
+    granted-lanes pricing; skewed exchanges are BRACKETED by it — the
+    arbiter is work-conserving, so a tenant's cold per-destination flows
+    drain early and return lanes the hot flows absorb, finishing the
+    shuffle no later than the fair-share bound and no earlier than the
+    solo plan."""
+    cm = CostModel(FAB4)
+    uni = all_to_all_from_axes(("data",), "pod", SyncConfig(chunks=2),
+                               SHAPE, SIZES4, tier_names=NAMES)
+    skw = skew_sched(chunks=2)
+    solo = cm.from_schedule(skw).total_s
+    for theta in (2, 3):
+        pool = NicPool(lanes=FAB4.slowest.lanes)
+        res_u = simulate(FAB4, [Tenant(f"t{k}", uni) for k in range(theta)],
+                         pool=pool)
+        est_u = cm.from_schedule(uni, granted_lanes=pool.fair_share(theta))
+        assert abs(res_u.makespan - est_u.total_s) / est_u.total_s < 1e-9
+        pool2 = NicPool(lanes=FAB4.slowest.lanes)
+        res_s = simulate(FAB4,
+                         [Tenant(f"t{k}", skw) for k in range(theta)],
+                         pool=pool2)
+        est_s = cm.from_schedule(skw, granted_lanes=pool2.fair_share(theta))
+        assert solo - 1e-12 <= res_s.makespan <= est_s.total_s + 1e-12, \
+            (theta, solo, res_s.makespan, est_s.total_s)
+
+
+# ---------------------------------------------------------------------------
+# planner: skew-aware search, staggering, loopback route
+# ---------------------------------------------------------------------------
+
+
+def test_plan_all_to_all_threads_dest_sizes():
+    fab = FAB4.with_paths(cxl_shortcut_path()).with_mem(MEM)
+    pl = Planner(fab, min_chunk_numel=1 << 8)
+    ds = [PAYLOAD / 2] + [PAYLOAD / 14] * 7
+    s = pl.plan_all_to_all(SHAPE, dest_sizes=ds)
+    assert s.kind == "all_to_all"
+    assert all(l.dest_sizes is not None for l in s.slow_legs)
+    # the searched plan prices no worse than the un-searched default
+    cm = CostModel(fab)
+    base = build_all_to_all(fab, SyncConfig(chunks=1), SHAPE, "float32",
+                            dest_sizes=ds)
+    assert cm.from_schedule(s, mem=True).total_s \
+        <= cm.from_schedule(base, mem=True).total_s + 1e-12
+    # uniform plans stay dest_sizes-free
+    s0 = pl.plan_all_to_all(SHAPE)
+    assert all(l.dest_sizes is None for l in s0.slow_legs)
+
+
+def test_stagger_exchanges_hottest_first():
+    """Offsets are assigned hottest exchange first: the skewed incast
+    grabs lane 0's head-of-line slot, the cold uniform exchange queues
+    behind both hot ones."""
+    pl = Planner(FAB4, min_chunk_numel=1 << 6)
+    cold = build_all_to_all(FAB4, SyncConfig(chunks=4), SHAPE, "float32")
+    hot = build_all_to_all(FAB4, SyncConfig(chunks=4), SHAPE, "float32",
+                           dest_sizes=[PAYLOAD / 2] + [PAYLOAD / 14] * 7)
+    out = pl.stagger_exchanges([cold, hot, hot])
+    assert [s.numel for s in out] == [cold.numel, hot.numel, hot.numel]
+    # hot exchanges take offsets 0 and 1, the cold one queues at 2
+    assert (out[1].lane_offset, out[2].lane_offset,
+            out[0].lane_offset) == (0, 1, 2)
+    # all-uniform input keeps NicPool.stagger's plain round-robin
+    rr = pl.stagger_exchanges([cold, cold, cold])
+    assert [s.lane_offset for s in rr] == [0, 1, 2]
+
+
+def test_loopback_path_derives_from_peer_spec():
+    hw = HardwareSpec(dcn_bw=8e9, dcn_latency=7e-6)
+    p = loopback_path(hw, lanes=2.0, hops=3)
+    assert p.name == "loop"
+    assert p.bw == 8e9 and p.lanes == 2.0
+    assert p.latency == pytest.approx(3 * 7e-6)
+    # defaults: a stock peer rack, 2 hops (out to the peer and back)
+    d = loopback_path()
+    assert d.latency == pytest.approx(2 * HardwareSpec().dcn_latency)
+    with pytest.raises(ValueError, match="hop"):
+        loopback_path(hw, hops=0)
+
+
+# ---------------------------------------------------------------------------
+# MoE: per-expert capacities, measured-logits schedule, executed dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_moe_expert_capacities_reduce_to_uniform():
+    from repro.models.layers import moe_capacity, moe_expert_capacities
+    T, k, E, cf = 1024, 6, 64, 1.25
+    uni = moe_expert_capacities([T * k / E] * E, T, cf)
+    assert set(uni) == {moe_capacity(T, k, E, cf)}
+    # floor of 8 and clamp to tokens, like the uniform twin
+    assert moe_expert_capacities([0, 1], 1024, 1.0) == (8, 8)
+    assert moe_expert_capacities([10_000], 64, 1.0) == (64,)
+
+
+def test_moe_dispatch_schedule_from_router_logits():
+    from repro.configs import get_smoke_arch
+    from repro.models import layers as L
+
+    arch = get_smoke_arch("deepseek-moe-16b")  # E = 8
+    fab = as_fabric(TwoTierTopology(num_pods=2, pod_shape=(2,)))
+    pl = Planner(fab, min_chunk_numel=1 << 6)
+    n = pl.domain_size  # 4
+    tokens = 128
+    rng = np.random.default_rng(0)
+    # hot head: expert 0 (owned by member 0) gets most routing mass
+    logits = rng.gumbel(size=(tokens, 8)).astype(np.float32)
+    logits[:, 0] += 4.0
+    s = L.moe_dispatch_schedule(arch, tokens, pl, router_logits=logits)
+    assert s.kind == "all_to_all" and s.shape[0] == n
+    assert s.slow_legs and all(l.dest_sizes is not None
+                               for l in s.slow_legs)
+    a2a0 = next(l for l in s.legs if isinstance(l, AllToAll))
+    assert a2a0.dest_sizes is not None
+    # the fast stage's row holding member 0 carries the hot expert
+    assert a2a0.dest_sizes[0] > a2a0.dest_sizes[1]
+    # the buffer pads to C_exec = max_e C_e; only sum_e C_e hits the wire
+    epm = 8 // n
+    c_exec = s.numel // (n * epm * arch.d_model)
+    assert c_exec * n * epm * arch.d_model == s.numel
+    total = sum(a2a0.dest_sizes)
+    rect = n * epm * c_exec * arch.d_model * 4.0
+    assert total < rect
+    # logits shape mismatch is rejected loudly
+    with pytest.raises(ValueError, match="router_logits"):
+        L.moe_dispatch_schedule(arch, tokens, pl,
+                                router_logits=logits[: tokens // 2])
+
+
+def test_apply_moe_executes_schedule_bitwise():
+    """The executed dispatch path (the plan's slow-leg chunk walk) is
+    bitwise the unscheduled dispatch at every chunking x lane offset x
+    path split x group count."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_arch
+    from repro.models import layers as L
+
+    arch = get_smoke_arch("deepseek-moe-16b")
+    moe = arch.moe
+    fab = as_fabric(TwoTierTopology(num_pods=4, pod_shape=(1,))) \
+        .with_paths(cxl_shortcut_path())
+    n = 4
+    p = L.init_moe(arch, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, arch.d_model))
+    T = 64
+    for G in (1, 2):
+        C = L.moe_capacity(T // G, moe.top_k, moe.num_experts,
+                           moe.capacity_factor)
+        numel = n * G * (moe.num_experts // n) * C * arch.d_model
+        y0, a0 = L.apply_moe(arch, p, x, groups=G)
+        for chunks, off in ((1, 0), (2, 1), (3, 2)):
+            cfg = SyncConfig(chunks=chunks,
+                             path_split=(("cxl", 0.5),) if chunks > 1
+                             else None)
+            s = build_all_to_all(fab, cfg, (n, numel // n),
+                                 "float32").with_lane_offset(off)
+            y1, a1 = L.apply_moe(arch, p, x, groups=G,
+                                 dispatch_schedule=s)
+            assert bool(jnp.all(y0 == y1)) and bool(a0 == a1), \
+                (G, chunks, off)
+
+
+def test_apply_moe_runs_skew_planned_capacity():
+    """A skew-planned schedule carries its own C_exec: apply_moe
+    dispatches at it, and a payload that does not divide into expert
+    slabs is rejected."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_arch
+    from repro.models import layers as L
+
+    arch = get_smoke_arch("deepseek-moe-16b")
+    fab = as_fabric(TwoTierTopology(num_pods=2, pod_shape=(2,)))
+    pl = Planner(fab, min_chunk_numel=1 << 6)
+    p = L.init_moe(arch, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, arch.d_model))
+    xt = np.asarray(x).reshape(64, arch.d_model)
+    logits = xt @ np.asarray(p["router"])
+    s = L.moe_dispatch_schedule(arch, 64, pl, router_logits=logits)
+    assert any(l.dest_sizes is not None for l in s.slow_legs)
+    y, _ = L.apply_moe(arch, p, x, dispatch_schedule=s)
+    assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
+    # a skewed schedule whose payload no longer divides into slabs: loud
+    bad = replace(s, shape=(s.shape[0], s.shape[1] + 1))
+    with pytest.raises(ValueError, match="different dispatch buffer"):
+        L.apply_moe(arch, p, x, dispatch_schedule=bad)
+
+
+def test_wordcount_rederivation_stays_in_band():
+    """The per-destination replay of the 3->1 shuffle reproduces the
+    recorded PAPER_BANDS figure (the bespoke LaneRequest replay retired
+    without moving it)."""
+    from benchmarks.paper_workloads import PAPER_BANDS, sweep
+    s = sweep("wordcount")
+    lo, hi = PAPER_BANDS["wordcount"]
+    assert lo <= s["avg_reduction_pct"] <= hi
+    assert s["avg_reduction_pct"] == pytest.approx(51.0, abs=0.5)
+
+
+def test_fig_skew_smoke_wins_double_digit():
+    """The Zipf sweep's own assertions (parity <= 1%, double-digit win
+    at alpha >= 1.0 rebalanced, clean degeneration at alpha = 0) plus
+    the row contract run.py's smoke pass relies on."""
+    from benchmarks.fig_skew import run
+    rows = run(smoke=True)
+    assert len(rows) == 8
+    wins = {name: float(derived.split("win=")[1].split("%")[0])
+            for name, _, derived in rows}
+    assert wins["skew/alpha1.0/rebalanced"] >= 10.0
+    assert wins["skew/alpha1.5/rebalanced"] >= 10.0

@@ -10,8 +10,10 @@ Ethernet leg carries per chip, so slower Ethernet amplifies the win.
 from __future__ import annotations
 
 from repro.core.cost_model import CostModel
+from repro.core.schedule import SyncConfig, build_schedule
 from repro.core.topology import (HardwareSpec, TwoTierTopology,
                                  three_tier_fabric)
+from repro.sim.fabric_sim import Tenant, simulate
 
 NBYTES = 100 * 2**20  # 100 MiB gradient
 SMOKE_NBYTES = 1 * 2**20
@@ -47,6 +49,18 @@ def run(smoke: bool = False):
     for tier, sec in per_tier.items():
         add(f"three_tier_best/{tier}", sec,
             f"{100 * sec / best.total_s:.1f}%_of_total")
+
+    # sim replay: the 3-tier sequential schedule through the event
+    # simulator — solo/uncontended is the EXACT contract class, so the
+    # replay doubles as a drift probe for `--trace-dir` audits
+    sched = build_schedule(three, SyncConfig("hier_striped", chunks=1,
+                                             pipeline=False),
+                           (nbytes // 4,), 0)
+    est = cm3.from_schedule(sched)
+    res = simulate(three, [Tenant("ntier", sched)], cost=cm3)
+    err = abs(res.makespan - est.total_s) / est.total_s
+    assert err < 1e-9, f"sim−price drift {err:.2e} on the sequential replay"
+    add("three_tier_sim_replay", res.makespan, f"err={err:.1e}")
 
     # sensitivity: the 3-tier advantage vs Ethernet bandwidth
     for dcn_gbps in (1.0, 6.25, 25.0):

@@ -15,6 +15,7 @@ from repro.core.cost_model import CostModel
 from repro.core.schedule import SyncConfig, build_schedule
 from repro.core.topology import (HardwareSpec, TwoTierTopology, as_fabric,
                                  paper_prototype_topology, three_tier_fabric)
+from repro.sim.fabric_sim import Tenant, simulate
 
 NBYTES = 100 * 2**20  # 100 MiB gradient
 SMOKE_NBYTES = 1 * 2**20
@@ -59,6 +60,19 @@ def run(smoke: bool = False):
                    if type(lc.leg).__name__ != "SlowChunk")
         add(f"{fname}/c4_slow_leg", slow, f"{100 * slow / (slow + fast):.0f}%")
         add(f"{fname}/c4_fast_legs", fast, f"{100 * fast / (slow + fast):.0f}%")
+
+    # sim replay: the pipelined c=4 three-tier schedule through the event
+    # simulator — the PIPELINED contract class (< 1%: per-chunk fp
+    # attribution vs the closed-form overlap credit); doubles as a drift
+    # probe for `--trace-dir` audits
+    fab3 = fabrics["three_tier"]
+    cfg4 = SyncConfig("hier_striped", chunks=4, pipeline=True)
+    sched = build_schedule(fab3, cfg4, (numel,), 0)
+    est = CostModel(fab3).from_schedule(sched)
+    res = simulate(fab3, [Tenant("overlap", sched)], cost=CostModel(fab3))
+    err = abs(res.makespan - est.total_s) / est.total_s
+    assert err < 1e-2, f"sim−price drift {err:.2e} on the pipelined replay"
+    add("three_tier_sim_replay_c4", res.makespan, f"err={err:.1e}")
 
     # sensitivity: overlap pays most when slow and fast legs are balanced
     for dcn_gbps in (1.0, 6.25, 25.0):

@@ -1,24 +1,38 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV on stdout; failures go to STDERR
-(an ``ERROR`` diagnostic row + traceback) so the CSV stream stays
-parseable, and the exit code is nonzero when any module failed.  Run:
+Prints ``name,us_per_call,derived,elapsed_s,git_sha`` CSV on stdout —
+every row stamped with the module's wall-clock seconds and the commit it
+ran at (``repro.obs.metrics.git_sha``) so archived CSVs stay
+attributable.  Failures go to STDERR (an ``ERROR`` diagnostic row +
+traceback) so the CSV stream stays parseable, and the exit code is
+nonzero when any module failed.  Run:
     PYTHONPATH=src python -m benchmarks.run
 
 ``--smoke`` runs the fast analytic/simulated figure subset (fig_ntier,
-fig_overlap, the sim-backed fig13_timesharing, fig_pool_contention,
+fig_overlap — each replaying one schedule through the simulator —
+the sim-backed fig13_timesharing, fig_pool_contention,
 fig_mempool_scaling, fig_multipath — which asserts per-path sim-vs-price
 parity — fig_skew — which asserts the skew-aware plan's double-digit
 Zipf win and skewed sim==price parity — and fig9_apps, whose wordcount
 and cell C MoE-dispatch rows go through the NIC/memory-pool simulator)
 at tiny payload sizes — the CI sanity job (the workflow uploads the CSV
 as an artifact and fails on ERROR rows).
+
+``--trace-dir DIR`` additionally captures EVERY ``simulate`` call the
+figures make (``repro.obs.capture`` — observer-based, bitwise
+non-invasive) and writes, per call, a Perfetto-loadable
+``<figure>_<k>.trace.json`` (simulated + predicted tracks + per-pool
+counter tracks) plus one aggregate ``drift.csv`` judging every leg
+against its sim↔price contract class (``repro.obs.audit``) and a
+``metrics.jsonl`` run log.  Any out-of-class leg fails the run.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import os
 import sys
+import time
 import traceback
 
 
@@ -26,6 +40,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast analytic subset at tiny sizes (CI)")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="capture every simulate() call: write Perfetto "
+                         ".trace.json per call, an aggregate drift.csv "
+                         "(fail on out-of-class legs) and metrics.jsonl")
     args = ap.parse_args()
 
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
@@ -33,6 +51,7 @@ def main() -> None:
                             fig_mempool_scaling, fig_multipath, fig_ntier,
                             fig_overlap, fig_pool_contention, fig_skew,
                             roofline, table4_breakdown)
+    from repro.obs.metrics import MetricsLogger, git_sha
     if args.smoke:
         modules = [fig_ntier, fig_overlap, fig9_apps, fig13_timesharing,
                    fig_pool_contention, fig_mempool_scaling, fig_multipath,
@@ -42,21 +61,71 @@ def main() -> None:
                    fig12_nic_scaling, fig13_timesharing, fig_mempool_scaling,
                    fig_multipath, fig_ntier, fig_overlap,
                    fig_pool_contention, fig_skew, table4_breakdown, roofline]
-    print("name,us_per_call,derived")
+
+    tracing = args.trace_dir is not None
+    if tracing:
+        from repro.obs.capture import capture, export_observation
+        os.makedirs(args.trace_dir, exist_ok=True)
+        metrics = MetricsLogger(
+            path=os.path.join(args.trace_dir, "metrics.jsonl"),
+            echo=False, run="bench", smoke=args.smoke, sha=git_sha())
+    else:
+        metrics = MetricsLogger(echo=False, run="bench")
+
+    sha = git_sha()
+    print("name,us_per_call,derived,elapsed_s,git_sha")
     failed = 0
+    drift_lines = []  # aggregate drift.csv rows, one block per figure
+    drift_bad = 0
     for mod in modules:
+        fig = mod.__name__.rsplit(".", 1)[-1]
         try:
             kw = {}
             if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
                 kw["smoke"] = True
-            for name, us, derived in mod.run(**kw):
-                print(f"{name},{us:.3f},{derived}")
+            t0 = time.perf_counter()
+            with metrics.timer(f"fig:{fig}"):
+                if tracing:
+                    with capture() as observations:
+                        rows = list(mod.run(**kw))
+                else:
+                    observations = []
+                    rows = list(mod.run(**kw))
+            elapsed = time.perf_counter() - t0
+            for name, us, derived in rows:
+                print(f"{name},{us:.3f},{derived},{elapsed:.3f},{sha}")
+            metrics.log("figure", figure=fig, rows=len(rows),
+                        sims=len(observations), elapsed_s=elapsed)
+            for k, obs in enumerate(observations):
+                path, rep = export_observation(obs, args.trace_dir,
+                                               f"{fig}_{k:02d}")
+                drift_lines.append(rep.to_csv(header=False,
+                                              prefix=f"{fig}_{k:02d}"))
+                drift_bad += len(rep.failures())
+                metrics.log("trace", figure=fig, trace=path,
+                            legs=len(rep.rows),
+                            max_drift=rep.max_drift(), ok=rep.ok)
+                if not rep.ok:
+                    print(f"{fig}_{k:02d}: OUT-OF-CLASS drift:\n"
+                          f"{rep.describe()}", file=sys.stderr)
         except Exception:
             failed += 1
             # stderr, NOT stdout: ERROR rows must not corrupt the CSV
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
-    if failed:
+    if tracing:
+        from repro.obs.audit import DriftReport
+        drift_path = os.path.join(args.trace_dir, "drift.csv")
+        with open(drift_path, "w") as f:
+            f.write("figure," + DriftReport.csv_header() + "\n")
+            f.write("\n".join(drift_lines) + "\n")
+        metrics.log("drift_summary", out_of_class=drift_bad,
+                    path=drift_path)
+        if drift_bad:
+            print(f"{drift_bad} drift row(s) out of contract class "
+                  f"(see {drift_path})", file=sys.stderr)
+    metrics.close()
+    if failed or drift_bad:
         sys.exit(1)
 
 

@@ -136,6 +136,19 @@ class LegCharge:
 
 
 @dataclass(frozen=True)
+class PredictedLeg:
+    """One leg's predicted busy interval in the estimate's own timeline
+    (t=0 at collective start) — the price rendered as a schedule, so a
+    predicted track can sit next to the simulator's replay."""
+
+    leg: object
+    start: float
+    finish: float
+    path: str = ""  # slow legs: effective route; fast/local legs: ""
+    chunk: int = -1
+
+
+@dataclass(frozen=True)
 class ScheduleEstimate:
     """Price of one :class:`~repro.core.schedule.CommSchedule`: per-leg
     charges (``leg_charges[i].leg is schedule.legs[i]``), per-tier
@@ -181,6 +194,82 @@ class ScheduleEstimate:
 
     def tier_seconds(self) -> Dict[str, float]:
         return {c.tier: c.seconds for c in self.charges}
+
+    def leg_timeline(self) -> Tuple[PredictedLeg, ...]:
+        """The estimate unrolled into predicted per-leg intervals — the
+        exact timeline :mod:`repro.sim.fabric_sim` replays for ONE
+        uncontended tenant of this schedule (same per-route chaining,
+        same two-stage pipeline), so the last finish equals ``total_s``
+        (up to the multipath memory-pool serialization floor, which is a
+        pool-level bound with no per-leg attribution).
+
+        Sequential: legs chain in order; within a contiguous slow group
+        the sub-flows chain PER ROUTE (routes drain concurrently) and
+        whatever follows waits on every route's tail.  Pipelined: fast
+        stages of ``fast_s / chunks`` chain on the engine, slow sub-flow
+        *j* starts at ``max(stage_j finish, its route's previous
+        sub-flow)`` — the recurrence ``from_schedule`` prices."""
+        if not self.leg_charges:
+            return ()
+        slow_tier = self.charges[-1].tier if self.charges else None
+        slow_axis = self.charges[-1].axis if self.charges else None
+        routes = {p for p, _ in self.path_seconds} | {"eth"}
+
+        def is_pool(leg) -> bool:
+            # mirror of fabric_sim._is_pool_leg, driven by the charges'
+            # own slow tier (the cost model always aggregates it last);
+            # single-tier estimates degrade to a plain chain either way
+            return len(self.charges) > 1 and (
+                getattr(leg, "tier", None) in (slow_tier, slow_axis)
+                or getattr(leg, "axis", None) == slow_axis)
+
+        def eff_path(leg) -> str:
+            p = getattr(leg, "path", "eth")
+            return p if p in routes else "eth"
+
+        out: List[PredictedLeg] = []
+        slow = [lc for lc in self.leg_charges if is_pool(lc.leg)]
+        if self.pipelined and self.chunks > 1 and slow:
+            fast = [lc for lc in self.leg_charges if not is_pool(lc.leg)]
+            C = len(slow)
+            fast_total = sum(lc.seconds for lc in fast)
+            F = 0.0
+            tails: Dict[str, float] = {}
+            for slc in slow:
+                stage0, stage1 = F, F + fast_total / C
+                t0 = stage0
+                for lc in fast:  # per-chunk fast attribution, as replayed
+                    frac = lc.seconds / fast_total if fast_total > 0 \
+                        else 1.0 / len(fast)
+                    t1 = min(t0 + (stage1 - stage0) * frac, stage1)
+                    out.append(PredictedLeg(lc.leg, t0, t1, "",
+                                            getattr(slc.leg, "index", -1)))
+                    t0 = t1
+                F = stage1
+                p = eff_path(slc.leg)
+                s0 = max(F, tails.get(p, 0.0))
+                tails[p] = s0 + slc.seconds
+                out.append(PredictedLeg(slc.leg, s0, tails[p], p,
+                                        getattr(slc.leg, "index", -1)))
+            return tuple(out)
+        t = 0.0
+        entry: Optional[float] = None
+        tails = {}
+        for lc in self.leg_charges:
+            if is_pool(lc.leg):
+                if entry is None:
+                    entry, tails = t, {}
+                p = eff_path(lc.leg)
+                s0 = tails.get(p, entry)
+                tails[p] = s0 + lc.seconds
+                out.append(PredictedLeg(lc.leg, s0, tails[p], p,
+                                        getattr(lc.leg, "index", -1)))
+                t = max(tails.values())
+            else:
+                entry = None
+                out.append(PredictedLeg(lc.leg, t, t + lc.seconds))
+                t += lc.seconds
+        return tuple(out)
 
 
 class CostModel:

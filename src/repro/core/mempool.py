@@ -438,3 +438,25 @@ class MemPool:
 
     def busy_bytes(self) -> float:
         return sum(s.total * (s.t1 - s.t0) for s in self.segments)
+
+    def counter_series(self) -> List[Tuple[float, float]]:
+        """The recorded draw trace as piecewise-constant breakpoints
+        ``(t, total granted B/s)`` — zeros at gaps and after the last
+        segment, consecutive equal values merged; the series' max is
+        exactly :meth:`peak_bw` (the Perfetto counter-track form)."""
+        pts: List[Tuple[float, float]] = []
+
+        def emit(t: float, v: float) -> None:
+            if pts and pts[-1][1] == v:
+                return
+            pts.append((t, v))
+
+        prev: Optional[float] = None
+        for seg in self.segments:
+            if prev is not None and seg.t0 > prev:
+                emit(prev, 0.0)
+            emit(seg.t0, seg.total)
+            prev = seg.t1
+        if prev is not None:
+            emit(prev, 0.0)
+        return pts

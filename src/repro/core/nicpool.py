@@ -347,3 +347,25 @@ class NicPool:
 
     def busy_lane_seconds(self) -> float:
         return sum(s.total * (s.t1 - s.t0) for s in self.segments)
+
+    def counter_series(self) -> List[Tuple[float, float]]:
+        """The recorded allocation trace as piecewise-constant breakpoints
+        ``(t, total granted lanes)`` — zeros emitted at gaps and after the
+        last segment, consecutive equal values merged.  The series' max is
+        exactly :meth:`peak_lanes` (the Perfetto counter-track form)."""
+        pts: List[Tuple[float, float]] = []
+
+        def emit(t: float, v: float) -> None:
+            if pts and pts[-1][1] == v:
+                return
+            pts.append((t, v))
+
+        prev: Optional[float] = None
+        for seg in self.segments:
+            if prev is not None and seg.t0 > prev:
+                emit(prev, 0.0)
+            emit(seg.t0, seg.total)
+            prev = seg.t1
+        if prev is not None:
+            emit(prev, 0.0)
+        return pts

@@ -38,6 +38,7 @@ from repro.core.nicpool import NicPool
 from repro.core.schedule import (CommSchedule, SyncConfig, build_all_to_all,
                                  build_schedule)
 from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
+from repro.obs.plan_report import PlanReport
 
 
 @dataclass(frozen=True)
@@ -74,6 +75,9 @@ class SyncPlan:
     sections: List[Section]
     est_total_s: float = 0.0
     est_dcn_bytes_per_chip: float = 0.0
+    # candidate-level search audit, only when Planner(keep_report=True);
+    # serializes separately via PlanReport.to_json (next to to_json below)
+    report: Optional[PlanReport] = None
 
     def describe(self) -> str:
         lines = [f"SyncPlan: {len(self.sections)} sections, "
@@ -203,7 +207,8 @@ class Planner:
                  strategy: str = "auto",
                  pipeline: bool = True,
                  mid_codec: Optional[str] = None,
-                 stagger_lanes: bool = True):
+                 stagger_lanes: bool = True,
+                 keep_report: bool = False):
         self.topo = topo
         self.fabric = as_fabric(topo)
         self.cost = CostModel(topo)
@@ -222,6 +227,9 @@ class Planner:
         self.strategy = strategy
         self.pipeline = pipeline
         self.mid_codec = mid_codec
+        self.keep_report = keep_report
+        # last plan's / plan_all_to_all's candidate audit (keep_report only)
+        self.report: Optional[PlanReport] = None
 
     @property
     def n_fast_tiers(self) -> int:
@@ -343,8 +351,31 @@ class Planner:
         return build_schedule(self.fabric, cfg, shape, max(sd, 0),
                               dtype=dtype, fast_sizes=self.fast_sizes)
 
+    @staticmethod
+    def _knobs(cfg: SyncConfig, s: Optional[CommSchedule]) -> dict:
+        """The searched knob values of one candidate, as
+        ``repro.obs.plan_report.Candidate`` fields."""
+        return dict(strategy=cfg.strategy, scatter_depth=cfg.scatter_depth,
+                    chunks=s.chunks if s is not None else cfg.chunks,
+                    codec=cfg.codec, mid_codec=cfg.mid_codec,
+                    staging=s.staging if s is not None else None,
+                    path_split=cfg.path_split,
+                    pipelined=bool(s.pipelined if s is not None
+                                   else cfg.pipeline))
+
+    def _record_search(self, name: Optional[str], kind: str,
+                       shape: Tuple[int, ...],
+                       priced: List[Tuple[float, dict, object]]) -> None:
+        if not self.keep_report or name is None:
+            return
+        if self.report is None:
+            self.report = PlanReport()
+        self.report.sections.append(
+            PlanReport.build_section(name, kind, shape, priced))
+
     def _search_section(self, lshape: Tuple[int, ...],
-                        avoid: frozenset = frozenset()
+                        avoid: frozenset = frozenset(),
+                        report_name: Optional[str] = None
                         ) -> Tuple[SyncConfig, int, Optional[CommSchedule]]:
         """Search candidate schedules (depth x chunks x per-tier codec x
         slow-leg path split), pricing each with
@@ -377,7 +408,11 @@ class Planner:
                               pipeline=self.pipeline)
         if strat == "flat" or (sd < 0 or dmax == 0) and strat != "hier_root":
             # forced flat, or nothing divides even the fastest tier
-            return flat_cfg, sd, self._build(flat_cfg, lshape, sd, dtype)
+            s = self._build(flat_cfg, lshape, sd, dtype)
+            self._record_search(report_name, "section", lshape, [
+                (self.cost.flat_ring(nbytes).total_s,
+                 self._knobs(flat_cfg, s), s)])
+            return flat_cfg, sd, s
 
         cands: List[Tuple[float, SyncConfig, CommSchedule]] = []
         if strat in ("auto", "hier_striped"):
@@ -419,6 +454,9 @@ class Planner:
 
         # strict ordering: the FIRST candidate at the minimum wins, so the
         # list order above is the tie-break
+        self._record_search(report_name, "section", lshape,
+                            [(p, self._knobs(cfg, s), s)
+                             for p, cfg, s in cands])
         best = min(cands, key=lambda t: t[0])
         _, cfg, s = best
         # record the chunk count the builder actually kept
@@ -481,7 +519,7 @@ class Planner:
                     n_slow * max(slow[0].dest_sizes)
                     / dtype_itemsize("float32")))
         cap = self._mem_chunk_cap(cap_numel, xfer=1.0)
-        cands: List[Tuple[float, CommSchedule]] = []
+        cands: List[Tuple[float, SyncConfig, CommSchedule]] = []
         for c in self._candidate_chunks(row, cap):
             for split in self._path_split_candidates(c):
                 cfg = SyncConfig(strategy="hier_striped", chunks=c,
@@ -492,10 +530,16 @@ class Planner:
                 for stg in self._staging_candidates():
                     s = s0.with_staging(stg)
                     cands.append(
-                        (self.cost.from_schedule(s, mem=True).total_s, s))
+                        (self.cost.from_schedule(s, mem=True).total_s,
+                         cfg, s))
+        self._record_search(
+            f"all_to_all{shape}" + ("~skew" if dest_sizes is not None
+                                    else ""),
+            "all_to_all", shape,
+            [(p, self._knobs(cfg, s), s) for p, cfg, s in cands])
         # first candidate at the minimum wins: more chunks only when
         # strictly cheaper, "pool" staging over "local" on ties
-        return min(cands, key=lambda t: t[0])[1]
+        return min(cands, key=lambda t: t[0])[2]
 
     def stagger_exchanges(self, schedules: Sequence[Optional[CommSchedule]]
                           ) -> List[CommSchedule]:
@@ -549,6 +593,8 @@ class Planner:
         """
         avoid_dims = avoid_dims or {}
         local_shapes = local_shapes or {}
+        if self.keep_report:
+            self.report = PlanReport()
         sections: List[Section] = []
         small: List[Tuple[str, jax.ShapeDtypeStruct]] = []
         for path, sds in sorted(shapes.items()):
@@ -557,7 +603,8 @@ class Planner:
             model_sharded = lshape != tuple(sds.shape)
             if nbytes >= bucket_bytes or model_sharded:
                 cfg, sd, sched = self._search_section(
-                    lshape, avoid_dims.get(path, frozenset()))
+                    lshape, avoid_dims.get(path, frozenset()),
+                    report_name=path.replace("/", "."))
                 if cfg.strategy == "flat":
                     sd = -1
                 numel = int(np.prod(sds.shape))
@@ -582,7 +629,10 @@ class Planner:
             # product (grad_sync._bucket_pack), so the schedule plans the
             # PADDED extent
             padded = numel + ((-numel) % max(self.nf, 1))
-            cfg, _, sched = self._search_section((padded,))
+            cfg, _, sched = self._search_section(
+                (padded,),
+                report_name=(f"bucket[{bucket[0][0].replace('/', '.')}"
+                             f"...x{len(bucket)}]"))
             depth = self.n_fast_tiers if cfg.scatter_depth < 0 \
                 else cfg.scatter_depth
             chunks = self._adjust_chunks((padded,), 0, cfg.chunks, depth)
@@ -607,7 +657,7 @@ class Planner:
 
         if self.stagger_lanes:
             sections = self._stagger_sections(sections)
-        plan = SyncPlan(sections)
+        plan = SyncPlan(sections, report=self.report)
         # aggregate estimates
         tot, dcn = 0.0, 0.0
         for s in plan.sections:

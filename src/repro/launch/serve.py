@@ -15,6 +15,7 @@ import numpy as np
 from repro.configs.base import get_arch, get_smoke_arch
 from repro.models.registry import build_model
 from repro.models.transformer import ModelSettings
+from repro.obs.metrics import MetricsLogger
 from repro.runtime.serve_loop import DecodeServer, Request
 from repro.utils.jax_compat import make_mesh
 
@@ -28,6 +29,8 @@ def main() -> None:
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--metrics-path", default=None,
+                    help="streamed JSONL metrics (repro.obs.metrics)")
     args = ap.parse_args()
 
     arch = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
@@ -38,8 +41,11 @@ def main() -> None:
     mesh = make_mesh((ndev, 1), ("data", "model"))
 
     params = model.init(jax.random.key(0))
+    metrics = MetricsLogger(path=args.metrics_path, echo=False, run="serve",
+                            arch=args.arch)
     server = DecodeServer(model, mesh, batch_slots=args.batch_slots,
-                          max_seq=args.max_seq, temperature=args.temperature)
+                          max_seq=args.max_seq, temperature=args.temperature,
+                          metrics=metrics)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, arch.vocab, size=(4,)).astype(np.int32)

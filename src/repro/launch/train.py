@@ -48,6 +48,10 @@ def main() -> None:
                     help="comma shape, e.g. 2,2,2 for (pod,data,model); "
                          "requires forced host devices")
     ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics-path", default=None,
+                    help="streamed JSONL metrics (repro.obs.metrics): one "
+                         "record per step as it happens, unlike the "
+                         "post-hoc --metrics-out dump")
     args = ap.parse_args()
 
     arch = get_smoke_arch(args.arch) if args.smoke else get_arch(args.arch)
@@ -77,7 +81,8 @@ def main() -> None:
                         mode=args.mode, zero1=not args.no_zero1,
                         codec=args.codec, pipeline=not args.no_pipeline,
                         microbatches=args.microbatches,
-                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                        metrics_path=args.metrics_path)
     trainer = Trainer(model, mesh, shape, cfg)
     trainer.install_preemption_handler()
     out = trainer.train()

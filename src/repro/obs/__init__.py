@@ -1,0 +1,37 @@
+"""Observability for the DFabric repro: traces, metrics, audits.
+
+The repo's core contract — ``build_schedule`` / ``CostModel.from_schedule``
+/ ``lower_all_reduce`` / ``fabric_sim.simulate`` all walking the SAME
+``CommSchedule`` legs — is asserted at fixed points by the batteries; this
+package makes it continuously observable:
+
+  * :mod:`repro.obs.trace` — any :class:`~repro.sim.fabric_sim.SimResult`
+    (plus the predicted :class:`~repro.core.cost_model.ScheduleEstimate`
+    timeline) exported as Chrome-trace / Perfetto JSON, with the arbiters'
+    allocation traces as counter tracks;
+  * :mod:`repro.obs.metrics` — a dependency-free counters/gauges/timers
+    JSONL logger (adopted by ``runtime.train_loop`` / ``serve_loop`` and
+    ``benchmarks/run.py``);
+  * :mod:`repro.obs.audit` — the sim↔price drift auditor: per-leg
+    simulated-vs-priced drift classed per the documented contract
+    (exact / pipelined / priced / bracketed / bounded);
+  * :mod:`repro.obs.plan_report` — the planner's candidate sweep
+    (every depth × chunks × codec × staging × path-split priced, with
+    rejection reasons), serializable next to ``SyncPlan.to_json``;
+  * :mod:`repro.obs.capture` — an observer hook over ``simulate`` that
+    records :class:`~repro.sim.fabric_sim.SimObservation` without touching
+    the simulation (bitwise non-invasive), and turns each observation into
+    trace + drift artifacts.
+"""
+from repro.obs.audit import (DriftReport, Expectation, LegDrift,
+                             auto_expectations, compare)
+from repro.obs.capture import capture, export_observation
+from repro.obs.metrics import MetricsLogger, git_sha
+from repro.obs.plan_report import Candidate, PlanReport, SectionReport
+from repro.obs.trace import to_chrome_trace, write_chrome_trace
+
+__all__ = [
+    "Candidate", "DriftReport", "Expectation", "LegDrift", "MetricsLogger",
+    "PlanReport", "SectionReport", "auto_expectations", "capture", "compare",
+    "export_observation", "git_sha", "to_chrome_trace", "write_chrome_trace",
+]

@@ -19,6 +19,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.registry import Model
+from repro.obs.metrics import MetricsLogger
 from repro.runtime.train_loop import mesh_info
 
 
@@ -33,8 +34,11 @@ class Request:
 
 class DecodeServer:
     def __init__(self, model: Model, mesh: Mesh, *, batch_slots: int = 4,
-                 max_seq: int = 128, temperature: float = 0.0, seed: int = 0):
+                 max_seq: int = 128, temperature: float = 0.0, seed: int = 0,
+                 metrics: Optional[MetricsLogger] = None):
         self.model, self.mesh = model, mesh
+        # silent by default: serving stats were never printed before
+        self.metrics = metrics or MetricsLogger(echo=False, run="serve")
         self.B, self.S = batch_slots, max_seq
         self.temperature = temperature
         self.key = jax.random.key(seed)
@@ -91,17 +95,23 @@ class DecodeServer:
                 nxt = jnp.argmax(logits, axis=-1)
             nxt_np = np.asarray(nxt)
             self.stats["steps"] += 1
+            self.metrics.inc("decode_steps")
             for b, req in enumerate(self.active):
                 if req is None:
                     continue
                 req.generated.append(int(nxt_np[b]))
                 self.stats["tokens"] += 1
+                self.metrics.inc("tokens")
                 if len(req.generated) >= req.max_new:
                     req.done = True
                     self.active[b] = None
+                    self.metrics.log("request_done", uid=req.uid,
+                                     generated=len(req.generated))
             tokens = nxt[:, None].astype(jnp.int32)
             tokens = self._admit(cache, tokens, pos + 1)
         self.stats["wall"] = time.perf_counter() - t0
+        self.metrics.gauge("tokens_per_s", self.throughput())
+        self.metrics.log("serve_run", **self.stats)
         return {r.uid: r.generated for r in self.all_requests}
 
     def throughput(self) -> float:

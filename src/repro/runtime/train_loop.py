@@ -33,6 +33,7 @@ from repro.core.topology import TwoTierTopology, topology_from_mesh_sizes
 from repro.utils import jax_compat
 from repro.models.registry import Model
 from repro.models.sharding import MeshInfo
+from repro.obs.metrics import MetricsLogger
 from repro.optim.adamw import AdamWConfig, adamw_update, init_moments
 from repro.optim import grad_sync
 from repro.optim.grad_sync import SyncSettings, sync_and_update
@@ -408,6 +409,7 @@ class TrainerConfig:
     pipeline: bool = True  # overlap slow-leg chunks with fast all-gathers
     fail_at_step: Optional[int] = None  # failure injection (tests)
     seed: int = 0
+    metrics_path: Optional[str] = None  # JSONL sink (repro.obs.metrics)
 
 
 class Trainer:
@@ -447,6 +449,10 @@ class Trainer:
         self.watchdog = StragglerWatchdog()
         self._preempted = False
         self.metrics_log: List[Dict[str, float]] = []
+        # structured metrics: stdout lines as before, JSONL when
+        # cfg.metrics_path is set (see repro.obs.metrics)
+        self.metrics = MetricsLogger(path=cfg.metrics_path, run="train",
+                                     mode=cfg.mode)
 
     # ---- preemption ------------------------------------------------------------
     def install_preemption_handler(self, signals=(signal.SIGTERM,)):
@@ -514,9 +520,13 @@ class Trainer:
             self.watchdog.update(step, dt)
             metrics.update(step=step, dt=dt)
             self.metrics_log.append(metrics)
+            self.metrics.log("train_step", **metrics)
+            self.metrics.inc("steps")
+            self.metrics.gauge("loss", metrics["loss"])
             if self.cfg.log_every and step % self.cfg.log_every == 0:
-                print(f"step {step:5d} loss {metrics['loss']:.4f} "
-                      f"gnorm {metrics['grad_norm']:.3f} dt {dt*1e3:.1f}ms")
+                self.metrics.info(
+                    f"step {step:5d} loss {metrics['loss']:.4f} "
+                    f"gnorm {metrics['grad_norm']:.3f} dt {dt*1e3:.1f}ms")
             step += 1
             if self.ckpt and step % self.cfg.ckpt_every == 0:
                 self.ckpt.save(step, {

@@ -75,7 +75,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
 from repro.core.cost_model import CostModel, ScheduleEstimate
 from repro.core.mempool import MemPool, MemRequest
@@ -86,6 +86,23 @@ from repro.core.topology import FabricSpec, as_fabric
 _EPS = 1e-12
 
 COMPUTE = "compute"  # the pseudo-leg label of a compute phase
+
+
+def leg_label(leg) -> str:
+    """Short human-readable label of a schedule leg (or the COMPUTE
+    pseudo-leg), in the idiom of ``CommSchedule.describe``."""
+    if leg == COMPUTE:
+        return COMPUTE
+    kind = getattr(leg, "kind", "?")
+    if kind == "slow_chunk":
+        path = getattr(leg, "path", "eth")
+        suffix = "" if path == "eth" else f"@{path}"
+        if getattr(leg, "dest_sizes", None) is not None:
+            suffix += "~"
+        return f"slow[{leg.index}/{leg.chunks}{suffix}]"
+    short = {"reduce_scatter": "rs", "psum": "psum", "all_gather": "ag",
+             "all_to_all": "a2a"}.get(kind, kind)
+    return f"{short}[{leg.axis}x{leg.size}]"
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +184,61 @@ class SimResult:
         flow (the ∞-bandwidth fast path skips co-simulation, leaving
         ``mem`` attached with an empty trace — see ``simulate``)."""
         return self.mem.peak_bw() if self.mem is not None else 0.0
+
+    def describe(self) -> str:
+        """Human-readable timeline summary, mirroring
+        ``CommSchedule.describe``: makespan and pool peaks, then each
+        tenant's finish and per-leg [start, finish] intervals (µs)."""
+        lines = [f"SimResult: makespan {self.makespan * 1e6:.2f} us, "
+                 f"{len(self.events)} events, "
+                 f"peak lanes {self.peak_pool_lanes:.2f}, "
+                 f"peak mem bw {self.peak_mem_bw / 1e9:.2f} GB/s"]
+        for name in sorted(self.finish):
+            lines.append(f"  {name}: finish {self.finish[name] * 1e6:.2f} us")
+            for e in self.tenant_events(name):
+                tags = []
+                if e.round:
+                    tags.append(f"r{e.round}")
+                if e.lanes > 0:
+                    tags.append(f"lanes={e.lanes:.2f}")
+                tag = (" " + " ".join(tags)) if tags else ""
+                lines.append(
+                    f"    [{e.start * 1e6:>10.2f} -> {e.finish * 1e6:>10.2f}]"
+                    f" us {leg_label(e.leg)}{tag}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Observers (repro.obs.capture): notified AFTER a simulate() run with the
+# finished result — the hook cannot perturb the event loop, so capturing a
+# trace is bitwise non-invasive by construction.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimObservation:
+    """Everything :mod:`repro.obs` needs to export one run: the resolved
+    fabric, the tenants as submitted, the cost model the replay charged
+    legs with, and the finished result."""
+
+    fabric: FabricSpec
+    tenants: Tuple[Tenant, ...]
+    cost: CostModel
+    result: SimResult
+
+
+_observers: List[Callable[[SimObservation], None]] = []
+
+
+def add_observer(fn: Callable[[SimObservation], None]) -> None:
+    _observers.append(fn)
+
+
+def remove_observer(fn: Callable[[SimObservation], None]) -> None:
+    try:
+        _observers.remove(fn)
+    except ValueError:
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -631,5 +703,8 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
 
     events.sort(key=lambda e: (e.start, e.finish, e.tenant))
     makespan = max(finish.values(), default=0.0)
-    return SimResult(makespan, tuple(events), finish, pool, result_mem,
-                     path_pools)
+    result = SimResult(makespan, tuple(events), finish, pool, result_mem,
+                       path_pools)
+    for fn in list(_observers):
+        fn(SimObservation(fab, tuple(tenants), cm, result))
+    return result

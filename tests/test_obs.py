@@ -1,0 +1,406 @@
+"""Observability tests (PR 8 tentpole): Chrome-trace export, the
+sim↔price drift auditor, the planner's candidate report, and the metrics
+logger.
+
+The trace checks are schema-level (Perfetto loads any trace that keeps
+pid/tid/ts/dur sane and non-overlapping per thread; counter maxima must
+equal the arbiters' recorded peaks) plus a bitwise non-invasiveness
+check — capturing a simulation must not change it.  The drift checks
+re-walk the nicpool/mempool battery parity contracts through
+``auto_expectations`` on 2-tier and skewed grids.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.schedule import SyncConfig, build_all_to_all, build_schedule
+from repro.core.topology import FabricSpec, Tier
+from repro.obs.audit import (DriftReport, Expectation, auto_expectations,
+                             compare)
+from repro.obs.capture import capture, export_observation
+from repro.obs.metrics import MetricsLogger, git_sha
+from repro.obs.plan_report import PlanReport
+from repro.obs.trace import to_chrome_trace, write_chrome_trace
+from repro.sim.fabric_sim import Tenant, simulate
+
+
+def _fab2():
+    return FabricSpec(tiers=(Tier("ici", "pod", 4, 40e9, 1e-6),
+                             Tier("dcn", "dp", 2, 5e9, 10e-6)))
+
+
+def _sched(fab, chunks=2, pipeline=False, numel=1 << 14):
+    cfg = SyncConfig(strategy="hier_striped", chunks=chunks,
+                     pipeline=pipeline)
+    return build_schedule(fab, cfg, (numel,), 0)
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace schema
+# ---------------------------------------------------------------------------
+
+
+def _x_events(trace):
+    return [e for e in trace["traceEvents"] if e["ph"] == "X"]
+
+
+def test_trace_schema_sanity():
+    fab = _fab2()
+    s = _sched(fab)
+    cm = CostModel(fab)
+    tenants = [Tenant("a", s, compute_s=1e-5), Tenant("b", s)]
+    res = simulate(fab, tenants, cost=cm)
+    est = cm.from_schedule(s)
+    trace = to_chrome_trace(res, estimates={"a": est, "b": est},
+                            tenants=tenants)
+    evs = trace["traceEvents"]
+    assert {e["ph"] for e in evs} <= {"X", "M", "C"}
+    for e in evs:
+        assert isinstance(e["pid"], int)
+        if e["ph"] != "M":
+            assert e["ts"] >= 0
+    for e in _x_events(trace):
+        assert e["dur"] >= 0
+    # process metadata for all three tracks
+    procs = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert procs == {"sim", "predicted", "pools"}
+    # within a thread, complete events never overlap (Perfetto nests
+    # overlapping X events, which would misrender concurrent flows)
+    by_tid = {}
+    for e in _x_events(trace):
+        by_tid.setdefault((e["pid"], e["tid"]), []).append(e)
+    for evs_t in by_tid.values():
+        evs_t.sort(key=lambda e: e["ts"])
+        for prev, nxt in zip(evs_t, evs_t[1:]):
+            assert nxt["ts"] >= prev["ts"] + prev["dur"] - 1e-6
+
+
+def test_trace_counter_tracks_match_pool_peaks():
+    fab = _fab2()
+    s = _sched(fab)
+    res = simulate(fab, [Tenant("a", s), Tenant("b", s)],
+                   cost=CostModel(fab))
+    trace = to_chrome_trace(res)
+    cs = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    assert cs, "no counter events"
+    eth = [e for e in cs if e["name"] == "eth lanes"]
+    peak = max(v for e in eth for v in e["args"].values())
+    assert peak == pytest.approx(res.pool.peak_lanes())
+    assert peak == pytest.approx(res.peak_pool_lanes)
+    # counters return to zero at the end (a dangling counter renders as
+    # running forever)
+    last = max(eth, key=lambda e: e["ts"])
+    assert list(last["args"].values()) == [0.0]
+
+
+def test_trace_mem_counter_matches_peak_bw():
+    from repro.core.mempool import MemPoolSpec
+    fab = _fab2().with_mem(MemPoolSpec.build(local_bw=50e9,
+                                             local_channels=2,
+                                             device_bw=25e9, devices=2))
+    s = _sched(fab).with_staging("pool")
+    # mem defaults from fab.mem: the staging flows hit the memory pool
+    res = simulate(fab, [Tenant("a", s)], cost=CostModel(fab))
+    assert res.mem is not None and res.mem.segments
+    trace = to_chrome_trace(res)
+    mem = [e for e in trace["traceEvents"]
+           if e["ph"] == "C" and e["name"].startswith("mem")]
+    peak = max(v for e in mem for v in e["args"].values())
+    assert peak == pytest.approx(res.peak_mem_bw)
+
+
+def test_trace_write_roundtrip(tmp_path):
+    fab = _fab2()
+    res = simulate(fab, [Tenant("a", _sched(fab))], cost=CostModel(fab))
+    path = write_chrome_trace(to_chrome_trace(res),
+                              str(tmp_path / "x.trace.json"))
+    loaded = json.load(open(path))
+    assert loaded["traceEvents"]
+    assert loaded["displayTimeUnit"] == "ms"
+
+
+def test_capture_is_bitwise_noninvasive():
+    fab = _fab2()
+    cm = CostModel(fab)
+
+    def go():
+        s = _sched(fab, chunks=4, pipeline=True)
+        return simulate(fab, [Tenant("a", s, compute_s=1e-5),
+                              Tenant("b", s)], cost=cm)
+
+    bare = go()
+    with capture() as obs:
+        seen = go()
+    assert len(obs) == 1 and obs[0].result is seen
+    assert seen.makespan == bare.makespan  # bitwise, not approx
+    assert seen.finish == bare.finish
+    assert [(e.tenant, e.start, e.finish, e.lanes, e.round, e.chunk)
+            for e in seen.events] == \
+           [(e.tenant, e.start, e.finish, e.lanes, e.round, e.chunk)
+            for e in bare.events]
+
+
+def test_capture_unregisters_on_exit():
+    fab = _fab2()
+    with capture() as obs:
+        simulate(fab, [Tenant("a", _sched(fab))], cost=CostModel(fab))
+    n = len(obs)
+    simulate(fab, [Tenant("a", _sched(fab))], cost=CostModel(fab))
+    assert len(obs) == n
+
+
+# ---------------------------------------------------------------------------
+# drift auditor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunks,pipe", [(1, False), (2, False),
+                                         (2, True), (4, True)])
+def test_drift_solo_grid_in_class(chunks, pipe):
+    fab = _fab2()
+    with capture() as obs:
+        s = _sched(fab, chunks=chunks, pipeline=pipe)
+        simulate(fab, [Tenant("cn0", s, compute_s=1e-4)],
+                 cost=CostModel(fab))
+    exp = auto_expectations(obs[0])
+    rep = compare(obs[0].result, exp, tenants=obs[0].tenants)
+    assert rep.ok, rep.describe()
+    want = "pipelined" if (pipe and chunks > 1) else "exact"
+    # per-leg rows: compute phase rows are class "compute", the rest the
+    # tenant's point class
+    assert {r.cls for r in rep.rows} <= {want, "exact", "compute"}
+    assert want in {r.cls for r in rep.rows}
+
+
+def test_drift_contended_is_bracketed():
+    from repro.core.nicpool import NicPool
+    fab = _fab2()
+    with capture() as obs:
+        s = _sched(fab)
+        # an undersized pool (1 tenant's nominal lanes shared by 2): REAL
+        # θ-contention, the sim must land strictly inside the bracket
+        simulate(fab, [Tenant("a", s), Tenant("b", s)],
+                 pool=NicPool.from_fabric(fab), cost=CostModel(fab))
+    exp = auto_expectations(obs[0])
+    assert {e.resolved_cls() for e in exp.values()} == {"bracketed"}
+    rep = compare(obs[0].result, exp, tenants=obs[0].tenants)
+    assert rep.ok, rep.describe()
+    totals = [r for r in rep.rows if r.leg == "total"]
+    assert totals and all(r.hi_s is not None and r.hi_s > r.lo_s
+                          for r in totals)
+    # contention is real: the sim total exceeds the solo price
+    assert all(r.sim_s > r.lo_s * 1.01 for r in totals)
+
+
+def test_drift_pinned_is_bounded():
+    fab = _fab2()
+    with capture() as obs:
+        s = _sched(fab)
+        simulate(fab, [Tenant("pin", s, pin_lanes=True),
+                       Tenant("fluid", s)], cost=CostModel(fab))
+    exp = auto_expectations(obs[0])
+    # static lane assignment has no fluid upper bound: BOTH tenants of
+    # the shared group demote to the lower-bound-only class
+    assert {e.resolved_cls() for e in exp.values()} == {"bounded"}
+    rep = compare(obs[0].result, exp, tenants=obs[0].tenants)
+    assert rep.ok, rep.describe()
+
+
+def test_drift_skewed_alltoall_solo_exact():
+    fab = _fab2()
+    n = 8
+    sizes = [float(1 << 10)] * n
+    sizes[0] *= 4.0
+    with capture() as obs:
+        s = build_all_to_all(fab, SyncConfig(strategy="hier_striped",
+                                             chunks=1, pipeline=False),
+                             (n, 1 << 8), "float32", dest_sizes=sizes)
+        simulate(fab, [Tenant("moe", s)], cost=CostModel(fab))
+    exp = auto_expectations(obs[0])
+    assert exp["moe"].resolved_cls() == "exact"
+    rep = compare(obs[0].result, exp, tenants=obs[0].tenants)
+    assert rep.ok and rep.max_drift() < 1e-9, rep.describe()
+
+
+def test_drift_skewed_alltoall_contended_bracketed():
+    fab = _fab2()
+    n = 8
+    sizes = [float(1 << 10)] * n
+    sizes[0] *= 4.0
+    cfg = SyncConfig(strategy="hier_striped", chunks=1, pipeline=False)
+    with capture() as obs:
+        sa = build_all_to_all(fab, cfg, (n, 1 << 8), "float32",
+                              dest_sizes=sizes)
+        sb = build_all_to_all(fab, cfg, (n, 1 << 8), "float32")
+        simulate(fab, [Tenant("hot", sa), Tenant("cold", sb)],
+                 cost=CostModel(fab))
+    exp = auto_expectations(obs[0])
+    assert {e.resolved_cls() for e in exp.values()} == {"bracketed"}
+    rep = compare(obs[0].result, exp, tenants=obs[0].tenants)
+    assert rep.ok, rep.describe()
+
+
+def test_drift_detects_violation():
+    # a wrong expectation must fail — the auditor is not vacuously ok
+    from repro.core.nicpool import NicPool
+    fab = _fab2()
+    s = _sched(fab)
+    cm = CostModel(fab)
+    res = simulate(fab, [Tenant("a", s), Tenant("b", s)],
+                   pool=NicPool.from_fabric(fab), cost=cm)
+    solo = cm.from_schedule(s)  # solo price: provably below contended sim
+    rep = compare(res, {"a": Expectation(solo, cls="exact")})
+    assert not rep.ok
+    assert any(abs(r.drift) > 1e-3 for r in rep.failures())
+
+
+def test_drift_csv_and_describe(tmp_path):
+    fab = _fab2()
+    with capture() as obs:
+        simulate(fab, [Tenant("a", _sched(fab), compute_s=1e-5)],
+                 cost=CostModel(fab))
+    path, rep = export_observation(obs[0], str(tmp_path), "fig")
+    assert os.path.exists(path)
+    csv = rep.to_csv()
+    assert csv.splitlines()[0] == DriftReport.csv_header()
+    assert len(csv.splitlines()) == len(rep.rows) + 1
+    pref = rep.to_csv(header=False, prefix="figX")
+    assert all(line.startswith("figX,") for line in pref.splitlines())
+    assert "max |drift|" in rep.describe()
+
+
+# ---------------------------------------------------------------------------
+# predicted timelines (ScheduleEstimate.leg_timeline)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunks,pipe", [(1, False), (4, False), (4, True)])
+def test_leg_timeline_ends_at_total(chunks, pipe):
+    fab = _fab2()
+    est = CostModel(fab).from_schedule(_sched(fab, chunks=chunks,
+                                              pipeline=pipe))
+    tl = est.leg_timeline()
+    assert tl, "empty timeline"
+    assert all(pl.finish >= pl.start >= 0 for pl in tl)
+    assert max(pl.finish for pl in tl) == pytest.approx(est.total_s)
+
+
+def test_leg_timeline_multipath_routes():
+    from repro.core.topology import cxl_shortcut_path
+    fab = _fab2().with_paths(cxl_shortcut_path())
+    cfg = SyncConfig(strategy="hier_striped", chunks=4, pipeline=False,
+                     path_split=(("cxl", 0.5),))
+    est = CostModel(fab).from_schedule(build_schedule(fab, cfg,
+                                                     (1 << 14,), 0))
+    tl = est.leg_timeline()
+    assert {pl.path for pl in tl if pl.path} >= {"eth", "cxl"}
+    assert max(pl.finish for pl in tl) == pytest.approx(est.total_s)
+
+
+# ---------------------------------------------------------------------------
+# PlanReport
+# ---------------------------------------------------------------------------
+
+
+def test_plan_report_roundtrip_and_winner():
+    import jax
+    from repro.core.planner import Planner
+    fab = _fab2()
+    pl = Planner(fab, keep_report=True, stagger_lanes=False)
+    plan = pl.plan({"w/big": jax.ShapeDtypeStruct((1 << 20,), "float32")})
+    rep = plan.report
+    assert rep is not None and len(rep.sections) == 1
+    sec = rep.sections[0]
+    assert len(sec.candidates) > 1
+    win = sec.candidates[sec.winner]
+    assert win.rejected is None
+    assert all(c.rejected for i, c in enumerate(sec.candidates)
+               if i != sec.winner)
+    assert win.total_s == min(c.total_s for c in sec.candidates)
+    # the recorded winner IS the plan's schedule (stagger off, non-bucket)
+    assert sec.winner_schedule == plan.sections[0].schedule.to_dict()
+    # JSON round-trip
+    rt = PlanReport.from_json(rep.to_json())
+    assert rt.sections[0].winner == sec.winner
+    assert rt.sections[0].winner_schedule == sec.winner_schedule
+    assert [c.total_s for c in rt.sections[0].candidates] == \
+           [c.total_s for c in sec.candidates]
+    assert "winner" in rep.describe()
+
+
+def test_plan_report_all_to_all_winner():
+    from repro.core.planner import Planner
+    fab = _fab2()
+    pl = Planner(fab, keep_report=True)
+    sched = pl.plan_all_to_all((8, 256))
+    a2a = [s for s in pl.report.sections if s.kind == "all_to_all"]
+    assert len(a2a) == 1
+    assert a2a[0].winner_schedule == sched.to_dict()
+
+
+def test_plan_report_off_by_default():
+    import jax
+    from repro.core.planner import Planner
+    pl = Planner(_fab2())
+    plan = pl.plan({"w/big": jax.ShapeDtypeStruct((1 << 20,), "float32")})
+    assert plan.report is None and pl.report is None
+
+
+# ---------------------------------------------------------------------------
+# metrics logger / describe
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_logger_jsonl(tmp_path):
+    path = str(tmp_path / "m" / "log.jsonl")
+    with MetricsLogger(path=path, echo=False, run="t") as m:
+        m.inc("steps")
+        m.inc("steps")
+        m.gauge("loss", 1.5)
+        with m.timer("step"):
+            pass
+        m.log("train_step", loss=1.5, step=0)
+        m.info("hello")
+    recs = [json.loads(line) for line in open(path)]
+    assert all(r["run"] == "t" for r in recs)
+    events = [r["event"] for r in recs]
+    assert "train_step" in events and "info" in events
+    summary = [r for r in recs if r["event"] == "summary"][-1]
+    assert summary["c:steps"] == 2.0
+    assert summary["g:loss"] == 1.5
+    assert summary["c:step_n"] == 1.0
+
+
+def test_metrics_logger_in_memory_and_echo(capsys):
+    m = MetricsLogger(echo=False)
+    m.info("quiet")
+    assert capsys.readouterr().out == ""
+    m2 = MetricsLogger()
+    m2.info("loud")
+    assert "loud" in capsys.readouterr().out
+    assert [r["event"] for r in m.records] == ["info"]
+
+
+def test_git_sha_stamps():
+    sha = git_sha(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    assert sha != "unknown" and len(sha) == 12
+
+
+def test_sim_result_describe():
+    fab = _fab2()
+    res = simulate(fab, [Tenant("a", _sched(fab), compute_s=1e-5)],
+                   cost=CostModel(fab))
+    text = res.describe()
+    assert "makespan" in text and "a" in text
+    assert "slow[" in text  # leg labels, not raw reprs
+    assert "compute" in text
+
+
+def test_trainer_config_has_metrics_path():
+    from repro.runtime.train_loop import TrainerConfig
+    assert TrainerConfig(metrics_path="/tmp/x.jsonl").metrics_path \
+        == "/tmp/x.jsonl"

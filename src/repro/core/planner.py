@@ -28,7 +28,8 @@ from __future__ import annotations
 import json
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import numpy as np
@@ -38,7 +39,9 @@ from repro.core.nicpool import NicPool
 from repro.core.schedule import (CommSchedule, SyncConfig, build_all_to_all,
                                  build_schedule)
 from repro.core.topology import FabricSpec, TwoTierTopology, as_fabric
-from repro.obs.plan_report import PlanReport
+
+if TYPE_CHECKING:  # import-time cycle: obs/__init__ -> audit -> fabric_sim
+    from repro.obs.plan_report import PlanReport
 
 
 @dataclass(frozen=True)
@@ -368,6 +371,7 @@ class Planner:
                        priced: List[Tuple[float, dict, object]]) -> None:
         if not self.keep_report or name is None:
             return
+        from repro.obs.plan_report import PlanReport
         if self.report is None:
             self.report = PlanReport()
         self.report.sections.append(
@@ -594,6 +598,7 @@ class Planner:
         avoid_dims = avoid_dims or {}
         local_shapes = local_shapes or {}
         if self.keep_report:
+            from repro.obs.plan_report import PlanReport
             self.report = PlanReport()
         sections: List[Section] = []
         small: List[Tuple[str, jax.ShapeDtypeStruct]] = []

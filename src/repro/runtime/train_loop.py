@@ -509,38 +509,42 @@ class Trainer:
             if self.cfg.mode == "dfabric" else self.bshard
 
         step = start_step
-        while step < self.cfg.steps:
-            t0 = time.perf_counter()
-            host_batch = self.pipeline.batch_at(step)
-            batch = {k: jax.device_put(v, bshard[k]) for k, v in host_batch.items()}
-            params, opt, metrics = self.step_fn(params, opt, batch,
-                                                jnp.int32(step))
-            metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.perf_counter() - t0
-            self.watchdog.update(step, dt)
-            metrics.update(step=step, dt=dt)
-            self.metrics_log.append(metrics)
-            self.metrics.log("train_step", **metrics)
-            self.metrics.inc("steps")
-            self.metrics.gauge("loss", metrics["loss"])
-            if self.cfg.log_every and step % self.cfg.log_every == 0:
-                self.metrics.info(
-                    f"step {step:5d} loss {metrics['loss']:.4f} "
-                    f"gnorm {metrics['grad_norm']:.3f} dt {dt*1e3:.1f}ms")
-            step += 1
-            if self.ckpt and step % self.cfg.ckpt_every == 0:
-                self.ckpt.save(step, {
-                    "params": params, "opt": opt,
-                    "data_state": self.pipeline.state_dict(step)})
-            if self.cfg.fail_at_step is not None and step >= self.cfg.fail_at_step:
-                raise SimulatedFailure(f"injected failure at step {step}")
-            if self._preempted:
-                if self.ckpt:
+        try:
+            while step < self.cfg.steps:
+                t0 = time.perf_counter()
+                host_batch = self.pipeline.batch_at(step)
+                batch = {k: jax.device_put(v, bshard[k]) for k, v in host_batch.items()}
+                params, opt, metrics = self.step_fn(params, opt, batch,
+                                                    jnp.int32(step))
+                metrics = {k: float(v) for k, v in metrics.items()}
+                dt = time.perf_counter() - t0
+                self.watchdog.update(step, dt)
+                metrics.update(step=step, dt=dt)
+                self.metrics_log.append(metrics)
+                self.metrics.log("train_step", **metrics)
+                self.metrics.inc("steps")
+                self.metrics.gauge("loss", metrics["loss"])
+                if self.cfg.log_every and step % self.cfg.log_every == 0:
+                    self.metrics.info(
+                        f"step {step:5d} loss {metrics['loss']:.4f} "
+                        f"gnorm {metrics['grad_norm']:.3f} dt {dt*1e3:.1f}ms")
+                step += 1
+                if self.ckpt and step % self.cfg.ckpt_every == 0:
                     self.ckpt.save(step, {
                         "params": params, "opt": opt,
-                        "data_state": self.pipeline.state_dict(step)},
-                        blocking=True)
-                break
+                        "data_state": self.pipeline.state_dict(step)})
+                if self.cfg.fail_at_step is not None and step >= self.cfg.fail_at_step:
+                    raise SimulatedFailure(f"injected failure at step {step}")
+                if self._preempted:
+                    if self.ckpt:
+                        self.ckpt.save(step, {
+                            "params": params, "opt": opt,
+                            "data_state": self.pipeline.state_dict(step)},
+                            blocking=True)
+                    break
+        finally:
+            # emit the final 'summary' record and release the JSONL handle
+            self.metrics.close()
         if self.ckpt:
             self.ckpt.wait()
         return {"params": params, "opt": opt, "step": step,

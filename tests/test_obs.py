@@ -404,3 +404,34 @@ def test_trainer_config_has_metrics_path():
     from repro.runtime.train_loop import TrainerConfig
     assert TrainerConfig(metrics_path="/tmp/x.jsonl").metrics_path \
         == "/tmp/x.jsonl"
+
+
+def test_trainer_closes_metrics_with_summary(tmp_path):
+    """train() must close its MetricsLogger so the JSONL ends with the
+    accumulated 'summary' record (REVIEW: handle leaked, summary never
+    written)."""
+    from repro.configs import get_smoke_arch
+    from repro.models import ModelSettings, build_model
+    from repro.runtime.train_loop import Trainer, TrainerConfig
+    from repro.utils.jax_compat import make_mesh
+
+    class _Shape:
+        global_batch = 4
+        seq_len = 16
+        name = "tiny"
+        kind = "train"
+
+    st = ModelSettings(param_dtype="float32", compute_dtype="float32",
+                       remat="none", loss_chunk=8, max_seq=64)
+    model = build_model(get_smoke_arch("qwen2-0.5b"), st)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
+    path = str(tmp_path / "m.jsonl")
+    cfg = TrainerConfig(steps=2, lr=5e-3, warmup=1, log_every=0,
+                        ckpt_every=100, ckpt_dir=None, mode="dfabric",
+                        seed=7, metrics_path=path)
+    tr = Trainer(model, mesh, _Shape(), cfg)
+    tr.train()
+    assert tr.metrics._fh is None  # handle released
+    records = [json.loads(line) for line in open(path)]
+    assert records[-1]["event"] == "summary"
+    assert records[-1]["c:steps"] == 2.0

@@ -1,0 +1,128 @@
+"""Serving-fleet figures: tail latency and goodput through the pools.
+
+The north star demands "heavy traffic from millions of users"; this
+figure family is where the repo finally measures serving-scale claims
+instead of single-collective ones.  An open-loop Poisson workload
+(``repro.serve_sim.workload`` — arrivals do NOT slow down when the
+system backs up, so queueing shows in the tail) is expanded into
+prefill/decode tenant pairs and replayed through the contended NIC and
+memory pools (``repro.serve_sim.fleet``).  Three sections:
+
+  * **solo parity** — one uncontended session's simulated makespan vs
+    its closed-form solo price (``solo_estimate_s``): the fleet's
+    version of the repo-wide sim==price contract.  ASSERTED: exact
+    (≤ 1e-9 relative) with a sequential prefill, < 1% pipelined.
+  * **SLO-priority lanes vs equal weight** — the SAME seeded workload
+    replayed twice at θ-way contention on a fixed rack pool, once with
+    every flow weighing 1.0 and once with SLO priorities (interactive
+    4:1 over batch) on the arbiters.  ASSERTED: priority lanes cut
+    interactive p99 latency.  This is the paper's pooling-under-
+    many-tenant-contention claim restated for serving: the pool
+    arbitrates, so the tiers you care about keep their tail.
+  * **goodput vs θ** — batch-slot sweep: admission-queued (θ small,
+    slots starve) to pool-contended (θ large, wire starves); goodput
+    counts only deadline-met sessions' tokens.
+
+Every ``simulate`` call flows through ``repro.obs`` like the other sim
+figures — ``benchmarks/run.py --trace-dir`` audits each leg against its
+sim↔price contract class (queued fleet tenants are ``bounded``,
+contended fluid flows ``bracketed``) and fails on any out-of-class leg.
+"""
+from __future__ import annotations
+
+from repro.core.mempool import MemPoolSpec
+from repro.core.topology import FabricSpec, HardwareSpec, Tier
+from repro.serve_sim import (FleetConfig, Session, WorkloadConfig,
+                             generate_sessions, simulate_fleet)
+from repro.serve_sim.workload import DEFAULT_SLO_CLASSES
+
+
+def serving_fabric() -> FabricSpec:
+    """A serving rack: 4-chip hosts on ICI, 2 hosts per rack on the CXL
+    fabric, 4 racks on Ethernet with 2 NIC lanes/chip, backed by a
+    memory pool of 2 local DRAM channels + 4 CXL expanders."""
+    hw = HardwareSpec()
+    mem = MemPoolSpec.build(local_bw=100e9, local_channels=2,
+                            device_bw=25e9, devices=4, device_latency=2e-6)
+    return FabricSpec(tiers=(
+        Tier("ici", "data", 4, hw.ici_bw, hw.ici_latency),
+        Tier("cxl", "host", 2, hw.cxl_bw, hw.cxl_latency),
+        Tier("dcn", "pod", 4, hw.dcn_bw, hw.dcn_latency, lanes=2.0),
+    ), hw=hw, mem=mem)
+
+
+def fleet_cfg(**kw) -> FleetConfig:
+    """The figure's contended operating point: a 4-lane rack pool (vs 2
+    nominal lanes per flow — two bursts saturate it), decode legs heavy
+    enough to feel lane loss, and decode compute drawing KV reads from
+    the local channels."""
+    base = dict(slots=8, pool_lanes=4.0, bytes_per_token=16384.0,
+                decode_sync_bytes=65536.0, kv_bytes_per_token=1024.0,
+                step_compute_s=10e-6, kv_read_bw=20e9)
+    base.update(kw)
+    return FleetConfig(**base)
+
+
+def run(smoke: bool = False):
+    fab = serving_fabric()
+    rows = []
+
+    # ---- solo parity: the fleet's sim==price anchor -----------------------
+    solo = Session(0, 0.0, 256, 8, DEFAULT_SLO_CLASSES[0])
+    seq = simulate_fleet(fab, [solo], fleet_cfg(chunks=1, pipeline=False))
+    rel = abs(seq.makespan - seq.plans[0].solo_s) / seq.plans[0].solo_s
+    assert rel <= 1e-9, f"solo sequential parity broke: {rel:.3e}"
+    rows.append(("fig_fleet/solo_seq_makespan", seq.makespan * 1e6,
+                 f"rel_err={rel:.1e}_(exact)"))
+    pipe = simulate_fleet(fab, [solo], fleet_cfg(chunks=4, pipeline=True))
+    relp = abs(pipe.makespan - pipe.plans[0].solo_s) / pipe.plans[0].solo_s
+    assert relp < 1e-2, f"solo pipelined parity broke: {relp:.3e}"
+    rows.append(("fig_fleet/solo_pipe_makespan", pipe.makespan * 1e6,
+                 f"rel_err={relp:.1e}_(<1%)"))
+    moe = Session(0, 0.0, 256, 8, DEFAULT_SLO_CLASSES[0], kind="moe")
+    msim = simulate_fleet(fab, [moe], fleet_cfg(chunks=1, pipeline=False))
+    relm = abs(msim.makespan - msim.plans[0].solo_s) / msim.plans[0].solo_s
+    assert relm <= 1e-9, f"solo moe parity broke: {relm:.3e}"
+    rows.append(("fig_fleet/solo_moe_makespan", msim.makespan * 1e6,
+                 f"rel_err={relm:.1e}_(exact)"))
+
+    # ---- SLO-priority lanes vs equal weight at θ-way contention -----------
+    n = 16 if smoke else 32
+    wl = WorkloadConfig(rate=3000.0, sessions=n, seed=3, moe_frac=0.25,
+                        prompt_mean_tokens=512.0, output_mean_tokens=24.0)
+    sessions = generate_sessions(wl)
+    assert sessions == generate_sessions(wl), "workload seed reproducibility"
+    base = simulate_fleet(fab, sessions, fleet_cfg(priority_lanes=False))
+    prio = simulate_fleet(fab, sessions, fleet_cfg(priority_lanes=True))
+    b99 = base.latency_pct(99, "interactive")
+    p99 = prio.latency_pct(99, "interactive")
+    assert p99 < b99, \
+        f"SLO-priority lanes must cut interactive p99: {p99} vs {b99}"
+    rows.append(("fig_fleet/int_p99_equal_weight", b99 * 1e6,
+                 f"met={base.met_frac:.2f}_goodput={base.goodput_tok_s:.0f}tok/s"))
+    rows.append(("fig_fleet/int_p99_slo_priority", p99 * 1e6,
+                 f"cut={1 - p99 / b99:.1%}_met={prio.met_frac:.2f}"
+                 f"_goodput={prio.goodput_tok_s:.0f}tok/s"))
+    rows.append(("fig_fleet/int_ttft_p99_equal_weight",
+                 base.ttft_pct(99, "interactive") * 1e6, "arrival->token1"))
+    rows.append(("fig_fleet/int_ttft_p99_slo_priority",
+                 prio.ttft_pct(99, "interactive") * 1e6, "arrival->token1"))
+    rows.append(("fig_fleet/batch_p99_slo_priority",
+                 prio.latency_pct(99, "batch") * 1e6,
+                 f"vs_equal={prio.latency_pct(99, 'batch') / max(base.latency_pct(99, 'batch'), 1e-30):.2f}x"
+                 "_(the_lane_the_tail_moved_to)"))
+
+    # ---- goodput vs θ (batch-slot sweep) ----------------------------------
+    thetas = (1, 2, 4, 8) if smoke else (1, 2, 4, 8, 16)
+    for theta in thetas:
+        fr = simulate_fleet(fab, sessions, fleet_cfg(slots=theta))
+        rows.append((f"fig_fleet/goodput_theta{theta}",
+                     fr.goodput_tok_s,
+                     f"met={fr.met_frac:.2f}_makespan="
+                     f"{fr.makespan * 1e3:.2f}ms"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -13,8 +13,10 @@ fig_overlap — each replaying one schedule through the simulator —
 the sim-backed fig13_timesharing, fig_pool_contention,
 fig_mempool_scaling, fig_multipath — which asserts per-path sim-vs-price
 parity — fig_skew — which asserts the skew-aware plan's double-digit
-Zipf win and skewed sim==price parity — and fig9_apps, whose wordcount
-and cell C MoE-dispatch rows go through the NIC/memory-pool simulator)
+Zipf win and skewed sim==price parity — fig9_apps, whose wordcount
+and cell C MoE-dispatch rows go through the NIC/memory-pool simulator —
+and fig_fleet, which replays an open-loop serving workload through the
+pools and asserts solo sim==price parity plus the SLO-priority p99 cut)
 at tiny payload sizes — the CI sanity job (the workflow uploads the CSV
 as an artifact and fails on ERROR rows).
 
@@ -47,7 +49,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                            fig12_nic_scaling, fig13_timesharing,
+                            fig12_nic_scaling, fig13_timesharing, fig_fleet,
                             fig_mempool_scaling, fig_multipath, fig_ntier,
                             fig_overlap, fig_pool_contention, fig_skew,
                             roofline, table4_breakdown)
@@ -55,11 +57,11 @@ def main() -> None:
     if args.smoke:
         modules = [fig_ntier, fig_overlap, fig9_apps, fig13_timesharing,
                    fig_pool_contention, fig_mempool_scaling, fig_multipath,
-                   fig_skew]
+                   fig_skew, fig_fleet]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                   fig12_nic_scaling, fig13_timesharing, fig_mempool_scaling,
-                   fig_multipath, fig_ntier, fig_overlap,
+                   fig12_nic_scaling, fig13_timesharing, fig_fleet,
+                   fig_mempool_scaling, fig_multipath, fig_ntier, fig_overlap,
                    fig_pool_contention, fig_skew, table4_breakdown, roofline]
 
     tracing = args.trace_dir is not None

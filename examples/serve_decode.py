@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_smoke_arch, list_archs
 from repro.models import ModelSettings, build_model
+from repro.obs.metrics import MetricsLogger
 from repro.runtime.serve_loop import DecodeServer, Request
 
 
@@ -22,6 +23,8 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen2-0.5b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--metrics-path", default=None,
+                    help="streamed JSONL metrics (repro.obs.metrics)")
     args = ap.parse_args()
 
     arch = get_smoke_arch(args.arch)
@@ -30,8 +33,10 @@ def main() -> None:
         max_seq=128))
     mesh = make_mesh((1, 1), ("data", "model"))
     params = model.init(jax.random.key(0))
+    metrics = MetricsLogger(path=args.metrics_path, echo=False, run="serve",
+                            arch=args.arch)
     server = DecodeServer(model, mesh, batch_slots=4, max_seq=128,
-                          temperature=0.8)
+                          temperature=0.8, metrics=metrics)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         server.submit(Request(uid=i,
@@ -39,8 +44,15 @@ def main() -> None:
                               max_new=args.max_new))
     outs = server.run(params, max_steps=120)
     done = sum(1 for t in outs.values() if len(t) >= args.max_new)
+    lat = server.latency_summary()
     print(f"{done}/{args.requests} requests completed, "
           f"{server.throughput():.1f} tok/s")
+    if lat:
+        print(f"ttft p50 {lat['ttft_p50_s'] * 1e3:.1f} ms "
+              f"p99 {lat['ttft_p99_s'] * 1e3:.1f} ms, "
+              f"tpot p50 {lat.get('tpot_p50_s', 0) * 1e3:.2f} ms "
+              f"p99 {lat.get('tpot_p99_s', 0) * 1e3:.2f} ms")
+    metrics.close()
 
 
 if __name__ == "__main__":

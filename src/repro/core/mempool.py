@@ -391,7 +391,16 @@ class MemPool:
             f = self._flows[fid]
             slack = self._slack(f)
             if f.remaining > slack:
-                f.remaining -= alloc.get(fid, 0.0) * dt
+                g = alloc.get(fid, 0.0)
+                f.remaining -= g * dt
+                # a ~1e-7 B residual left by a 100+ GB/s grant can sit
+                # above the byte slack while its drain time underflows
+                # the clock's ulp at large `until` — earliest_finish then
+                # returns `until` itself and dt stays 0 forever (Zeno
+                # livelock); cut such a residual to the latency tail
+                if f.remaining > slack and g > _EPS \
+                        and until + f.remaining / g <= until:
+                    f.remaining = 0.0
             else:
                 f.tail -= dt
             # thresholds must match earliest_finish's: anything that

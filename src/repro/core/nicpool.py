@@ -301,8 +301,16 @@ class NicPool:
         done: List[Tuple[int, LaneGrant]] = []
         for fid in list(self._flows):
             f = self._flows[fid]
-            f.remaining -= alloc.get(fid, 0.0) * dt
+            g = alloc.get(fid, 0.0)
+            f.remaining -= g * dt
             slack = _EPS * (1.0 + f.req.work)
+            # a residual above the slack whose drain time underflows the
+            # clock's ulp at large `until` can never be drained by a
+            # finite advance (earliest_finish returns `until` itself and
+            # dt stays 0 forever — a Zeno livelock); judge it done
+            if f.remaining > slack and g > _EPS \
+                    and until + f.remaining / g <= until:
+                f.remaining = 0.0
             if f.remaining <= slack:
                 grant = LaneGrant(f.req, f.start, until)
                 self.grants.append(grant)

@@ -55,6 +55,13 @@ def main() -> None:
         print(f"req {uid}: {len(toks)} tokens: {toks[:12]}...")
     print(f"throughput: {server.throughput():.1f} tok/s "
           f"({server.stats['tokens']} tokens, {server.stats['steps']} steps)")
+    lat = server.latency_summary()
+    if lat:
+        print(f"ttft p50 {lat['ttft_p50_s'] * 1e3:.1f} ms "
+              f"p99 {lat['ttft_p99_s'] * 1e3:.1f} ms, "
+              f"tpot p50 {lat.get('tpot_p50_s', 0) * 1e3:.2f} ms "
+              f"p99 {lat.get('tpot_p99_s', 0) * 1e3:.2f} ms")
+    metrics.close()
 
 
 if __name__ == "__main__":

@@ -20,10 +20,12 @@ class** and judged against its expectation:
                  and the hi grant is its weighted max-min guarantee
                  ``pool · w / Σ w`` (it is never granted less) — checked
                  with 1% slack (the pipelined/multipath tolerance).
-  ``bounded``    pinned lanes or memory contention: lower bound only,
-                 sim ≥ price(best case) − 1% (static lane assignment
-                 and memory-pool queueing have no closed-form upper
-                 bound worth promising).
+  ``bounded``    pinned lanes, memory contention, or ``after``-queued
+                 tenants (the serving fleet's phase/admission chains):
+                 lower bound only, sim ≥ price(best case) − 1% (static
+                 lane assignment, memory-pool queueing and simulated
+                 admission delay have no closed-form upper bound worth
+                 promising).
   ``compute``    schedule-less tenants: compute phases against their
                  configured duration (exact, or ≥ under memory
                  contention).
@@ -380,9 +382,14 @@ def auto_expectations(obs: SimObservation) -> Dict[str, Expectation]:
     out: Dict[str, Expectation] = {}
     for tn in obs.tenants:
         name = tn.name
+        # an `after` tenant's total is measured from its own `start` but
+        # it really began at its predecessor's finish — the queueing
+        # delay is simulated, not priced, so only the lower bound holds
+        queued = tn.after is not None
         if tn.schedule is None:
             out[name] = Expectation(
-                None, cls="bounded" if mem_contended(name) else "compute")
+                None, cls="bounded" if queued or mem_contended(name)
+                else "compute")
             continue
         paths = list(slow_iv.get(name, {}))
         granted_lo = {p: lo_cap(tn, p) for p in paths
@@ -406,7 +413,7 @@ def auto_expectations(obs: SimObservation) -> Dict[str, Expectation]:
         pinned_near = any(
             cfg[other].pin_lanes
             for p in hot for other in slow_iv if p in slow_iv[other])
-        if tn.pin_lanes or (hot and pinned_near):
+        if queued or tn.pin_lanes or (hot and pinned_near):
             out[name] = Expectation(lo, cls="bounded")
         elif mem_contended(name):
             out[name] = Expectation(lo, cls="bounded")

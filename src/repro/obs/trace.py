@@ -78,19 +78,35 @@ def _x(pid: int, tid: int, name: str, start: float, finish: float,
 def to_chrome_trace(result: SimResult,
                     estimates: Optional[Mapping[str, ScheduleEstimate]]
                     = None,
-                    tenants: Optional[Sequence[Tenant]] = None) -> dict:
+                    tenants: Optional[Sequence[Tenant]] = None,
+                    max_tracks: int = 32,
+                    fleet_lanes: int = 8) -> dict:
     """Render ``result`` (and, when given, per-tenant predicted
     ``estimates``) as a Chrome-trace dict; see the module docstring for
     the track layout.  ``tenants`` (the ``simulate`` inputs) add the
     predicted compute phases, start offsets and per-round replication —
-    without them each estimate renders once at t=0."""
+    without them each estimate renders once at t=0.
+
+    Fleet-scale hygiene: above ``max_tracks`` tenants, only the first
+    ``max_tracks`` (sorted by name) get their own thread rows; the rest
+    collapse into shared ``fleet +K`` threads (greedy interval
+    partitioning, at most ``fleet_lanes`` of them — events that do not
+    fit are counted in the last thread's name rather than rendered) plus
+    one ``active tenants`` counter track, so a 1000-session serving sim
+    stays loadable and readable in Perfetto instead of producing
+    thousands of rows.  Predicted tracks render for the shown tenants
+    only."""
     events: List[dict] = []
     events.append(_meta(PID_SIM, None, "sim"))
     tenant_cfg: Dict[str, Tenant] = {t.name: t for t in (tenants or ())}
+    names = sorted(result.finish)
+    shown = names if len(names) <= max_tracks else names[:max_tracks]
+    shown_set = set(shown)
+    rest = names[len(shown):]
 
     # --- pid 1: simulated per-tenant tracks --------------------------------
     tid = 0
-    for name in sorted(result.finish):
+    for name in shown:
         evs = result.tenant_events(name)
         main = [e for e in evs if e.lanes <= 0]
         slow = [(e.start, e.finish, e) for e in evs if e.lanes > 0]
@@ -108,10 +124,50 @@ def to_chrome_trace(result: SimResult,
                                  chunk=e.chunk, lanes=round(e.lanes, 6)))
             tid += 1
 
+    # --- pid 1 tail: collapsed fleet threads + active-tenant counter -------
+    if rest:
+        rest_set = set(rest)
+        rest_ev = [(e.start, e.finish, e) for e in result.events
+                   if e.tenant in rest_set]
+        lanes = _partition_lanes(rest_ev)
+        elided = sum(len(lane) for lane in lanes[fleet_lanes:])
+        for k, lane in enumerate(lanes[:fleet_lanes]):
+            label = f"fleet +{len(rest)}·{k + 1}"
+            if elided and k == min(len(lanes), fleet_lanes) - 1:
+                label += f" ({elided} events elided)"
+            events.append(_meta(PID_SIM, tid, label))
+            for e in lane:
+                events.append(_x(PID_SIM, tid,
+                                 f"{e.tenant}:{leg_label(e.leg)}",
+                                 e.start, e.finish, "sim", round=e.round,
+                                 chunk=e.chunk, lanes=round(e.lanes, 6)))
+            tid += 1
+        # concurrently-busy tenant count over ALL tenants: the fleet's
+        # admission/occupancy curve, readable at any scale
+        marks: List[Tuple[float, int]] = []
+        span: Dict[str, Tuple[float, float]] = {}
+        for e in result.events:
+            s, f = span.get(e.tenant, (e.start, e.finish))
+            span[e.tenant] = (min(s, e.start), max(f, e.finish))
+        for s, f in span.values():
+            marks.append((s, 1))
+            marks.append((f, -1))
+        marks.sort()
+        events.append(_meta(PID_SIM, tid, "active tenants"))
+        level = 0
+        for t, d in marks:
+            level += d
+            events.append({"ph": "C", "pid": PID_SIM, "tid": tid,
+                           "name": "active tenants", "ts": t * _US,
+                           "args": {"tenants": level}})
+        tid += 1
+
     # --- pid 2: predicted tracks -------------------------------------------
     if estimates:
         events.append(_meta(PID_PREDICTED, None, "predicted"))
         for name in sorted(estimates):
+            if name not in shown_set:
+                continue
             est = estimates[name]
             if est is None:
                 continue

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,24 +21,51 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.registry import Model
 from repro.obs.metrics import MetricsLogger
 from repro.runtime.train_loop import mesh_info
+from repro.utils.stats import percentile
 
 
 @dataclass
 class Request:
+    """One serving request.  ``priority`` is the admission weight (used
+    by :func:`priority_admission`; plain FIFO ignores it).  The server
+    fills the timing fields: ``submit_t`` at :meth:`DecodeServer.submit`,
+    ``ttft_s`` when the first token lands (queueing included), and
+    ``token_s`` with one inter-token interval per generated token (the
+    first entry IS the TTFT)."""
+
     uid: int
     prompt: np.ndarray  # (P,) int32
     max_new: int = 32
+    priority: float = 1.0
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    submit_t: float = 0.0
+    ttft_s: Optional[float] = None
+    token_s: List[float] = field(default_factory=list)
+
+
+def fifo_admission(queue: List[Request]) -> int:
+    """The default admission policy: first come, first served."""
+    return 0
+
+
+def priority_admission(queue: List[Request]) -> int:
+    """Admit the highest-priority queued request; FIFO among equals —
+    the runtime twin of the fleet simulator's SLO lanes."""
+    return max(range(len(queue)), key=lambda i: (queue[i].priority, -i))
 
 
 class DecodeServer:
     def __init__(self, model: Model, mesh: Mesh, *, batch_slots: int = 4,
                  max_seq: int = 128, temperature: float = 0.0, seed: int = 0,
-                 metrics: Optional[MetricsLogger] = None):
+                 metrics: Optional[MetricsLogger] = None,
+                 admission: Optional[Callable[[List[Request]], int]] = None):
         self.model, self.mesh = model, mesh
         # silent by default: serving stats were never printed before
         self.metrics = metrics or MetricsLogger(echo=False, run="serve")
+        # admission picks WHICH queued request takes a freed slot (an
+        # index into the queue); FIFO unless told otherwise
+        self.admission = admission or fifo_admission
         self.B, self.S = batch_slots, max_seq
         self.temperature = temperature
         self.key = jax.random.key(seed)
@@ -54,19 +81,28 @@ class DecodeServer:
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.all_requests: List[Request] = []
         self.stats = {"tokens": 0, "steps": 0, "wall": 0.0}
+        self._last_emit: Dict[int, float] = {}  # uid -> last token wall time
 
     # ---- admission --------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        req.submit_t = time.perf_counter()
         self.queue.append(req)
         self.all_requests.append(req)
 
     def _admit(self, cache, tokens, pos: int):
         """Fill empty slots from the queue (prompts prefilled token-by-token
         into the shared lock-step cache — slots share a position counter,
-        so prompts are left-padded to the current position)."""
+        so prompts are left-padded to the current position).  The
+        ``admission`` policy picks which queued request each freed slot
+        takes."""
         for b in range(self.B):
             if self.active[b] is None and self.queue:
-                req = self.queue.pop(0)
+                i = int(self.admission(self.queue))
+                if not 0 <= i < len(self.queue):
+                    raise ValueError(
+                        f"admission policy returned index {i} for a queue "
+                        f"of {len(self.queue)}")
+                req = self.queue.pop(i)
                 self.active[b] = req
                 # place prompt so that its last token is at `pos`
                 Pn = len(req.prompt)
@@ -94,25 +130,53 @@ class DecodeServer:
             else:
                 nxt = jnp.argmax(logits, axis=-1)
             nxt_np = np.asarray(nxt)
+            now = time.perf_counter()
             self.stats["steps"] += 1
             self.metrics.inc("decode_steps")
             for b, req in enumerate(self.active):
                 if req is None:
                     continue
                 req.generated.append(int(nxt_np[b]))
+                # per-token latency; the first interval (measured from
+                # submit, queueing included) is the request's TTFT
+                last = self._last_emit.get(req.uid, req.submit_t)
+                req.token_s.append(now - last)
+                self._last_emit[req.uid] = now
+                if req.ttft_s is None:
+                    req.ttft_s = now - req.submit_t
+                    self.metrics.log("first_token", uid=req.uid,
+                                     ttft_s=req.ttft_s)
                 self.stats["tokens"] += 1
                 self.metrics.inc("tokens")
                 if len(req.generated) >= req.max_new:
                     req.done = True
                     self.active[b] = None
                     self.metrics.log("request_done", uid=req.uid,
-                                     generated=len(req.generated))
+                                     generated=len(req.generated),
+                                     ttft_s=req.ttft_s,
+                                     tpot_s=sum(req.token_s[1:])
+                                     / max(len(req.token_s) - 1, 1))
             tokens = nxt[:, None].astype(jnp.int32)
             tokens = self._admit(cache, tokens, pos + 1)
         self.stats["wall"] = time.perf_counter() - t0
         self.metrics.gauge("tokens_per_s", self.throughput())
-        self.metrics.log("serve_run", **self.stats)
+        self.metrics.log("serve_run", **self.stats, **self.latency_summary())
         return {r.uid: r.generated for r in self.all_requests}
+
+    def latency_summary(self) -> Dict[str, float]:
+        """p50/p99 TTFT and per-token latency over every request that
+        produced tokens (truncated requests included — their tail
+        matters most); empty when nothing decoded."""
+        ttfts = [r.ttft_s for r in self.all_requests if r.ttft_s is not None]
+        tpots = [s for r in self.all_requests for s in r.token_s[1:]]
+        out: Dict[str, float] = {}
+        if ttfts:
+            out["ttft_p50_s"] = percentile(ttfts, 50)
+            out["ttft_p99_s"] = percentile(ttfts, 99)
+        if tpots:
+            out["tpot_p50_s"] = percentile(tpots, 50)
+            out["tpot_p99_s"] = percentile(tpots, 99)
+        return out
 
     def throughput(self) -> float:
         return self.stats["tokens"] / max(self.stats["wall"], 1e-9)

@@ -125,7 +125,17 @@ class Tenant:
     is the memory bandwidth (B/s, the tenant's aggregate) a compute
     phase draws from the LOCAL channels of a modeled memory pool; 0
     keeps compute phases pure time (always so when memory is
-    unmodeled)."""
+    unmodeled).
+
+    ``after`` names another tenant this one must WAIT for: the tenant
+    becomes startable only once every task of the named tenant has
+    completed (its effective start is ``max(start, predecessor
+    finish)``).  This is how the serving fleet expresses phase and
+    admission dependencies — a session's decode tenant runs ``after``
+    its prefill tenant, and a queued session's prefill runs ``after``
+    the previous occupant of its batch slot — so queueing delay is
+    SIMULATED through the pools instead of estimated.  ``None`` (the
+    default) keeps the pre-fleet semantics bit for bit."""
 
     name: str
     schedule: Optional[CommSchedule]
@@ -136,6 +146,7 @@ class Tenant:
     max_lanes: Optional[float] = None
     pin_lanes: bool = False
     compute_mem_bw: float = 0.0
+    after: Optional[str] = None
 
 
 @dataclass(frozen=True)
@@ -185,17 +196,32 @@ class SimResult:
         ``mem`` attached with an empty trace — see ``simulate``)."""
         return self.mem.peak_bw() if self.mem is not None else 0.0
 
-    def describe(self) -> str:
+    def describe(self, max_tenants: int = 32) -> str:
         """Human-readable timeline summary, mirroring
         ``CommSchedule.describe``: makespan and pool peaks, then each
-        tenant's finish and per-leg [start, finish] intervals (µs)."""
+        tenant's finish and per-leg [start, finish] intervals (µs).
+
+        Fleet-scale hygiene: above ``max_tenants`` tenants (sorted by
+        name) the per-leg detail is elided into ONE aggregate line —
+        finish-time p50/p99/max over the elided tenants — so a
+        1000-session serving sim stays a screenful instead of a
+        megabyte.  ``max_tenants=0`` elides everything but the totals."""
+        from repro.utils.stats import percentile
         lines = [f"SimResult: makespan {self.makespan * 1e6:.2f} us, "
                  f"{len(self.events)} events, "
+                 f"{len(self.finish)} tenants, "
                  f"peak lanes {self.peak_pool_lanes:.2f}, "
                  f"peak mem bw {self.peak_mem_bw / 1e9:.2f} GB/s"]
-        for name in sorted(self.finish):
+        names = sorted(self.finish)
+        shown = names if len(names) <= max_tenants else names[:max_tenants]
+        by_tenant: Dict[str, List[LegEvent]] = {n: [] for n in shown}
+        if shown:
+            for e in self.events:
+                if e.tenant in by_tenant:
+                    by_tenant[e.tenant].append(e)
+        for name in shown:
             lines.append(f"  {name}: finish {self.finish[name] * 1e6:.2f} us")
-            for e in self.tenant_events(name):
+            for e in by_tenant[name]:
                 tags = []
                 if e.round:
                     tags.append(f"r{e.round}")
@@ -205,6 +231,16 @@ class SimResult:
                 lines.append(
                     f"    [{e.start * 1e6:>10.2f} -> {e.finish * 1e6:>10.2f}]"
                     f" us {leg_label(e.leg)}{tag}")
+        rest = names[len(shown):]
+        if rest:
+            restset = set(rest)
+            n_ev = sum(1 for e in self.events if e.tenant in restset)
+            fins = [self.finish[n] for n in rest]
+            lines.append(
+                f"  ... {len(rest)} more tenants ({n_ev} events) elided: "
+                f"finish p50 {percentile(fins, 50) * 1e6:.2f} us, "
+                f"p99 {percentile(fins, 99) * 1e6:.2f} us, "
+                f"max {max(fins) * 1e6:.2f} us")
         return "\n".join(lines)
 
 
@@ -551,6 +587,31 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
     names = [tn.name for tn in tenants]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate tenant names: {names}")
+    idx_of = {tn.name: i for i, tn in enumerate(tenants)}
+    for tn in tenants:
+        if tn.after is None:
+            continue
+        if tn.after not in idx_of:
+            raise ValueError(
+                f"tenant {tn.name!r} waits after unknown tenant "
+                f"{tn.after!r}")
+        seen = {tn.name}
+        cur: Optional[str] = tn.after
+        while cur is not None:
+            if cur in seen:
+                raise ValueError(
+                    f"after-chain cycle through tenant {cur!r}")
+            seen.add(cur)
+            cur = tenants[idx_of[cur]].after
+
+    # open tasks per tenant: lets the start pass skip finished tenants
+    # and gates `after` successors (0 = the predecessor has fully drained)
+    remaining = [len(p) for p in progs]
+    # per-tenant WAITING task indices in program order: the start pass
+    # walks only these instead of rescanning the whole program — at
+    # fleet scale (hundreds of decode tenants x hundreds of rounds) the
+    # full rescan is O(total tasks) per event and dominates the run
+    waiting: List[List[int]] = [list(range(len(p))) for p in progs]
 
     engine_task: List[Optional[int]] = [None] * len(tenants)  # running local
     pools = {"eth": pool, **path_pools}  # lane group name -> arbiter
@@ -588,6 +649,7 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         task = progs[ti][idx]
         task.state = "done"
         task.finish = now
+        remaining[ti] -= 1
         events.append(LegEvent(tenants[ti].name, task.legs[0][0],
                                task.start, now, task.nic_lanes,
                                task.round, task.chunk))
@@ -597,6 +659,7 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         task = progs[ti][idx]
         task.state = "done"
         task.finish = now
+        remaining[ti] -= 1
         emit_local(tenants[ti], task)
         finish[tenants[ti].name] = max(finish[tenants[ti].name], now)
         engine_task[ti] = None
@@ -610,13 +673,24 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
             raise RuntimeError("fabric_sim event-loop guard tripped")
         # ---- start everything startable at time t --------------------------
         for ti, (tn, prog) in enumerate(zip(tenants, progs)):
-            if t + _EPS < tn.start:
+            if remaining[ti] == 0 or t + _EPS < tn.start:
                 continue
-            # submit ready pool flows (FIFO order within the tenant is
-            # enforced by deps, so submission order is free)
-            for idx, task in enumerate(prog):
-                if task.kind == "pool" and task.state == "waiting" \
-                        and deps_done(ti, task):
+            if tn.after is not None and remaining[idx_of[tn.after]] > 0:
+                continue  # predecessor still draining (fleet chaining)
+            # one pass over the WAITING tasks, in program order: ready
+            # pool flows submit (FIFO order within the tenant is enforced
+            # by deps, so submission order is free); the serial fast
+            # engine takes only the FIRST waiting local task — a blocked
+            # first local blocks every later one (in-order engine)
+            engine_free = engine_task[ti] is None
+            local_seen = False
+            still: List[int] = []
+            for idx in waiting[ti]:
+                task = prog[idx]
+                if task.kind == "pool":
+                    if not deps_done(ti, task):
+                        still.append(idx)
+                        continue
                     task.state = "running"
                     task.start = t
                     share = task.lane_share
@@ -637,19 +711,20 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                         lane=task.lane, tag=task.legs[0][0]), t)
                     flows[(task.path, task.flow_id)] = (ti, idx)
                     submit_mem(ti, idx, task, t)
-            # the serial fast engine: first waiting local task, in order
-            if engine_task[ti] is None:
-                for idx, task in enumerate(prog):
-                    if task.kind == "local" and task.state == "waiting":
-                        if deps_done(ti, task):
-                            task.state = "running"
-                            task.start = t
-                            task.finish = t + task.dur
-                            engine_task[ti] = idx
-                            submit_mem(ti, idx, task, t)
-                        break  # in-order engine: don't skip ahead
+                else:
+                    if not local_seen and engine_free \
+                            and deps_done(ti, task):
+                        task.state = "running"
+                        task.start = t
+                        task.finish = t + task.dur
+                        engine_task[ti] = idx
+                        submit_mem(ti, idx, task, t)
+                    else:
+                        still.append(idx)
+                    local_seen = True  # don't skip ahead past it
+            waiting[ti] = still
         # ---- done? ---------------------------------------------------------
-        if all(task.state == "done" for prog in progs for task in prog):
+        if all(r == 0 for r in remaining):
             break
         # ---- next event ----------------------------------------------------
         t_next = math.inf

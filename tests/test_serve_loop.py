@@ -11,7 +11,8 @@ import pytest
 
 from repro.configs import get_smoke_arch
 from repro.models import ModelSettings, build_model
-from repro.runtime.serve_loop import DecodeServer, Request
+from repro.runtime.serve_loop import (DecodeServer, Request,
+                                      priority_admission)
 from repro.utils.jax_compat import make_mesh
 
 
@@ -75,3 +76,96 @@ def test_empty_queue_is_a_noop(model, params):
     server = DecodeServer(model, _mesh(), batch_slots=2, max_seq=32)
     outs = server.run(params, max_steps=8)
     assert outs == {} and server.stats["steps"] == 0
+
+
+def test_queue_much_longer_than_slots(model, params):
+    """6 requests through 1 slot: every wave drains fully, slot reuse
+    preserves FIFO order (uid i finishes before uid i+1), and the loop
+    never decodes an empty batch."""
+    server = DecodeServer(model, _mesh(), batch_slots=1, max_seq=32)
+    for i in range(6):
+        server.submit(Request(uid=i, prompt=np.array([1 + i], np.int32),
+                              max_new=2))
+    outs = server.run(params, max_steps=31)
+    assert all(len(outs[i]) == 2 for i in range(6))
+    # serial slot: completion order == submission order
+    finishes = [r.ttft_s for r in server.all_requests]
+    assert finishes == sorted(finishes)
+    assert server.stats["tokens"] == 12
+    assert server.stats["steps"] == 12  # one occupied slot per step
+
+
+def test_multiple_requests_finish_same_step(model, params):
+    """Two same-length requests admitted together finish on the SAME
+    step; both slots free at once and the next wave refills both."""
+    server = DecodeServer(model, _mesh(), batch_slots=2, max_seq=32)
+    for i in range(4):
+        server.submit(Request(uid=i, prompt=np.array([2 + i], np.int32),
+                              max_new=3))
+    outs = server.run(params, max_steps=30)
+    assert all(len(outs[i]) == 3 for i in range(4))
+    assert all(r.done for r in server.all_requests)
+    # wave 1 (uids 0,1) finishes in lock-step, then wave 2 (uids 2,3)
+    assert server.stats["steps"] == 6
+    assert server.stats["tokens"] == 12
+
+
+def test_max_seq_truncates_long_request(model, params):
+    """A request asking for more tokens than the cache holds is
+    truncated at max_seq-1 steps, stays not-done, and its tokens still
+    count in the latency summary (truncated tails matter most)."""
+    server = DecodeServer(model, _mesh(), batch_slots=1, max_seq=8)
+    server.submit(Request(uid=0, prompt=np.array([5], np.int32),
+                          max_new=100))
+    outs = server.run(params, max_steps=50)
+    assert len(outs[0]) == 7  # max_seq - 1
+    assert not server.all_requests[0].done
+    lat = server.latency_summary()
+    assert lat["ttft_p50_s"] > 0 and lat["tpot_p50_s"] > 0
+
+
+def test_priority_admission_reorders_queue(model, params):
+    """priority_admission admits the heaviest queued request first and
+    stays FIFO among equals — the runtime twin of the fleet's SLO
+    lanes."""
+    server = DecodeServer(model, _mesh(), batch_slots=1, max_seq=32,
+                          admission=priority_admission)
+    server.submit(Request(uid=0, prompt=np.array([1], np.int32),
+                          max_new=2, priority=1.0))
+    server.submit(Request(uid=1, prompt=np.array([2], np.int32),
+                          max_new=2, priority=1.0))
+    server.submit(Request(uid=2, prompt=np.array([3], np.int32),
+                          max_new=2, priority=5.0))
+    server.run(params, max_steps=31)
+    by_uid = {r.uid: r.ttft_s for r in server.all_requests}
+    assert by_uid[2] < by_uid[0] < by_uid[1]
+
+
+def test_bad_admission_index_raises(model, params):
+    server = DecodeServer(model, _mesh(), batch_slots=1, max_seq=32,
+                          admission=lambda q: len(q))
+    server.submit(Request(uid=0, prompt=np.array([1], np.int32), max_new=1))
+    with pytest.raises(ValueError, match="admission policy"):
+        server.run(params, max_steps=4)
+
+
+def test_ttft_and_token_latency_accounting(model, params):
+    """ttft_s is the first token_s entry (queueing included), every
+    generated token has an interval, and the summary exposes p50/p99
+    for both TTFT and per-token latency."""
+    server = DecodeServer(model, _mesh(), batch_slots=2, max_seq=32)
+    for i in range(3):
+        server.submit(Request(uid=i, prompt=np.array([1 + i], np.int32),
+                              max_new=4))
+    server.run(params, max_steps=30)
+    for r in server.all_requests:
+        assert r.ttft_s == pytest.approx(r.token_s[0])
+        assert len(r.token_s) == len(r.generated)
+        assert all(s >= 0 for s in r.token_s)
+    lat = server.latency_summary()
+    assert set(lat) == {"ttft_p50_s", "ttft_p99_s",
+                        "tpot_p50_s", "tpot_p99_s"}
+    assert lat["ttft_p50_s"] <= lat["ttft_p99_s"]
+    # the queued request's TTFT includes its wait for a free slot
+    assert max(r.ttft_s for r in server.all_requests) == \
+        server.all_requests[2].ttft_s

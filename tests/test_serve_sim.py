@@ -1,0 +1,297 @@
+"""Serving fleet simulator tests (PR 9 tentpole).
+
+Three contract families:
+
+  * **workload** — the open-loop generator is seed-reproducible bit for
+    bit, validates its knobs, and the trace-driven path produces the
+    same Session shape;
+  * **fleet parity** — ONE uncontended session's simulated makespan
+    equals its solo price (exact sequential, < 1% pipelined, exact MoE),
+    and the `after` chains (decode-after-prefill, slot admission) are
+    honoured by the event loop rather than estimated;
+  * **fleet behaviour** — SLO-priority lanes cut the interactive tail at
+    θ-way contention vs the equal-weight baseline on the SAME workload,
+    KV staging falls back to the pool when the footprint outgrows the
+    local budget, and fleet-scale describe()/trace output stays bounded.
+"""
+import json
+
+import pytest
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import MemPoolSpec
+from repro.core.topology import FabricSpec, HardwareSpec, Tier
+from repro.obs.trace import to_chrome_trace
+from repro.serve_sim import (DEFAULT_SLO_CLASSES, FleetConfig, Session,
+                             SLOClass, WorkloadConfig, generate_sessions,
+                             load_trace, plan_fleet, sessions_from_trace,
+                             simulate_fleet, solo_estimate_s)
+from repro.sim.fabric_sim import Tenant, simulate
+
+
+def _fab(mem=False, lanes=1.0):
+    hw = HardwareSpec()
+    tiers = (Tier("ici", "data", 4, hw.ici_bw, hw.ici_latency),
+             Tier("dcn", "pod", 2, hw.dcn_bw, hw.dcn_latency, lanes=lanes))
+    spec = FabricSpec(tiers=tiers, hw=hw)
+    if mem:
+        spec = spec.with_mem(MemPoolSpec.build(
+            local_bw=100e9, local_channels=2, device_bw=25e9, devices=4,
+            device_latency=2e-6))
+    return spec
+
+
+INTERACTIVE, BATCH = DEFAULT_SLO_CLASSES
+
+
+# ---------------------------------------------------------------------------
+# Workload generation
+# ---------------------------------------------------------------------------
+
+
+def test_generate_sessions_seed_reproducible():
+    cfg = WorkloadConfig(rate=100.0, sessions=40, seed=7, moe_frac=0.3)
+    a = generate_sessions(cfg)
+    b = generate_sessions(cfg)
+    assert a == b
+    c = generate_sessions(WorkloadConfig(rate=100.0, sessions=40, seed=8,
+                                         moe_frac=0.3))
+    assert a != c
+    # arrivals strictly increase (open-loop clock), token counts clamped
+    assert all(x.arrival < y.arrival for x, y in zip(a, a[1:]))
+    assert all(1 <= s.prompt_tokens <= cfg.prompt_max_tokens for s in a)
+    assert all(1 <= s.output_tokens <= cfg.output_max_tokens for s in a)
+    kinds = {s.kind for s in a}
+    assert kinds <= {"dense", "moe"}
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="priority"):
+        SLOClass("bad", priority=0.0)
+    with pytest.raises(ValueError, match="token"):
+        Session(0, 0.0, 0, 4, INTERACTIVE)
+    with pytest.raises(ValueError, match="dense|moe"):
+        Session(0, 0.0, 4, 4, INTERACTIVE, kind="sparse")
+    with pytest.raises(ValueError, match="rate"):
+        WorkloadConfig(rate=0.0)
+    with pytest.raises(ValueError, match="moe_frac"):
+        WorkloadConfig(moe_frac=1.5)
+    with pytest.raises(ValueError, match="unknown class"):
+        generate_sessions(WorkloadConfig(slo_mix=(("gold", 1.0),)))
+
+
+def test_trace_driven_sessions(tmp_path):
+    rows = [
+        {"arrival_s": 2e-3, "prompt_tokens": 64, "output_tokens": 4,
+         "slo": "batch", "kind": "moe"},
+        {"arrival_s": 1e-3, "prompt_tokens": 32, "output_tokens": 8},
+    ]
+    ss = sessions_from_trace(rows)
+    # sorted by arrival, uids = sorted positions, defaults filled
+    assert [s.arrival for s in ss] == [1e-3, 2e-3]
+    assert ss[0].slo is INTERACTIVE and ss[0].kind == "dense"
+    assert ss[1].slo is BATCH and ss[1].kind == "moe"
+    p = tmp_path / "trace.jsonl"
+    p.write_text("# recorded arrivals\n\n" +
+                 "\n".join(json.dumps(r) for r in rows) + "\n")
+    assert load_trace(str(p)) == ss
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        sessions_from_trace([{"arrival_s": 0.0, "prompt_tokens": 1,
+                              "output_tokens": 1, "slo": "gold"}])
+
+
+# ---------------------------------------------------------------------------
+# Solo parity: the fleet's sim==price anchor
+# ---------------------------------------------------------------------------
+
+
+def _solo_rel(fab, cfg, kind="dense"):
+    s = Session(0, 0.0, 300, 5, INTERACTIVE, kind=kind)
+    fr = simulate_fleet(fab, [s], cfg)
+    assert fr.plans[0].solo_s == pytest.approx(
+        solo_estimate_s(s, cfg, fab, fr.plans[0].prefill_est,
+                        fr.plans[0].decode_est))
+    return abs(fr.makespan - fr.plans[0].solo_s) / fr.plans[0].solo_s
+
+
+def test_solo_sequential_parity_exact():
+    assert _solo_rel(_fab(), FleetConfig(chunks=1, pipeline=False)) <= 1e-9
+
+
+def test_solo_pipelined_parity_under_1pct():
+    assert _solo_rel(_fab(), FleetConfig(chunks=4, pipeline=True)) < 1e-2
+
+
+def test_solo_moe_parity_exact():
+    assert _solo_rel(_fab(), FleetConfig(chunks=1, pipeline=False),
+                     kind="moe") <= 1e-9
+
+
+def test_solo_parity_with_mem_and_kv_reads():
+    # staging + KV-read stretch are both in the solo price, so parity
+    # must survive an attached memory pool
+    cfg = FleetConfig(chunks=1, pipeline=False, kv_read_bw=50e9)
+    assert _solo_rel(_fab(mem=True), cfg) <= 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Phases, admission, and the after chains
+# ---------------------------------------------------------------------------
+
+
+def test_decode_runs_after_prefill():
+    fab = _fab()
+    s = Session(0, 0.0, 200, 6, INTERACTIVE)
+    fr = simulate_fleet(fab, [s], FleetConfig(chunks=1, pipeline=False))
+    p = fr.plans[0]
+    assert p.decode.after == p.prefill.name
+    m = fr.sessions[0]
+    assert m.prefill_done <= m.finish
+    first_decode = min(e.start for e in fr.sim.tenant_events(p.decode.name))
+    assert first_decode >= m.prefill_done - 1e-12
+    assert 0 < m.ttft_s <= m.latency_s
+    assert m.tpot_s > 0
+
+
+def test_slot_capacity_queues_second_session():
+    # slots=1: the 2nd session's prefill must chain after the 1st's
+    # decode even though both arrive immediately; with plenty of slots
+    # the same workload finishes strictly sooner
+    fab = _fab()
+    ss = [Session(0, 0.0, 400, 8, BATCH),
+          Session(1, 1e-6, 400, 8, BATCH)]
+    cfg1 = FleetConfig(slots=1, chunks=1, pipeline=False)
+    fr1 = simulate_fleet(fab, ss, cfg1)
+    assert fr1.plans[1].queued_after == fr1.plans[0].decode.name
+    assert fr1.plans[1].prefill.after == fr1.plans[0].decode.name
+    start2 = min(e.start
+                 for e in fr1.sim.tenant_events(fr1.plans[1].prefill.name))
+    assert start2 >= fr1.sessions[0].finish - 1e-12
+    fr2 = simulate_fleet(fab, ss, FleetConfig(slots=2, chunks=1,
+                                              pipeline=False))
+    assert fr2.makespan < fr1.makespan
+    assert fr2.plans[1].queued_after is None
+
+
+def test_after_validation_and_cycles():
+    fab = _fab()
+    sched = plan_fleet(fab, [Session(0, 0.0, 64, 1, BATCH)])[0].prefill
+    with pytest.raises(ValueError, match="unknown tenant"):
+        simulate(fab, [Tenant("a", sched.schedule, after="ghost")])
+    with pytest.raises(ValueError, match="cycle"):
+        simulate(fab, [Tenant("a", sched.schedule, after="b"),
+                       Tenant("b", sched.schedule, after="a")])
+
+
+# ---------------------------------------------------------------------------
+# KV staging
+# ---------------------------------------------------------------------------
+
+
+def test_kv_staging_forced_to_pool_over_budget():
+    fab = _fab(mem=True)
+    cfg = FleetConfig(kv_bytes_per_token=1024.0,
+                      kv_local_budget_bytes=100e3)
+    big = Session(0, 0.0, 2000, 50, BATCH)   # 2.1 MB KV > 100 kB budget
+    small = Session(1, 1e-3, 20, 5, BATCH)   # 25.6 kB fits
+    plans = plan_fleet(fab, [big, small], cfg)
+    assert plans[0].staging == "pool"
+    assert plans[1].staging in ("local", "pool")  # priced, not forced
+    # without a memory pool there is nothing to stage
+    assert plan_fleet(_fab(), [big], cfg)[0].staging is None
+
+
+# ---------------------------------------------------------------------------
+# SLO-priority lanes at θ-way contention
+# ---------------------------------------------------------------------------
+
+
+def test_priority_lanes_cut_interactive_tail():
+    hw = HardwareSpec()
+    mem = MemPoolSpec.build(local_bw=100e9, local_channels=2,
+                            device_bw=25e9, devices=4, device_latency=2e-6)
+    fab = FabricSpec(tiers=(
+        Tier("ici", "data", 4, hw.ici_bw, hw.ici_latency),
+        Tier("cxl", "host", 2, hw.cxl_bw, hw.cxl_latency),
+        Tier("dcn", "pod", 4, hw.dcn_bw, hw.dcn_latency, lanes=2.0),
+    ), hw=hw, mem=mem)
+    wl = WorkloadConfig(rate=3000.0, sessions=16, seed=3, moe_frac=0.25,
+                        prompt_mean_tokens=512.0, output_mean_tokens=24.0)
+    sessions = generate_sessions(wl)
+    kw = dict(slots=8, pool_lanes=4.0, bytes_per_token=16384.0,
+              decode_sync_bytes=65536.0, step_compute_s=10e-6,
+              kv_read_bw=20e9)
+    base = simulate_fleet(fab, sessions, FleetConfig(priority_lanes=False,
+                                                     **kw))
+    prio = simulate_fleet(fab, sessions, FleetConfig(priority_lanes=True,
+                                                     **kw))
+    assert prio.latency_pct(99, "interactive") \
+        < base.latency_pct(99, "interactive")
+    assert prio.goodput_tok_s > base.goodput_tok_s
+    # the priority run actually carried the 4:1 weights onto the tenants
+    pr = {p.prefill.priority for p in prio.plans}
+    assert pr == {1.0, 4.0}
+    assert {p.prefill.priority for p in base.plans} == {1.0}
+    # describe() names both classes with their tails
+    text = prio.describe()
+    assert "interactive" in text and "batch" in text and "p99" in text
+
+
+# ---------------------------------------------------------------------------
+# Fleet-scale output hygiene
+# ---------------------------------------------------------------------------
+
+
+def _many_tenant_result(n):
+    fab = _fab()
+    sched = plan_fleet(fab, [Session(0, 0.0, 64, 1, BATCH)],
+                       FleetConfig(chunks=1, pipeline=False))[0].prefill
+    tenants = [Tenant(f"t{i:04d}", sched.schedule) for i in range(n)]
+    return simulate(fab, tenants, cost=CostModel(fab))
+
+
+def test_describe_elides_above_max_tenants():
+    res = _many_tenant_result(40)
+    text = res.describe(max_tenants=8)
+    assert "... 32 more tenants" in text and "p99" in text
+    # elision bounds the output: full detail would name every tenant
+    assert "t0039" not in text
+    assert len(res.describe(max_tenants=0).splitlines()) == 2
+    full = res.describe(max_tenants=40)
+    assert "t0039: finish" in full and "elided" not in full
+
+
+def test_chrome_trace_collapses_fleet_tenants():
+    res = _many_tenant_result(40)
+    trace = to_chrome_trace(res, max_tracks=8, fleet_lanes=4)
+    names = {e["args"]["name"] for e in trace["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    fleet = {n for n in names if n.startswith("fleet +32")}
+    assert fleet and len(fleet) <= 4
+    # events beyond the shared lanes are counted, not silently dropped
+    assert any("events elided" in n for n in fleet)
+    # collapsed events carry their tenant in the label
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    collapsed = [e for e in xs if ":" in e["name"]]
+    assert collapsed
+    assert all(e["name"].split(":")[0].startswith("t") for e in collapsed)
+    # the shown tenants keep their own thread rows
+    assert "t0000" in names
+    # the active-tenants counter tracks fleet occupancy
+    cs = [e for e in trace["traceEvents"]
+          if e["ph"] == "C" and e["name"] == "active tenants"]
+    assert cs and max(v for e in cs for v in e["args"].values()) == 40
+    # the final counter sample (ties share a ts; last write wins) is zero
+    assert list(cs[-1]["args"].values()) == [0]
+
+
+def test_fleet_metrics_sorted_and_goodput_counts_met_only():
+    fab = _fab()
+    wl = WorkloadConfig(rate=500.0, sessions=6, seed=1)
+    fr = simulate_fleet(fab, generate_sessions(wl),
+                        FleetConfig(slots=2, chunks=1, pipeline=False))
+    assert [m.uid for m in fr.sessions] == list(range(6))
+    met_tokens = sum(m.output_tokens for m in fr.sessions if m.met)
+    assert fr.goodput_tok_s == pytest.approx(met_tokens / fr.makespan)
+    assert all(m.met == (m.finish <= m.deadline_s + 1e-12)
+               for m in fr.sessions)

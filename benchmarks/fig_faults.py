@@ -1,0 +1,179 @@
+"""Beyond-paper figure: fault injection + elastic replanning.
+
+A degraded fabric is the scaling-out story's other half: DFabric's
+pooled NICs and CXL expanders are SHARED infrastructure, so one dead
+lane or expander degrades every CN at once.  This figure injects
+``FailureEvent``s into the simulator mid-run and measures three train
+scenarios and one serving scenario:
+
+  * **train/lane_down** — a solo all-reduce stream loses most of the
+    Ethernet pool mid-run (``lane_down``); the arbiter re-waterfills the
+    survivors at the next event boundary and the makespan stretches.
+    The audit judges the run under the ``degraded`` contract class
+    (pre-failure-capacity price <= sim <= post-failure max-min
+    guarantee price).
+  * **train/replanned** — ``Planner.replan`` re-searches the SAME
+    shapes on ``FabricSpec.degrade``'s output: with a declared CXL
+    shortcut the winner shifts its ``path_split`` onto the surviving
+    route (the ``PlanDiff`` names the flip), and replaying the
+    replanned schedule through the SAME failure recovers most of the
+    degradation — asserted strictly faster than the un-replanned run.
+  * **mem/device_down** — a CXL expander dies mid-run under a
+    pool-staged stream; ``MemPool.drop_device`` re-stripes surviving
+    flows over the remaining devices and the makespan stretches.
+  * **serve/** — an open-loop fleet (``simulate_fleet``) loses 3 of 4
+    rack pool lanes early; goodput collapses, and replanned schedules
+    (``FleetConfig.prefill_path_split`` onto the CXL shortcut) recover
+    a asserted-positive fraction of it.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.cost_model import CostModel
+from repro.core.mempool import MemPoolSpec
+from repro.core.nicpool import NicPool
+from repro.core.planner import Planner
+from repro.core.schedule import SyncConfig, build_schedule
+from repro.core.topology import (as_fabric, cxl_shortcut_path,
+                                 paper_prototype_topology,
+                                 three_tier_fabric)
+from repro.serve_sim import WorkloadConfig, generate_sessions, simulate_fleet
+from repro.sim.fabric_sim import Tenant, device_down, lane_down, simulate
+
+NBYTES = 32 * 2**20
+# big enough that the healthy planner SPLITS the slow sub-flows across
+# eth and the cxl shortcut (below ~4 MiB latency dominates and the
+# winner is all-cxl, so an eth lane death would not bind)
+SMOKE_NBYTES = 4 * 2**20
+ROUNDS = 4
+
+
+def _train_rows(smoke: bool):
+    nbytes = SMOKE_NBYTES if smoke else NBYTES
+    numel = nbytes // 4
+    # three tiers with BOTH slow routes in play: on this fabric the
+    # healthy planner splits the slow sub-flows across eth and the cxl
+    # shortcut, so an eth lane death binds and a replan can reroute
+    fab = three_tier_fabric(num_pods=2, hosts_per_pod=2,
+                            chips_per_host=2) \
+        .with_paths(cxl_shortcut_path(lanes=2.0))
+    shapes = {"w": jax.ShapeDtypeStruct((numel,), np.float32)}
+    planner = Planner(fab, max_chunks=4)
+    plan = planner.plan(shapes)
+    sched = plan.sections[0].schedule
+    assert sched is not None
+
+    # a fixed rack pool shared by two CN streams: capacity loss is a
+    # shared-infrastructure event, and it only binds when the survivors'
+    # combined demand exceeds what is left — a solo stream's ~1-lane
+    # instantaneous demand would shrug off most of the pool dying
+    rack = lambda: NicPool(lanes=fab.pool_lanes)
+    tenants = lambda s: [Tenant("cn0", s, rounds=ROUNDS),
+                         Tenant("cn1", s, rounds=ROUNDS)]
+    healthy = simulate(fab, tenants(sched), pool=rack())
+    yield ("faults/train/healthy", healthy.makespan * 1e6,
+           "baseline_2cn_rack")
+
+    # kill all but half a lane of the eth pool one round in; survivors
+    # re-waterfill at the next event boundary
+    lost = fab.pool_lanes - 0.5
+    t_fail = healthy.makespan / ROUNDS
+    faults = [lane_down(t_fail, lanes=lost)]
+    deg = simulate(fab, tenants(sched), pool=rack(), failures=faults)
+    slowdown = deg.makespan / healthy.makespan
+    assert slowdown > 1.0 + 1e-6, \
+        f"lane death did not bind: {slowdown}"
+    yield ("faults/train/lane_down", deg.makespan * 1e6,
+           f"slowdown={slowdown:.2f}x_capacity="
+           f"{fab.pool_lanes - lost:.1f}of{fab.pool_lanes:.0f}lanes")
+
+    # elastic replan: same shapes on the degraded spec; the diff names
+    # the knob flips (path_split onto the surviving cxl route)
+    new_plan, diff = planner.replan(fab.degrade(pool_lanes=lost), shapes,
+                                    old_plan=plan,
+                                    reason=f"lane_down(-{lost:.1f} lanes)")
+    new_sched = new_plan.sections[0].schedule
+    assert new_sched is not None
+    assert diff.changed, "replan on a degraded fabric changed nothing"
+    rep = simulate(fab, tenants(new_sched), pool=rack(), failures=faults)
+    assert rep.makespan < deg.makespan - 1e-12, \
+        (rep.makespan, deg.makespan)
+    recovered = (deg.makespan - rep.makespan) \
+        / max(deg.makespan - healthy.makespan, 1e-30)
+    yield ("faults/train/replanned", rep.makespan * 1e6,
+           f"recovers={recovered:.0%}_of_degradation"
+           f"_diff={len(diff.deltas)}knob(s)")
+
+
+def _mem_rows(smoke: bool):
+    nbytes = SMOKE_NBYTES if smoke else NBYTES
+    numel = nbytes // 4
+    # expanders sized so POOL staging is the binding resource (4 x
+    # 1.5 GB/s = 6 GB/s deliverable vs the 5 GB/s wire): losing one
+    # drops deliverable to 4.5 GB/s, below the wire, and the stream
+    # turns memory-bound for the rest of the run
+    mem = MemPoolSpec.build(local_bw=100e9, local_channels=2,
+                            device_bw=1.5e9, devices=4,
+                            device_latency=2e-6)
+    fab = as_fabric(paper_prototype_topology()).with_mem(mem)
+    cfg = SyncConfig("hier_striped", chunks=4, pipeline=False)
+    sched = build_schedule(fab, cfg, (numel,)).with_staging("pool")
+    cm = CostModel(fab)
+
+    healthy = simulate(fab, [Tenant("t0", sched, rounds=ROUNDS)], cost=cm)
+    t_fail = healthy.makespan / ROUNDS
+    deg = simulate(fab, [Tenant("t0", sched, rounds=ROUNDS)], cost=cm,
+                   failures=[device_down(t_fail, "cxl3")])
+    slowdown = deg.makespan / healthy.makespan
+    assert slowdown > 1.0 + 1e-6, \
+        f"expander death did not bind: {slowdown}"
+    yield ("faults/mem/device_down", deg.makespan * 1e6,
+           f"slowdown={slowdown:.2f}x_3of4_expanders")
+
+
+def _serve_rows(smoke: bool):
+    # local import: the fleet figure's fabric/operating point, reused so
+    # the serve-side fault rows degrade the SAME rack the fleet figure
+    # characterizes
+    from benchmarks.fig_fleet import fleet_cfg, serving_fabric
+
+    fab = serving_fabric().with_paths(cxl_shortcut_path(lanes=2.0))
+    wl = WorkloadConfig(sessions=12 if smoke else 16, rate=200.0, seed=7)
+    sessions = generate_sessions(wl)
+
+    healthy = simulate_fleet(fab, sessions, fleet_cfg())
+    yield ("faults/serve/healthy", healthy.sim.makespan * 1e6,
+           f"goodput={healthy.goodput_tok_s:.0f}tok/s"
+           f"_met={healthy.met_frac:.0%}")
+
+    faults = [lane_down(healthy.sim.makespan * 0.05, lanes=3.0)]
+    deg = simulate_fleet(fab, sessions, fleet_cfg(), failures=faults)
+    assert deg.goodput_tok_s < healthy.goodput_tok_s, \
+        (deg.goodput_tok_s, healthy.goodput_tok_s)
+    yield ("faults/serve/lane_down", deg.sim.makespan * 1e6,
+           f"goodput={deg.goodput_tok_s:.0f}tok/s"
+           f"_met={deg.met_frac:.0%}")
+
+    rep = simulate_fleet(
+        fab, sessions, fleet_cfg(prefill_path_split=(("cxl", 0.75),)),
+        failures=faults)
+    assert rep.goodput_tok_s > deg.goodput_tok_s, \
+        (rep.goodput_tok_s, deg.goodput_tok_s)
+    recovered = (rep.goodput_tok_s - deg.goodput_tok_s) \
+        / max(healthy.goodput_tok_s - deg.goodput_tok_s, 1e-30)
+    yield ("faults/serve/replanned", rep.sim.makespan * 1e6,
+           f"goodput={rep.goodput_tok_s:.0f}tok/s"
+           f"_met={rep.met_frac:.0%}_recovers={recovered:.0%}")
+
+
+def run(smoke: bool = False):
+    yield from _train_rows(smoke)
+    yield from _mem_rows(smoke)
+    yield from _serve_rows(smoke)
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(smoke=True):
+        print(f"{name},{us:.3f},{derived}")

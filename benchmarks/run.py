@@ -15,8 +15,11 @@ fig_mempool_scaling, fig_multipath — which asserts per-path sim-vs-price
 parity — fig_skew — which asserts the skew-aware plan's double-digit
 Zipf win and skewed sim==price parity — fig9_apps, whose wordcount
 and cell C MoE-dispatch rows go through the NIC/memory-pool simulator —
-and fig_fleet, which replays an open-loop serving workload through the
-pools and asserts solo sim==price parity plus the SLO-priority p99 cut)
+fig_fleet, which replays an open-loop serving workload through the
+pools and asserts solo sim==price parity plus the SLO-priority p99 cut,
+and fig_faults — which injects mid-run lane/expander deaths, asserts
+the degradation binds and that ``Planner.replan``'s rerouted schedules
+recover it, and exercises the ``degraded`` audit contract class)
 at tiny payload sizes — the CI sanity job (the workflow uploads the CSV
 as an artifact and fails on ERROR rows).
 
@@ -49,20 +52,21 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                            fig12_nic_scaling, fig13_timesharing, fig_fleet,
-                            fig_mempool_scaling, fig_multipath, fig_ntier,
-                            fig_overlap, fig_pool_contention, fig_skew,
-                            roofline, table4_breakdown)
+                            fig12_nic_scaling, fig13_timesharing, fig_faults,
+                            fig_fleet, fig_mempool_scaling, fig_multipath,
+                            fig_ntier, fig_overlap, fig_pool_contention,
+                            fig_skew, roofline, table4_breakdown)
     from repro.obs.metrics import MetricsLogger, git_sha
     if args.smoke:
         modules = [fig_ntier, fig_overlap, fig9_apps, fig13_timesharing,
                    fig_pool_contention, fig_mempool_scaling, fig_multipath,
-                   fig_skew, fig_fleet]
+                   fig_skew, fig_fleet, fig_faults]
     else:
         modules = [fig2_ring_allreduce, fig9_apps, fig11_passbyref,
-                   fig12_nic_scaling, fig13_timesharing, fig_fleet,
-                   fig_mempool_scaling, fig_multipath, fig_ntier, fig_overlap,
-                   fig_pool_contention, fig_skew, table4_breakdown, roofline]
+                   fig12_nic_scaling, fig13_timesharing, fig_faults,
+                   fig_fleet, fig_mempool_scaling, fig_multipath, fig_ntier,
+                   fig_overlap, fig_pool_contention, fig_skew,
+                   table4_breakdown, roofline]
 
     tracing = args.trace_dir is not None
     if tracing:

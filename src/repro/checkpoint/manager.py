@@ -44,9 +44,22 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         os.makedirs(root, exist_ok=True)
+        self._sweep_orphans()
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending: Optional[Future] = None
         self._lock = threading.Lock()
+
+    def _sweep_orphans(self) -> None:
+        """Remove ``.tmp-step_*`` dirs (and a stale ``.LATEST.tmp``) left
+        by a crash mid-save.  Nothing references them — the atomic
+        ``os.replace`` never ran — so a restarting manager reclaims the
+        space instead of letting dead trees accumulate per crash."""
+        for d in os.listdir(self.root):
+            if d.startswith(".tmp-step_"):
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+        tmp_latest = os.path.join(self.root, ".LATEST.tmp")
+        if os.path.exists(tmp_latest):
+            os.remove(tmp_latest)
 
     # ---- save ----------------------------------------------------------------
     def save(self, step: int, trees: Dict[str, Any],
@@ -87,19 +100,61 @@ class CheckpointManager:
 
         self.wait()
         if self.async_save and not blocking:
-            self._pending = self._pool.submit(write)
+            with self._lock:
+                self._pending = self._pool.submit(write)
         else:
             write()
 
     def wait(self) -> None:
         with self._lock:
-            if self._pending is not None:
+            if self._pending is None:
+                return
+            try:
                 self._pending.result()
+            finally:
+                # clear even when the write failed — a sticky pending
+                # future would re-raise the same exception from every
+                # later save()/wait() and block checkpointing forever
                 self._pending = None
 
+    def close(self, wait: bool = True) -> None:
+        """Drain the pending write (re-raising its failure) and shut the
+        worker thread down.  The manager is unusable afterwards."""
+        try:
+            if wait:
+                self.wait()
+        finally:
+            self._pool.shutdown(wait=wait)
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.close()
+        else:
+            try:
+                self.close()
+            except Exception:
+                pass  # don't mask the exception already unwinding
+        return False
+
     def _gc(self) -> None:
+        if self.keep <= 0:
+            return
+        # Never delete the step LATEST points at: with a small `keep`
+        # and out-of-order saves the pointer's target need not be among
+        # the keep newest dirs, and deleting it would break restore().
+        latest = None
+        try:
+            with open(os.path.join(self.root, "LATEST")) as f:
+                latest = f.read().strip()
+        except OSError:
+            pass
         steps = sorted(d for d in os.listdir(self.root) if d.startswith("step_"))
-        for d in steps[:-self.keep] if self.keep > 0 else []:
+        for d in steps[:-self.keep]:
+            if d == latest:
+                continue
             shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
 
     # ---- restore ---------------------------------------------------------------
@@ -125,7 +180,10 @@ class CheckpointManager:
             if step is None:
                 return None
         cdir = os.path.join(self.root, f"step_{step:08d}")
-        with open(os.path.join(cdir, "index.json")) as f:
+        index_path = os.path.join(cdir, "index.json")
+        if not os.path.exists(index_path):
+            return None  # explicit step missing: "None if no checkpoint"
+        with open(index_path) as f:
             index = json.load(f)
         out: Dict[str, Any] = {"__step__": index["step"],
                                "__metadata__": index["metadata"]}

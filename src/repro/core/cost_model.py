@@ -616,29 +616,29 @@ class CostModel:
         pool_floor = pool_drain_s + max(pool_tails.values(), default=0.0) \
             if multipath and pool_drain_s > 0.0 else 0.0
         if schedule.pipelined and schedule.chunks > 1:
-            if multipath:
-                # exact replay of the simulator's per-route chained
-                # pipeline: fast stage j finishes at F_j = (j+1)*fast/C
-                # (stages are chained), sub-flow j starts at
-                # max(F_j, its route's previous sub-flow) and its route's
-                # chain tail advances by its charge; the makespan is the
-                # latest tail (or the last fast stage).  The single-route
-                # closed form below is NOT exact here because the routes
-                # drain concurrently against a shared fast stage sequence.
-                C = max(len(slow_seq), 1)
-                fast_per = fast_s / C
-                F = 0.0
-                tails: Dict[str, float] = {}
-                for p, secs in slow_seq:
-                    F += fast_per
-                    tails[p] = max(F, tails.get(p, 0.0)) + secs
-                total = max([fast_s] + list(tails.values()))
-                if pool_floor > 0.0:
-                    # first sub-flow cannot stage before its fast stage
-                    total = max(total, fast_per + pool_floor)
-            else:
-                total = max(slow_s, fast_s) \
-                    + min(slow_s / schedule.chunks, fast_s / schedule.chunks)
+            # exact replay of the simulator's per-route chained pipeline:
+            # fast stage j finishes at F_j = (j+1)*fast/C (stages are
+            # chained), sub-flow j starts at max(F_j, its route's
+            # previous sub-flow) and its route's chain tail advances by
+            # its charge; the makespan is the latest tail (or the last
+            # fast stage).  Single-route schedules price through the SAME
+            # recurrence: the old closed form (max(slow, fast) + one
+            # overhang chunk) used the MEAN slow charge for the overhang,
+            # overpricing fast-dominated pipelines — the overhang is the
+            # LAST sub-flow, which carries only a per-chunk latency while
+            # the first carries the full ring latency — and a price above
+            # the replay breaks the audit's lower-bound contract.
+            C = max(len(slow_seq), 1)
+            fast_per = fast_s / C
+            F = 0.0
+            tails: Dict[str, float] = {}
+            for p, secs in slow_seq:
+                F += fast_per
+                tails[p] = max(F, tails.get(p, 0.0)) + secs
+            total = max([fast_s] + list(tails.values()))
+            if pool_floor > 0.0:
+                # first sub-flow cannot stage before its fast stage
+                total = max(total, fast_per + pool_floor)
         else:
             # concurrent routes: the slow phase ends when the SLOWEST
             # route's chain drains (single-route: the plain sum, bitwise

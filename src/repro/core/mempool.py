@@ -50,7 +50,7 @@ and its memory work have drained, i.e. its effective rate is
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 _EPS = 1e-12
@@ -331,6 +331,9 @@ class MemPool:
         self._next_id = 0
         self.segments: List[MemSegment] = []
         self.grants: List[MemGrant] = []
+        # capacity trace: initial aggregate bw plus one step per drop_device()
+        self.capacity_steps: List[Tuple[float, float]] = [(0.0, spec.total_bw)]
+        self.dropped_devices: List[Tuple[float, MemDevice]] = []
 
     @staticmethod
     def _slack(f: _MemFlow) -> float:
@@ -415,6 +418,45 @@ class MemPool:
     @property
     def active(self) -> int:
         return len(self._flows)
+
+    # ---- failure / re-grant semantics --------------------------------------
+    def drop_device(self, name: str, now: float = 0.0) -> None:
+        """Remove device ``name`` from the pool at ``now`` (an expander
+        dies).  Every surviving flow is RE-STRIPED against the reduced
+        spec: its placement, rate cap and per-device draw are recomputed
+        exactly as at submit time (placements are index tuples into
+        ``spec.devices``, so they are re-mapped, not filtered).
+        Remaining bytes and the latency tail already assigned are
+        conserved.  The capacity step is appended to
+        :attr:`capacity_steps` so traces/audits can render and classify
+        the degraded interval."""
+        devs = tuple(d for d in self.spec.devices if d.name != name)
+        if len(devs) == len(self.spec.devices):
+            raise KeyError(
+                f"no device named {name!r} in "
+                f"{[d.name for d in self.spec.devices]}")
+        if not devs:
+            raise ValueError("cannot drop the last memory device")
+        dead = next(d for d in self.spec.devices if d.name == name)
+        self.spec = replace(self.spec, devices=devs)
+        self.dropped_devices.append((float(now), dead))
+        self.capacity_steps.append((float(now), self.spec.total_bw))
+        for f in self._flows.values():
+            f.devices = self.spec.placement(f.req.staging)
+            deliver = self.spec.deliverable_bw(f.req.staging)
+            f.cap = deliver if f.req.cap_bw is None \
+                else min(float(f.req.cap_bw), deliver)
+
+    def cancel(self, fid: int) -> None:
+        """Withdraw an active flow without recording a grant (its tenant
+        departed mid-run).  Unknown / completed ids are ignored."""
+        self._flows.pop(fid, None)
+
+    def degraded_since(self) -> Optional[float]:
+        """Time of the first capacity loss (None = never degraded)."""
+        if len(self.capacity_steps) > 1:
+            return self.capacity_steps[1][0]
+        return None
 
     # ---- standalone loop ---------------------------------------------------
     def run(self, requests: Iterable[MemRequest]) -> List[MemGrant]:

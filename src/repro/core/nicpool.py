@@ -41,7 +41,7 @@ pool as a co-simulated resource via ``submit`` / ``earliest_finish`` /
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 _EPS = 1e-12
@@ -175,6 +175,9 @@ class NicPool:
         self._next_id = 0
         self.segments: List[PoolSegment] = []
         self.grants: List[LaneGrant] = []
+        # capacity trace: the initial capacity plus one step per shrink()
+        self.capacity_steps: List[Tuple[float, float]] = [(0.0, self.lanes)]
+        self.failed: List[LaneRequest] = []
 
     # ---- constructors ------------------------------------------------------
     @classmethod
@@ -321,6 +324,65 @@ class NicPool:
     @property
     def active(self) -> int:
         return len(self._flows)
+
+    # ---- failure / re-grant semantics --------------------------------------
+    def shrink(self, lanes: float, now: float = 0.0,
+               policy: str = "rehome") -> List[int]:
+        """Remove ``lanes`` lanes of capacity at ``now`` — the
+        highest-indexed lanes die (a failed NIC drops off the top of the
+        pool).  Re-grant semantics:
+
+          * **fluid** flows simply re-waterfill against the reduced
+            capacity at the next event boundary (:meth:`allocation`
+            reads ``self.lanes`` fresh every call);
+          * completed work is conserved — each survivor's ``remaining``
+            is untouched and already-recorded segments keep their old
+            grants;
+          * **pinned** flows whose lane died follow ``policy``:
+            ``"rehome"`` moves lane ``k`` to ``k mod ceil(new)``,
+            ``"fail"`` drops the flow (its request is recorded in
+            :attr:`failed`, its id returned so the caller can fail the
+            owning tenant).
+
+        The capacity step is appended to :attr:`capacity_steps` so
+        ``obs.trace`` / ``obs.audit`` can render and classify the
+        degraded interval.
+        """
+        if policy not in ("rehome", "fail"):
+            raise ValueError(f"unknown dead-lane policy: {policy!r}")
+        if lanes <= 0:
+            raise ValueError(f"must shrink by a positive lane count: {lanes}")
+        new = self.lanes - float(lanes)
+        if new <= 0:
+            raise ValueError(
+                f"cannot shrink a {self.lanes}-lane pool by {lanes}: "
+                "at least one lane must survive")
+        self.lanes = new
+        self.capacity_steps.append((float(now), new))
+        ncap = max(int(math.ceil(new)), 1)
+        dropped: List[int] = []
+        for fid, f in list(self._flows.items()):
+            lane = f.req.lane
+            if lane is None or lane < new:
+                continue  # fluid, or its lane still has capacity
+            if policy == "rehome":
+                f.req = replace(f.req, lane=int(lane) % ncap)
+            else:
+                self.failed.append(f.req)
+                dropped.append(fid)
+                del self._flows[fid]
+        return dropped
+
+    def cancel(self, fid: int) -> None:
+        """Withdraw an active flow without recording a grant (its tenant
+        departed mid-run).  Unknown / completed ids are ignored."""
+        self._flows.pop(fid, None)
+
+    def degraded_since(self) -> Optional[float]:
+        """Time of the first capacity loss (None = never degraded)."""
+        if len(self.capacity_steps) > 1:
+            return self.capacity_steps[1][0]
+        return None
 
     # ---- standalone loop ---------------------------------------------------
     def run(self, requests: Iterable[LaneRequest]) -> List[LaneGrant]:

@@ -217,6 +217,10 @@ class Planner:
         self.cost = CostModel(topo)
         self.stagger_lanes = stagger_lanes
         self.nic_pool = NicPool.from_fabric(self.fabric)
+        # remembered so for_fabric() can tell a mesh-truth override apart
+        # from fabric-derived defaults (even when they happen to coincide)
+        self._explicit_fast_sizes = (fast_axis_sizes is not None
+                                     or fast_axis_size is not None)
         if fast_axis_sizes is not None:
             self.fast_sizes: Tuple[int, ...] = tuple(int(s) for s in fast_axis_sizes)
         elif fast_axis_size is not None:
@@ -233,6 +237,43 @@ class Planner:
         self.keep_report = keep_report
         # last plan's / plan_all_to_all's candidate audit (keep_report only)
         self.report: Optional[PlanReport] = None
+
+    def for_fabric(self, topo: Union[TwoTierTopology, FabricSpec]
+                   ) -> "Planner":
+        """A new planner with THIS planner's knobs on a different fabric
+        (typically ``FabricSpec.degrade(...)``'s output).  A
+        ``fast_axis_sizes`` mesh override carries over verbatim; when the
+        sizes were just the old fabric's defaults, the new planner
+        re-derives them from the new fabric instead — a degraded tier
+        (``tier_members``) then shrinks the plan's fast axes too."""
+        sizes = self.fast_sizes if self._explicit_fast_sizes else None
+        return Planner(topo,
+                       fast_axis_sizes=sizes,
+                       codec=self.codec,
+                       max_chunks=self.max_chunks,
+                       min_chunk_numel=self.min_chunk_numel,
+                       strategy=self.strategy,
+                       pipeline=self.pipeline,
+                       mid_codec=self.mid_codec,
+                       stagger_lanes=self.stagger_lanes,
+                       keep_report=self.keep_report)
+
+    def replan(self, degraded: Union[TwoTierTopology, FabricSpec],
+               shapes: Dict[str, jax.ShapeDtypeStruct], *,
+               old_plan: Optional[SyncPlan] = None,
+               reason: str = "fabric degraded",
+               **plan_kw):
+        """Re-plan ``shapes`` on a ``degraded`` fabric and explain the
+        change: returns ``(new_plan, diff)`` where ``diff`` is a
+        :class:`repro.obs.plan_report.PlanDiff` naming every per-section
+        knob the degradation flipped (depth/chunks/staging/path split/...)
+        against ``old_plan`` (typically this planner's plan for the same
+        shapes on the healthy fabric; None diffs against nothing and
+        reports every section as added).  ``plan_kw`` forwards to
+        :meth:`plan` (``bucket_bytes``, ``avoid_dims``, ...)."""
+        from repro.obs.plan_report import diff_plans
+        new_plan = self.for_fabric(degraded).plan(shapes, **plan_kw)
+        return new_plan, diff_plans(old_plan, new_plan, reason=reason)
 
     @property
     def n_fast_tiers(self) -> int:

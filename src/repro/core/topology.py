@@ -17,7 +17,7 @@ paper uses an interconnect:network ratio of 10:1).
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.core.mempool import MemPoolSpec
 
@@ -313,6 +313,62 @@ class FabricSpec:
         """Fabric with the memory-pool description attached (None
         detaches it — back to the infinite-memory model)."""
         return replace(self, mem=mem)
+
+    # ---- failure / degradation ---------------------------------------------
+    def degrade(self, *, pool_lanes: float = 0.0,
+                mem_devices: Sequence[str] = (),
+                tier_members: Optional[Mapping[str, int]] = None
+                ) -> "FabricSpec":
+        """The POST-FAILURE fabric — the static twin of the runtime
+        failure events (``NicPool.shrink`` / ``MemPool.drop_device`` /
+        ``tenant_down``), so the planner can replan on what actually
+        survives instead of the healthy spec.
+
+          * ``pool_lanes`` removes that many lanes from the slowest
+            tier's consolidated pool (:attr:`pool_lanes` drops by
+            exactly that amount; the per-chip ``Tier.lanes`` scales
+            down to match);
+          * ``mem_devices`` drops the named devices from ``mem``;
+          * ``tier_members`` maps a tier name or axis to how many
+            members departed (the tier's ``size`` shrinks; at least one
+            member must survive).
+        """
+        tiers = list(self.tiers)
+        if pool_lanes:
+            if self.depth <= 1:
+                raise ValueError("fabric has no slow tier to take lanes from")
+            total = self.pool_lanes
+            if pool_lanes >= total:
+                raise ValueError(
+                    f"cannot drop {pool_lanes} of {total} pool lanes: "
+                    "at least one lane must survive")
+            per = (total - float(pool_lanes)) / self.members_below(self.depth - 1)
+            tiers[-1] = replace(tiers[-1], lanes=per)
+        for key, k in (tier_members or {}).items():
+            for i, t in enumerate(tiers):
+                if t.name == key or t.axis == key:
+                    if int(k) >= t.size:
+                        raise ValueError(
+                            f"tier {t.name}: cannot lose {k} of {t.size} "
+                            "members")
+                    tiers[i] = replace(t, size=t.size - int(k))
+                    break
+            else:
+                raise KeyError(f"no tier named {key!r} in "
+                               f"{[t.name for t in self.tiers]}")
+        mem = self.mem
+        if mem_devices:
+            if mem is None:
+                raise ValueError("fabric has no memory model to degrade")
+            names = set(mem_devices)
+            unknown = names - {d.name for d in mem.devices}
+            if unknown:
+                raise KeyError(f"unknown memory devices: {sorted(unknown)}")
+            devs = tuple(d for d in mem.devices if d.name not in names)
+            if not devs:
+                raise ValueError("cannot drop every memory device")
+            mem = replace(mem, devices=devs)
+        return replace(self, tiers=tuple(tiers), mem=mem)
 
     def describe(self) -> str:
         parts = [f"{t.name}[{t.axis}]x{t.size}@{t.bw/1e9:.1f}GB/s"

@@ -26,9 +26,22 @@ class** and judged against its expectation:
                  lane assignment, memory-pool queueing and simulated
                  admission delay have no closed-form upper bound worth
                  promising).
+  ``degraded``   fluid tenants whose run overlaps a capacity loss (a
+                 ``lane_down`` shrink recorded in the pool's
+                 ``capacity_steps``): price-on-degraded-spec bounds the
+                 sim — price(lo grant at the PRE-FAILURE capacity) ≤
+                 sim ≤ price(max-min guarantee on the POST-FAILURE
+                 capacity), 1% slack.  When MEMORY capacity degraded
+                 (``device_down``) the upper bound is dropped (lower
+                 bound only): the spec the mem price would use is the
+                 already-degraded one, unsound for pre-failure legs.
   ``compute``    schedule-less tenants: compute phases against their
                  configured duration (exact, or ≥ under memory
                  contention).
+
+Tenants killed mid-run (``SimResult.failed_tenants``) get NO
+expectation — their replay was truncated at the failure, so neither
+bound is defined.
 
 :func:`auto_expectations` derives the class and the lo/hi estimates for
 every tenant of a :class:`~repro.sim.fabric_sim.SimObservation`
@@ -228,11 +241,16 @@ def compare(result: SimResult,
                 lo = lo_by[id(leg)]
                 hi = hi_by.get(id(leg))
                 leg_cls = cls
-                if cls in ("bracketed",) and hi is None:
-                    hi = lo  # fast legs ride the private engine
-                elif cls not in ("bracketed", "bounded"):
+                if cls in ("bracketed", "degraded") and hi is None:
+                    # bracketed: fast legs ride the private engine;
+                    # degraded without an upper estimate (memory
+                    # degradation) stays lower-bound only
+                    hi = lo if exp.hi is not None else \
+                        (lo if cls == "bracketed" else None)
+                elif cls not in ("bracketed", "bounded", "degraded"):
                     hi = lo
-                if not is_pool and cls in ("bracketed", "bounded"):
+                if not is_pool and cls in ("bracketed", "bounded",
+                                           "degraded"):
                     # engine legs are never contended: exact both ways
                     leg_cls, hi = "exact", lo
             else:
@@ -247,7 +265,9 @@ def compare(result: SimResult,
             hi_t: Optional[float] = None if cls == "bounded" else lo_t
         else:
             lo_t = compute_meas + rounds * exp.lo.total_s
-            hi_t = None if cls == "bounded" else \
+            no_hi = cls == "bounded" or (cls == "degraded"
+                                         and exp.hi is None)
+            hi_t = None if no_hi else \
                 compute_meas + rounds * (exp.hi or exp.lo).total_s
         rows.append(_judge(name, "total", 0,
                            cls if exp.lo is not None or cls == "bounded"
@@ -329,6 +349,25 @@ def auto_expectations(obs: SimObservation) -> Dict[str, Expectation]:
     def pool_of(path: str):
         return result.pool if path == "eth" else result.path_pools[path]
 
+    def pool_cap0(path: str) -> float:
+        # the PRE-FAILURE capacity: a lower-bound price must clamp at
+        # what the pool offered at its largest (legs before a shrink ran
+        # on the healthy pool and may beat a degraded-capacity price)
+        pl = pool_of(path)
+        steps = getattr(pl, "capacity_steps", None)
+        return steps[0][1] if steps else pl.lanes
+
+    # degraded lane groups: first capacity-loss time per group (from the
+    # shrink steps the arbiters record), plus memory degradation
+    deg_path_t: Dict[str, float] = {}
+    for p in ("eth",) + tuple(result.path_pools):
+        t0 = getattr(pool_of(p), "degraded_since", lambda: None)()
+        if t0 is not None:
+            deg_path_t[p] = t0
+    mem_deg = result.mem is not None \
+        and getattr(result.mem, "degraded_since", lambda: None)() is not None
+    failed = set(result.failed_tenants)
+
     # per-tenant busy intervals: pool flows per lane group, plus memory-
     # demanding activity (slow flows always; compute when it draws bw)
     slow_iv: Dict[str, Dict[str, List[Tuple[float, float]]]] = {}
@@ -377,11 +416,13 @@ def auto_expectations(obs: SimObservation) -> Dict[str, Expectation]:
             cap = tn.max_lanes
         if tn.pin_lanes:
             cap = min(cap, 1.0)  # a pinned flow owns at most its lane
-        return min(cap, pool_of(path).lanes)
+        return min(cap, pool_cap0(path))
 
     out: Dict[str, Expectation] = {}
     for tn in obs.tenants:
         name = tn.name
+        if name in failed:
+            continue  # truncated replay: neither bound is defined
         # an `after` tenant's total is measured from its own `start` but
         # it really began at its predecessor's finish — the queueing
         # delay is simulated, not priced, so only the lower bound holds
@@ -404,28 +445,50 @@ def auto_expectations(obs: SimObservation) -> Dict[str, Expectation]:
                 return tn.max_lanes
             return nominal_of(p)
 
-        unsafe_mem = mem_arg is not None and any(
-            granted_lo[p] < sim_cap(p) - 1e-12 for p in granted_lo)
+        # memory degradation poisons the mem price for this run: the
+        # spec the price would use is the already-shrunk one, which
+        # overstates pre-failure legs — drop the mem term from lo
+        mem_degraded = mem_deg and name in mem_iv
+        unsafe_mem = mem_arg is not None and (mem_degraded or any(
+            granted_lo[p] < sim_cap(p) - 1e-12 for p in granted_lo))
         lo = cm.from_schedule(
             tn.schedule, granted_lanes=granted_lo or None,
             mem=None if unsafe_mem else mem_arg)
         hot = contended_paths(name)
+        # lane groups that lost capacity during the run: every tenant on
+        # them brackets against the POST-FAILURE pool (the loosest upper
+        # bound — sound whether the tenant ran before or after the step)
+        deg_paths = [p for p in paths if p in deg_path_t]
         pinned_near = any(
             cfg[other].pin_lanes
             for p in hot for other in slow_iv if p in slow_iv[other])
+
+        def hi_guarantee(groups: Sequence[str]) -> Dict[str, float]:
+            granted_hi = dict(granted_lo)
+            for p in groups:
+                mine = tn.priority * fanout(tn, p)
+                total = sum(cfg[o].priority * fanout(cfg[o], p)
+                            for o in slow_iv if p in slow_iv[o])
+                # pool_of(p).lanes is the FINAL (post-shrink) capacity
+                share = pool_of(p).lanes * mine / max(total, 1e-30)
+                granted_hi[p] = min(share, lo_cap(tn, p))
+            return granted_hi
+
         if queued or tn.pin_lanes or (hot and pinned_near):
             out[name] = Expectation(lo, cls="bounded")
         elif mem_contended(name):
             out[name] = Expectation(lo, cls="bounded")
+        elif mem_degraded:
+            out[name] = Expectation(lo, cls="degraded")
+        elif deg_paths:
+            hi = cm.from_schedule(
+                tn.schedule,
+                granted_lanes=hi_guarantee(sorted(set(deg_paths) | set(hot))),
+                mem=mem_arg)
+            out[name] = Expectation(lo, hi, cls="degraded")
         elif hot:
-            granted_hi = dict(granted_lo)
-            for p in hot:
-                mine = tn.priority * fanout(tn, p)
-                total = sum(cfg[o].priority * fanout(cfg[o], p)
-                            for o in slow_iv if p in slow_iv[o])
-                share = pool_of(p).lanes * mine / max(total, 1e-30)
-                granted_hi[p] = min(share, lo_cap(tn, p))
-            hi = cm.from_schedule(tn.schedule, granted_lanes=granted_hi,
+            hi = cm.from_schedule(tn.schedule,
+                                  granted_lanes=hi_guarantee(hot),
                                   mem=mem_arg)
             out[name] = Expectation(lo, hi, cls="bracketed")
         else:

@@ -120,3 +120,92 @@ class PlanReport:
                              f"c={c.chunks} stg={c.staging} "
                              f"split={c.path_split}: {c.rejected}")
         return "\n".join(lines)
+
+
+# ---- plan-to-plan diffs (elastic replanning) -------------------------------
+
+# the per-section knobs a replan can flip; ``staging`` lives on the built
+# CommSchedule rather than the SyncConfig, so it is diffed separately
+_SYNC_KNOBS = ("strategy", "scatter_depth", "chunks", "codec", "mid_codec",
+               "pipeline", "path_split")
+
+
+@dataclass(frozen=True)
+class PlanDelta:
+    """One knob that changed for one section between two plans."""
+
+    section: str
+    knob: str
+    before: object
+    after: object
+
+    def describe(self) -> str:
+        return f"{self.section}: {self.knob} {self.before!r} -> {self.after!r}"
+
+
+@dataclass(frozen=True)
+class PlanDiff:
+    """What a replan changed and why.
+
+    ``deltas`` lists every per-section knob flip between sections the two
+    plans share (matched by name); ``added``/``removed`` name sections only
+    one plan has (shapes appeared/vanished across the replan).  ``reason``
+    is the caller's cause — typically the fabric degradation that forced
+    the replan.  Totals are the plans' own ``est_total_s`` so the diff
+    states the priced cost of the degradation alongside the knob story."""
+
+    reason: str = ""
+    deltas: Tuple[PlanDelta, ...] = ()
+    added: Tuple[str, ...] = ()
+    removed: Tuple[str, ...] = ()
+    before_total_s: float = 0.0
+    after_total_s: float = 0.0
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.deltas or self.added or self.removed)
+
+    def describe(self) -> str:
+        head = (f"PlanDiff ({self.reason}): " if self.reason
+                else "PlanDiff: ")
+        head += (f"{len(self.deltas)} knob change(s), "
+                 f"est {self.before_total_s * 1e3:.3f} ms -> "
+                 f"{self.after_total_s * 1e3:.3f} ms")
+        lines = [head]
+        lines += [f"  {d.describe()}" for d in self.deltas]
+        lines += [f"  + section {n}" for n in self.added]
+        lines += [f"  - section {n}" for n in self.removed]
+        if not self.changed:
+            lines.append("  (no per-section changes — totals repriced only)")
+        return "\n".join(lines)
+
+
+def _section_knobs(section) -> dict:
+    knobs = {k: getattr(section.sync, k) for k in _SYNC_KNOBS}
+    knobs["staging"] = getattr(section.schedule, "staging", None)
+    return knobs
+
+
+def diff_plans(old, new, reason: str = "") -> PlanDiff:
+    """Diff two ``SyncPlan``s (duck-typed: anything with ``.sections``
+    carrying ``.name``/``.sync``/``.schedule`` and ``.est_total_s``)
+    section-by-section.  ``old`` may be None — every section of ``new``
+    then reports as added, which lets callers treat "first plan on a
+    degraded fabric" and "replan from a known-good plan" uniformly."""
+    new_secs = {s.name: s for s in new.sections}
+    old_secs = {} if old is None else {s.name: s for s in old.sections}
+    deltas: List[PlanDelta] = []
+    for name in sorted(set(old_secs) & set(new_secs)):
+        before, after = _section_knobs(old_secs[name]), \
+            _section_knobs(new_secs[name])
+        for knob in (*_SYNC_KNOBS, "staging"):
+            if before[knob] != after[knob]:
+                deltas.append(PlanDelta(name, knob, before[knob],
+                                        after[knob]))
+    return PlanDiff(
+        reason=reason,
+        deltas=tuple(deltas),
+        added=tuple(sorted(set(new_secs) - set(old_secs))),
+        removed=tuple(sorted(set(old_secs) - set(new_secs))),
+        before_total_s=0.0 if old is None else float(old.est_total_s),
+        after_total_s=float(new.est_total_s))

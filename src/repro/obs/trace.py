@@ -215,6 +215,19 @@ def to_chrome_trace(result: SimResult,
                            "name": track, "ts": t * _US,
                            "args": {series: v}})
         ctid += 1
+        # a pool that LOST capacity mid-run gets a second counter track
+        # stepping through its capacity_steps, so the degraded interval
+        # is visible right under the granted-allocation curve
+        steps = getattr(pool, "capacity_steps", None)
+        if steps and len(steps) > 1:
+            cap_track = track.replace("lanes", "capacity (lanes)") \
+                .replace("bw (B/s)", "capacity (B/s)")
+            events.append(_meta(PID_POOLS, ctid, cap_track))
+            for t, v in steps:
+                events.append({"ph": "C", "pid": PID_POOLS, "tid": ctid,
+                               "name": cap_track, "ts": t * _US,
+                               "args": {series: v}})
+            ctid += 1
 
     return {"traceEvents": events, "displayTimeUnit": "ms"}
 

@@ -49,7 +49,8 @@ from repro.core.schedule import (CommSchedule, SyncConfig, build_all_to_all,
 from repro.core.topology import FabricSpec, as_fabric
 from repro.core.nicpool import NicPool
 from repro.serve_sim.workload import Session
-from repro.sim.fabric_sim import SimResult, Tenant, simulate
+from repro.sim.fabric_sim import (FailureEvent, SimResult, Tenant,
+                                  simulate)
 from repro.utils.stats import percentile
 
 _ELEM = 4  # float32 wire elements
@@ -83,7 +84,14 @@ class FleetConfig:
     This matters: ``simulate``'s default pool SCALES with the tenant
     count (every tenant contributes its lanes — right for the θ-CN rack
     figures, wrong for serving, where the rack's NICs are fixed no
-    matter how many sessions arrive)."""
+    matter how many sessions arrive).
+
+    ``prefill_path_split`` routes that fraction of every prefill's slow
+    sub-flows over the named alternative routes (``SyncConfig
+    .path_split`` semantics; the fabric must declare them).  The elastic
+    knob for a degraded fleet: after a mid-run lane death shrinks the
+    Ethernet pool, replanned schedules shift prefill burst traffic onto
+    the surviving routes."""
 
     slots: int = 8
     bytes_per_token: float = 4096.0
@@ -97,6 +105,7 @@ class FleetConfig:
     pipeline: bool = True
     priority_lanes: bool = True
     pool_lanes: Optional[float] = None
+    prefill_path_split: Optional[Tuple[Tuple[str, float], ...]] = None
 
     def __post_init__(self):
         if self.slots < 1:
@@ -233,10 +242,12 @@ def prefill_schedule(fab: FabricSpec, s: Session,
         n_total = _moe_members(fab)
         row = _round_up(int(math.ceil(numel / n_total)), cfg.chunks)
         sc = SyncConfig(strategy="hier_striped", chunks=cfg.chunks,
-                        pipeline=False)
+                        pipeline=False,
+                        path_split=cfg.prefill_path_split)
         return build_all_to_all(fab, sc, (n_total, row))
     sc = SyncConfig(strategy="hier_striped", chunks=cfg.chunks,
-                    pipeline=cfg.pipeline)
+                    pipeline=cfg.pipeline,
+                    path_split=cfg.prefill_path_split)
     n = _round_up(numel, max(fab.n_fast, 1) * cfg.chunks)
     return build_schedule(fab, sc, (n,))
 
@@ -364,12 +375,17 @@ def _session_metrics(plan: SessionPlan, sim: SimResult) -> SessionMetrics:
 
 def simulate_fleet(fabric, sessions: Sequence[Session],
                    cfg: Optional[FleetConfig] = None,
-                   cost: Optional[CostModel] = None) -> FleetResult:
+                   cost: Optional[CostModel] = None,
+                   failures: Sequence[FailureEvent] = ()) -> FleetResult:
     """Plan the fleet and replay it through the pools: ONE ``simulate``
     call carries every session's prefill and decode tenant, so
     admission, phase chaining, SLO priorities and KV staging all
     arbitrate against each other — and the run flows through
-    ``repro.obs`` (capture/audit/trace) like any other simulate call."""
+    ``repro.obs`` (capture/audit/trace) like any other simulate call.
+    ``failures`` injects mid-run capacity losses (``lane_down``/
+    ``device_down``) into that one call — the schedules are still the
+    HEALTHY-fabric plans, so the result shows what the degradation costs
+    an un-replanned fleet."""
     cfg = cfg or FleetConfig()
     fab = as_fabric(fabric)
     cm = cost or CostModel(fab)
@@ -380,7 +396,8 @@ def simulate_fleet(fabric, sessions: Sequence[Session],
         tenants.append(p.decode)
     lanes = cfg.pool_lanes if cfg.pool_lanes is not None \
         else (fab.pool_lanes if fab.depth > 1 else 1.0)
-    sim = simulate(fab, tenants, pool=NicPool(lanes=lanes), cost=cm)
+    sim = simulate(fab, tenants, pool=NicPool(lanes=lanes), cost=cm,
+                   failures=failures)
     metrics = tuple(_session_metrics(p, sim)
                     for p in sorted(plans, key=lambda p: p.session.uid))
     return FleetResult(sim=sim, plans=tuple(plans), sessions=metrics)

@@ -166,6 +166,47 @@ class LegEvent:
 
 
 @dataclass(frozen=True)
+class FailureEvent:
+    """One fault injected into the replay, applied at time ``t``:
+
+      * ``"lane_down"`` — ``lanes`` lanes of lane group ``name`` die
+        (:meth:`NicPool.shrink`); pinned flows on a dead lane follow
+        ``policy`` ("rehome" moves them to a surviving lane, "fail"
+        kills the owning tenant);
+      * ``"device_down"`` — memory device ``name`` (a CXL expander)
+        drops (:meth:`MemPool.drop_device`); surviving flows re-stripe;
+      * ``"tenant_down"`` — tenant ``name`` (a CN) departs: its active
+        flows are cancelled, its unfinished tasks abandoned at ``t``,
+        and its ``after`` successors unblock (the slot frees).
+
+    Use the :func:`lane_down` / :func:`device_down` /
+    :func:`tenant_down` constructors; ``simulate(failures=[...])``
+    consumes the stream in time order."""
+
+    t: float
+    kind: str  # "lane_down" | "device_down" | "tenant_down"
+    name: str = "eth"  # lane group / memory device / tenant, per kind
+    lanes: float = 1.0
+    policy: str = "rehome"  # dead-lane pinned flows: "rehome" | "fail"
+
+
+def lane_down(t: float, lanes: float = 1.0, path: str = "eth",
+              policy: str = "rehome") -> FailureEvent:
+    """``lanes`` lanes of lane group ``path`` die at ``t``."""
+    return FailureEvent(float(t), "lane_down", path, float(lanes), policy)
+
+
+def device_down(t: float, name: str) -> FailureEvent:
+    """Memory device ``name`` (a CXL expander) dies at ``t``."""
+    return FailureEvent(float(t), "device_down", name)
+
+
+def tenant_down(t: float, name: str) -> FailureEvent:
+    """Tenant ``name`` (a CN) departs at ``t``."""
+    return FailureEvent(float(t), "tenant_down", name)
+
+
+@dataclass(frozen=True)
 class SimResult:
     makespan: float
     events: Tuple[LegEvent, ...]
@@ -175,6 +216,10 @@ class SimResult:
     # one extra arbitrated lane group per declared PathSpec route
     # (name -> its NicPool); empty when the fabric declares no paths
     path_pools: Dict[str, NicPool] = field(default_factory=dict)
+    # tenants killed mid-run by a failure (tenant_down, or a dead pinned
+    # lane under policy="fail"); their `finish` is the time of death and
+    # their remaining tasks never ran
+    failed_tenants: Tuple[str, ...] = ()
 
     def tenant_events(self, name: str) -> Tuple[LegEvent, ...]:
         return tuple(e for e in self.events if e.tenant == name)
@@ -261,6 +306,7 @@ class SimObservation:
     tenants: Tuple[Tenant, ...]
     cost: CostModel
     result: SimResult
+    failures: Tuple[FailureEvent, ...] = ()
 
 
 _observers: List[Callable[[SimObservation], None]] = []
@@ -514,8 +560,16 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
              pool: Optional[NicPool] = None,
              cost: Optional[CostModel] = None,
              mem: Optional[MemPool] = None,
-             path_pools: Optional[Dict[str, NicPool]] = None) -> SimResult:
+             path_pools: Optional[Dict[str, NicPool]] = None,
+             failures: Sequence[FailureEvent] = ()) -> SimResult:
     """Replay ``tenants`` concurrently against ``pool`` (and ``mem``).
+
+    ``failures`` injects :class:`FailureEvent` faults: each is applied at
+    the first event boundary at or after its time — lane groups shrink
+    (surviving flows re-waterfill, completed work conserved), memory
+    devices drop (flows re-stripe), tenants depart (flows cancelled,
+    ``after`` successors unblock).  The pools' ``capacity_steps`` record
+    every step so observability can render the degraded intervals.
 
     ``pool`` defaults to ``NicPool.from_fabric(fabric, len(tenants))`` —
     every tenant contributes its nominal lanes (the rack pool).  Each
@@ -558,13 +612,17 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         progs.append(_compile(tn, est, fab, pool.lanes, mem_spec,
                               path_pool_lanes=ppl))
 
-    if mem is not None:
+    faults = sorted((failures or ()), key=lambda f: f.t)
+    has_dev_faults = any(f.kind == "device_down" for f in faults)
+    if mem is not None and not has_dev_faults:
         # ∞-bandwidth fast path: when EVERY device is faster than the sum
         # of all flow caps and no placement carries a latency tail, the
         # memory pool can never bind any flow — drop the memory flows
         # entirely so the event stream (and every completion time) is
         # BITWISE the no-memory run's (interior mem events would otherwise
-        # perturb the NIC flows' piecewise fp arithmetic by an ulp)
+        # perturb the NIC flows' piecewise fp arithmetic by an ulp).
+        # A pending device_down disables the shortcut: the post-failure
+        # pool may well bind, so memory must stay co-simulated.
         mtasks = [task for prog in progs for task in prog if not task.mem_done]
         total_cap = sum(task.mem_cap for task in mtasks)
         tails = max((mem_spec.staging_latency(task.staging)
@@ -615,6 +673,25 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
 
     engine_task: List[Optional[int]] = [None] * len(tenants)  # running local
     pools = {"eth": pool, **path_pools}  # lane group name -> arbiter
+    for f in faults:
+        if f.kind == "lane_down":
+            if f.name not in pools:
+                raise ValueError(f"lane_down on unknown lane group "
+                                 f"{f.name!r}: have {sorted(pools)}")
+        elif f.kind == "device_down":
+            if mem is None:
+                raise ValueError(
+                    "device_down on a run with no co-simulated memory pool")
+            if all(d.name != f.name for d in mem.spec.devices):
+                raise ValueError(
+                    f"device_down on unknown device {f.name!r}: have "
+                    f"{[d.name for d in mem.spec.devices]}")
+        elif f.kind == "tenant_down":
+            if f.name not in idx_of:
+                raise ValueError(
+                    f"tenant_down on unknown tenant {f.name!r}")
+        else:
+            raise ValueError(f"unknown failure kind {f.kind!r}")
     # flow ids are per-pool counters, so key by (lane group, flow id)
     flows: Dict[Tuple[str, int], Tuple[int, int]] = {}
     mem_flows: Dict[int, Tuple[int, int]] = {}  # mem flow id -> (tenant, task)
@@ -664,7 +741,37 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         finish[tenants[ti].name] = max(finish[tenants[ti].name], now)
         engine_task[ti] = None
 
+    failed_tenants: List[str] = []
+
+    def kill_tenant(ti: int, now: float) -> None:
+        """Abandon a departed tenant at ``now``: cancel its active pool
+        and memory flows (no grants recorded), truncate its running
+        intervals in the event stream, and zero its open-task count so
+        ``after`` successors unblock (the slot frees)."""
+        name = tenants[ti].name
+        if name in failed_tenants:
+            return
+        failed_tenants.append(name)
+        for key in [k for k, v in flows.items() if v[0] == ti]:
+            pools[key[0]].cancel(key[1])
+            del flows[key]
+        if mem is not None:
+            for mfid in [k for k, v in mem_flows.items() if v[0] == ti]:
+                mem.cancel(mfid)
+                del mem_flows[mfid]
+        for task in progs[ti]:
+            if task.state == "running":
+                # truncated interval: shows WHERE the tenant died
+                events.append(LegEvent(name, task.legs[0][0], task.start,
+                                       now, 0.0, task.round, task.chunk))
+            task.state = "done"
+        remaining[ti] = 0
+        waiting[ti] = []
+        engine_task[ti] = None
+        finish[name] = max(finish[name], now)
+
     t = min((tn.start for tn in tenants), default=0.0)
+    fault_i = 0
     guard = 0
     total_tasks = sum(len(p) for p in progs)
     while True:
@@ -704,11 +811,18 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                         nom = fab.slowest.lanes if fab.depth > 1 else 1.0
                         maxl = tn.max_lanes * share \
                             if tn.max_lanes is not None else None
+                    lane = task.lane
+                    if lane is not None:
+                        # a lane index planned before a shrink may sit
+                        # off the end of the degraded pool — re-home it
+                        # at submit time like shrink() re-homes live ones
+                        lane = int(lane) % max(
+                            int(math.ceil(pools[task.path].lanes)), 1)
                     task.flow_id = pools[task.path].submit(LaneRequest(
                         tenant=tn.name, work=task.work, arrive=t,
                         lanes=nom * share, max_lanes=maxl,
                         priority=tn.priority,
-                        lane=task.lane, tag=task.legs[0][0]), t)
+                        lane=lane, tag=task.legs[0][0]), t)
                     flows[(task.path, task.flow_id)] = (ti, idx)
                     submit_mem(ti, idx, task, t)
                 else:
@@ -739,6 +853,10 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
         for tn in tenants:  # tenants not yet started
             if tn.start > t + _EPS:
                 t_next = min(t_next, tn.start)
+        if fault_i < len(faults):
+            # a pending failure is an event source of its own (it can
+            # unblock `after` successors or change every grant)
+            t_next = min(t_next, max(faults[fault_i].t, t))
         if not math.isfinite(t_next):
             stuck = [(tenants[ti].name, i, task.kind, task.state)
                      for ti, prog in enumerate(progs)
@@ -774,12 +892,24 @@ def simulate(fabric: Union[FabricSpec, object], tenants: Sequence[Tenant],
                     complete_local_task(ti, idx, min(task.finish, t_next))
                 # else: the engine stays blocked until the memory flow
                 # drains — compute stretched by memory contention
+        # ---- apply failures due at this boundary ---------------------------
+        while fault_i < len(faults) and faults[fault_i].t <= t_next + _EPS:
+            f = faults[fault_i]
+            fault_i += 1
+            if f.kind == "lane_down":
+                for fid in pools[f.name].shrink(f.lanes, t_next, f.policy):
+                    ti, _idx = flows.pop((f.name, fid))
+                    kill_tenant(ti, t_next)  # dead pinned lane, policy=fail
+            elif f.kind == "device_down":
+                mem.drop_device(f.name, t_next)
+            else:  # tenant_down
+                kill_tenant(idx_of[f.name], t_next)
         t = t_next
 
     events.sort(key=lambda e: (e.start, e.finish, e.tenant))
     makespan = max(finish.values(), default=0.0)
     result = SimResult(makespan, tuple(events), finish, pool, result_mem,
-                       path_pools)
+                       path_pools, tuple(failed_tenants))
     for fn in list(_observers):
-        fn(SimObservation(fab, tuple(tenants), cm, result))
+        fn(SimObservation(fab, tuple(tenants), cm, result, tuple(faults)))
     return result

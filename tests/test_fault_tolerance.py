@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import run_multi_device
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_smoke_arch
 from repro.models import ModelSettings, build_model
@@ -92,6 +93,172 @@ def test_preemption_checkpoints_and_exits(tmp_path):
     assert tr.ckpt.latest_step() == 1  # emergency checkpoint written
 
 
+def test_failed_async_save_is_not_sticky(tmp_path, monkeypatch):
+    """A failed async write surfaces ONCE at wait() and is then cleared;
+    checkpointing continues.  Pre-fix the pending future stayed set and
+    every later save()/wait() re-raised the same exception forever."""
+    import repro.checkpoint.manager as M
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    real_save = M.np.save
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(M.np, "save", boom)
+    mgr.save(1, {"params": {"a": jnp.ones((2,))}})
+    with pytest.raises(OSError):
+        mgr.wait()
+    monkeypatch.setattr(M.np, "save", real_save)
+    # second wait() must NOT re-raise the drained failure
+    mgr.wait()
+    mgr.save(2, {"params": {"a": jnp.ones((2,))}}, blocking=True)
+    assert mgr.latest_step() == 2
+    mgr.close()
+
+
+def test_init_sweeps_orphaned_tmp_dirs(tmp_path):
+    """``.tmp-step_*`` trees and a stale ``.LATEST.tmp`` left by a crash
+    mid-save are reclaimed when a manager restarts on the directory."""
+    orphan = tmp_path / ".tmp-step_00000007" / "arrays"
+    orphan.mkdir(parents=True)
+    (orphan / "junk.npy").write_bytes(b"x")
+    (tmp_path / ".LATEST.tmp").write_text("step_00000007")
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    left = os.listdir(tmp_path)
+    assert not [d for d in left if d.startswith(".tmp")]
+    assert ".LATEST.tmp" not in left
+    mgr.save(1, {"params": {"a": jnp.ones((2,))}}, blocking=True)
+    assert mgr.restore()["__step__"] == 1
+
+
+def test_gc_preserves_latest_target_on_out_of_order_saves(tmp_path):
+    """keep=1 with an out-of-order save (elastic rollback): LATEST points
+    at step 5 while step 10's dir sorts newer — GC must not delete the
+    step the pointer names."""
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    tree = {"a": jnp.ones((2,))}
+    mgr.save(10, {"params": tree}, blocking=True)
+    mgr.save(5, {"params": tree}, blocking=True)
+    assert mgr.latest_step() == 5
+    out = mgr.restore()
+    assert out is not None and out["__step__"] == 5
+
+
+def test_restore_missing_explicit_step_returns_none(tmp_path):
+    """``restore(step=N)`` for a step that was never saved keeps the
+    docstring's contract ("None if no checkpoint") instead of raising."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(2, {"params": {"a": jnp.ones((2,))}}, blocking=True)
+    assert mgr.restore(step=99) is None
+    assert mgr.restore(step=2)["__step__"] == 2
+
+
+def test_close_and_context_manager(tmp_path, monkeypatch):
+    """close()/with drain the pending write and shut the worker down;
+    a failed pending write re-raises from close() but the executor still
+    shuts down."""
+    import repro.checkpoint.manager as M
+    with CheckpointManager(str(tmp_path / "a"), keep=2) as mgr:
+        mgr.save(3, {"params": {"a": jnp.arange(4.0)}})
+    assert mgr._pool._shutdown
+    assert mgr.latest_step() == 3
+
+    mgr2 = CheckpointManager(str(tmp_path / "b"), keep=2)
+
+    def boom(*a, **k):
+        raise OSError("boom")
+
+    monkeypatch.setattr(M.np, "save", boom)
+    mgr2.save(1, {"params": {"a": jnp.ones((2,))}})
+    with pytest.raises(OSError):
+        mgr2.close()
+    assert mgr2._pool._shutdown
+
+
+# ---------------------------------------------------------------------------
+# arbiter re-grant semantics (NicPool.shrink / MemPool.drop_device)
+# ---------------------------------------------------------------------------
+
+
+def test_nicpool_shrink_conserves_completed_work():
+    """Mid-run capacity loss re-waterfills the survivors; no lane-seconds
+    of already-completed work are lost or double-counted."""
+    from repro.core.nicpool import LaneRequest, NicPool
+    pool = NicPool(lanes=4.0)
+    f0 = pool.submit(LaneRequest("a", work=4.0, lanes=4.0), now=0.0)
+    f1 = pool.submit(LaneRequest("b", work=4.0, lanes=4.0), now=0.0)
+    assert pool.allocation() == {f0: 2.0, f1: 2.0}
+    done = pool.advance(0.0, 1.0)  # each drains 2.0 of 4.0 lane-seconds
+    assert done == []
+    dropped = pool.shrink(3.0, now=1.0)
+    assert dropped == []  # fluid flows survive a shrink
+    assert pool.lanes == 1.0
+    assert pool.capacity_steps == [(0.0, 4.0), (1.0, 1.0)]
+    assert pool.degraded_since() == 1.0
+    assert pool.allocation() == {f0: 0.5, f1: 0.5}
+    done = pool.advance(1.0, pool.earliest_finish(1.0))
+    assert sorted(fid for fid, _ in done) == [f0, f1]
+    assert all(g.finish == pytest.approx(5.0) for _, g in done)
+    assert pool.busy_lane_seconds() == pytest.approx(8.0)
+
+
+def test_nicpool_shrink_pinned_lane_policy():
+    """A pinned flow whose lane died is re-homed (modulo the surviving
+    lane count) under ``rehome`` and dropped into ``failed`` under
+    ``fail``; pinned flows on surviving lanes are untouched."""
+    from repro.core.nicpool import LaneRequest, NicPool
+    pool = NicPool(lanes=4.0)
+    keep = pool.submit(LaneRequest("a", work=1.0, lane=0), now=0.0)
+    dead = pool.submit(LaneRequest("b", work=1.0, lane=3), now=0.0)
+    assert pool.shrink(2.0, now=0.0, policy="rehome") == []
+    assert pool._flows[keep].req.lane == 0
+    assert pool._flows[dead].req.lane == 1  # 3 mod ceil(2.0)
+    assert pool.failed == []
+
+    pool = NicPool(lanes=4.0)
+    keep = pool.submit(LaneRequest("a", work=1.0, lane=0), now=0.0)
+    dead = pool.submit(LaneRequest("b", work=1.0, lane=3), now=0.0)
+    assert pool.shrink(2.0, now=0.0, policy="fail") == [dead]
+    assert keep in pool._flows and dead not in pool._flows
+    assert [r.tenant for r in pool.failed] == ["b"]
+
+    with pytest.raises(ValueError):
+        pool.shrink(2.0, policy="explode")
+    with pytest.raises(ValueError):
+        pool.shrink(99.0)  # at least one lane must survive
+
+
+def test_mempool_drop_device_restripes_surviving_flows():
+    """Losing an expander re-maps in-flight pool flows onto the surviving
+    stripe at the next event boundary; remaining bytes are conserved."""
+    from repro.core.mempool import MemPoolSpec, MemRequest
+    spec = MemPoolSpec.build(local_bw=100e9, local_channels=2,
+                             device_bw=50e9, devices=2,
+                             device_latency=0.0, policy="expander_only")
+    pool = spec.make_pool()
+    fid = pool.submit(MemRequest("a", nbytes=400e9, staging="pool"),
+                      now=0.0)
+    assert pool.allocation()[fid] == pytest.approx(100e9)  # 2 x 50 GB/s
+    pool.advance(0.0, 1.0)  # 100 GB drained, 300 GB left
+    pool.drop_device("cxl1", now=1.0)
+    assert [d.name for d in pool.spec.devices] == ["dram0", "dram1", "cxl0"]
+    assert pool.dropped_devices[0][1].name == "cxl1"
+    assert pool.capacity_steps[-1] == (1.0, pool.spec.total_bw)
+    assert pool.degraded_since() == 1.0
+    assert pool.allocation()[fid] == pytest.approx(50e9)  # re-striped
+    done = pool.advance(1.0, pool.earliest_finish(1.0))
+    assert [f for f, _ in done] == [fid]
+    assert done[0][1].finish == pytest.approx(7.0)  # 300 GB at 50 GB/s
+    assert pool.busy_bytes() == pytest.approx(400e9)
+
+    with pytest.raises(KeyError):
+        pool.drop_device("cxl9")
+    pool2 = MemPoolSpec.build(local_bw=100e9, local_channels=1,
+                              device_bw=50e9, devices=0).make_pool()
+    with pytest.raises(ValueError):
+        pool2.drop_device("dram0")  # cannot drop the last device
+
+
 def test_elastic_restore_different_mesh(tmp_path):
     """Save ZeRO-sharded state, restore onto a different-size mesh."""
     model = build_model(get_smoke_arch("qwen3-1.7b"), ST)
@@ -107,3 +274,18 @@ def test_elastic_restore_different_mesh(tmp_path):
     params, opt, step = restored
     assert step == 4
     assert np.isfinite(np.asarray(jax.tree.leaves(params)[0])).all()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end elastic restart (subprocess with 8 fake devices)
+# ---------------------------------------------------------------------------
+
+
+def test_multi_device_elastic_restart_battery():
+    """Pod member dies mid-run -> restart on the shrunk mesh restores the
+    checkpoint and replays the reference loss curve; a serve-side lane
+    death is then partially recovered by replanned schedules."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    out = run_multi_device(os.path.join(here, "batteries",
+                                        "faults_battery.py"))
+    assert "ALL OK" in out
